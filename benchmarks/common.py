@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: hardware table (paper Table 1 + TPU v5e),
+timing helpers, kernel byte/flop accounting."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+# Paper Table 1 (+ TPU v5e target): name -> (peak double-precision-equiv
+# GFLOP/s, STREAM-triad-like achievable GB/s).  For v5e we use bf16 peak
+# and the HBM spec since that is the machine model of the roofline report.
+PROCESSORS = {
+    "ivy-bridge": (259e9, 49.8e9),
+    "haswell": (154e9, 40.9e9),
+    "interlagos": (141e9, 32.4e9),
+    "xeon-phi": (1.01e12, 158.4e9),
+    "k20x": (1.31e12, 181.3e9),
+    "k40": (1.43e12, 192.1e9),
+    "tpu-v5e": (197e12, 819e9),
+}
+
+
+def ridge_point(proc: str) -> float:
+    peak, bw = PROCESSORS[proc]
+    return peak / bw
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (blocks on all outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn(*args)))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn(*args)))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# Per-site traffic model of each application kernel (fp32 bytes, reads +
+# writes, the counting convention of the paper's Fig. 4 OI numbers).
+LUDWIG_KERNELS = {
+    # name: (bytes_per_site, flops_per_site)
+    "collision": ((19 + 3 + 19) * 4, 300),          # f in, force in, f out
+    "propagation": ((19 + 19) * 4, 0),
+    "order_parameter_gradients": ((5 + 15 + 5) * 4, 5 * 8),
+    "chemical_stress": ((5 + 5 + 15 + 9) * 4, 450),
+    "lc_update": ((5 + 5 + 9 + 5 + 5) * 4, 400),
+    "advection": ((5 + 3 + 5) * 4, 60),
+}
+
+MILC_KERNELS = {
+    "shift": ((24 + 24) * 4 * 8, 0),                 # 8 directions
+    "extract_and_mult": ((192 + 144 + 24) * 4, 1320),
+    "scalar_mult_add": ((24 + 24 + 24) * 4, 48),
+}

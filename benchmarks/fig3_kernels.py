@@ -1,0 +1,106 @@
+"""Paper Fig. 3: full-application time decomposed per kernel, plus the
+layout x VVL configuration sweep (bottom panel).
+
+On this CPU-only container the *measured* numbers are the jnp-engine wall
+times (the paper's "host C" build); per-processor *modelled* times come
+from each kernel's bytes-per-site over the Table-1 STREAM bandwidths —
+valid because every kernel is memory-bound (C4), which is exactly how the
+paper reasons about Fig. 3/4.  The layout sweep measures the real effect
+of AoS/SoA/AoSoA on the measurable engine (C2) and reports the structural
+penalty of each layout for the pallas/TPU target.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import SOA, AOS, TargetConfig, aosoa
+from repro.apps.ludwig import LudwigConfig, init_state
+from repro.apps.ludwig.driver import step_timed
+from repro.apps.milc import MilcConfig, init_problem
+from repro.apps.milc.cg import make_wilson_op, axpy, dot
+from .common import LUDWIG_KERNELS, MILC_KERNELS, PROCESSORS, csv_row, time_fn
+
+
+def ludwig_decomposition(lattice=(16, 16, 16), steps=3):
+    cfg = LudwigConfig(lattice=lattice, target=TargetConfig("jnp"))
+    state = init_state(cfg, seed=0)
+    state, _ = step_timed(state, cfg)  # warmup/compile
+    acc = {}
+    for _ in range(steps):
+        state, t = step_timed(state, cfg)
+        for k, v in t.items():
+            acc[k] = acc.get(k, 0.0) + v / steps
+    nsites = int(np.prod(lattice))
+    rows = []
+    for k, t in acc.items():
+        model = ""
+        if k in LUDWIG_KERNELS:
+            bps, fps = LUDWIG_KERNELS[k]
+            models = {p: nsites * bps / bw
+                      for p, (_, bw) in PROCESSORS.items()}
+            model = ";".join(f"t_{p}_us={v*1e6:.1f}" for p, v in models.items())
+        rows.append(csv_row(f"fig3_ludwig/{k}", t * 1e6, model))
+    return rows
+
+
+def milc_decomposition(lattice=(8, 8, 8, 8)):
+    cfg = MilcConfig(lattice=lattice, kappa=0.1)
+    u, b = init_problem(cfg, seed=0)
+    apply_m, _, _ = make_wilson_op(u, cfg.kappa, cfg.target)
+    nsites = int(np.prod(lattice))
+    rows = []
+    t_mv = time_fn(jax.jit(lambda x: apply_m(x).data), b)
+    rows.append(csv_row("fig3_milc/wilson_matvec", t_mv * 1e6,
+                        f"sites={nsites}"))
+    t_ax = time_fn(jax.jit(lambda x: axpy(0.5, x, x, cfg.target).data), b)
+    rows.append(csv_row("fig3_milc/scalar_mult_add", t_ax * 1e6, ""))
+    t_dot = time_fn(jax.jit(lambda x: dot(x, x, cfg.target)), b)
+    rows.append(csv_row("fig3_milc/dot_reduction", t_dot * 1e6, ""))
+    for k, (bps, fps) in MILC_KERNELS.items():
+        models = {p: nsites * bps / bw for p, (_, bw) in PROCESSORS.items()}
+        rows.append(csv_row(
+            f"fig3_milc_model/{k}", 0.0,
+            ";".join(f"t_{p}_us={v*1e6:.1f}" for p, v in models.items())))
+    return rows
+
+
+def layout_vvl_sweep(lattice=(16, 16, 16), steps=3):
+    """Bottom panel of Fig. 3: configuration sweep on the measurable engine.
+    The pallas/TPU structural penalties (tile padding waste) are reported
+    as derived columns."""
+    rows = []
+    base = LudwigConfig(lattice=lattice, target=TargetConfig("jnp"))
+    for lay in [SOA, AOS, aosoa(64), aosoa(128)]:
+        cfg = dataclasses.replace(base, layout=lay)
+        state = init_state(cfg, seed=0)
+        state, _ = step_timed(state, cfg)
+        tot = 0.0
+        for _ in range(steps):
+            state, t = step_timed(state, cfg)
+            tot += sum(t.values()) / steps
+        # structural TPU penalty: minor-dim padding of one (comp, VVL) tile
+        if lay.kind.value == "aos":
+            pad = 128 / 19  # 19-comp minor dim padded to 128 lanes
+        else:
+            pad = 1.0
+        rows.append(csv_row(f"fig3_sweep/layout={lay.name}", tot * 1e6,
+                            f"tpu_tile_pad_factor={pad:.2f}"))
+    return rows
+
+
+def main():
+    rows = []
+    rows += ludwig_decomposition()
+    rows += milc_decomposition()
+    rows += layout_vvl_sweep()
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

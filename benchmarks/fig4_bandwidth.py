@@ -1,0 +1,79 @@
+"""Paper Fig. 4: per-kernel operational intensity + achieved-bandwidth
+fraction.
+
+The wall-clock %STREAM measurement of the paper is replaced by its
+structural equivalent on the compiled artifact: for each kernel we lower
+the jnp engine on CPU and compare *useful* bytes (the minimal per-site
+traffic of the algorithm, the counting the paper uses for OI) against the
+HLO "bytes accessed" — useful/HLO = the fraction of achievable bandwidth
+the compiled kernel can reach, assuming the memory system runs at STREAM
+rate on the rest.  OIs land in the paper's 0.4-2.2 F/B band, far below
+every Table-1 ridge point (C4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Field, SOA, TargetConfig
+from repro.apps.ludwig import LudwigConfig, init_state
+from repro.apps.ludwig import driver as LD
+from repro.apps.ludwig import gradients as LG
+from repro.kernels.lb_collision import ref as lbref
+from repro.kernels.lb_propagation import ref as propref
+from repro.kernels.wilson_dslash import ref as wdref
+from .common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
+
+
+def _cost(fn, *args):
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    return float(c.get("flops", 0)), float(c.get("bytes accessed", 0))
+
+
+def main():
+    rows = []
+    lat = (16, 16, 16)
+    nsites = int(np.prod(lat))
+    f19 = jax.ShapeDtypeStruct((19, *lat), jnp.float32)
+    f5 = jax.ShapeDtypeStruct((5, *lat), jnp.float32)
+    f3 = jax.ShapeDtypeStruct((3, *lat), jnp.float32)
+    flat = lambda s: jax.ShapeDtypeStruct((s.shape[0], nsites), jnp.float32)
+
+    cases = {
+        "collision": (lambda f, g: lbref.collide_ref(f, g, 0.8),
+                      (flat(f19), flat(f3)), LUDWIG_KERNELS["collision"]),
+        "propagation": (propref.propagate_ref, (f19,),
+                        LUDWIG_KERNELS["propagation"]),
+        "order_parameter_gradients": (
+            lambda q: (LG.grad_central(q), LG.laplacian(q)), (f5,),
+            LUDWIG_KERNELS["order_parameter_gradients"]),
+        "advection": (LG.advective_divergence, (f5, f3),
+                      LUDWIG_KERNELS["advection"]),
+    }
+    lat4 = (8, 8, 8, 8)
+    nsites4 = int(np.prod(lat4))
+    psi = jax.ShapeDtypeStruct((24, *lat4), jnp.float32)
+    u = jax.ShapeDtypeStruct((72, *lat4), jnp.float32)
+    cases["wilson_dslash"] = (wdref.dslash_ref, (psi, u),
+                              MILC_KERNELS["extract_and_mult"])
+
+    for name, (fn, args, (bps, fps)) in cases.items():
+        n = nsites4 if name == "wilson_dslash" else nsites
+        flops, hbytes = _cost(fn, *args)
+        useful = n * bps
+        oi = fps / bps if bps else 0.0
+        frac = useful / max(hbytes, 1.0)
+        rows.append(csv_row(
+            f"fig4/{name}", 0.0,
+            f"oi_fpb={oi:.2f};useful_bytes={useful};hlo_bytes={hbytes:.0f};"
+            f"achievable_bw_frac={frac:.2f};"
+            f"memory_bound_on_v5e={oi < ridge_point('tpu-v5e')}"))
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

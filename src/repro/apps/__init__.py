@@ -1,0 +1,2 @@
+"""The paper's two applications, rebuilt on targetDP-JAX: Ludwig (lattice
+Boltzmann + liquid crystal) and MILC (Wilson-Dirac CG)."""

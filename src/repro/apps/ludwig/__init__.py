@@ -1,0 +1,1 @@
+from .driver import LudwigConfig, LudwigState, init_state, step, step_timed  # noqa: F401

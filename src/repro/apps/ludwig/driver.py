@@ -1,0 +1,345 @@
+"""Ludwig liquid-crystal timestep driver (single-shard and sharded).
+
+One timestep reproduces the paper's kernel decomposition (§2.1.1):
+
+  Order Parameter Gradients   stencil   grad Q, lap Q
+  (molecular field)           local     H(Q, lap Q)
+  Chemical Stress             local     sigma(Q, H, grad Q)
+  (force)                     stencil   F = div sigma
+  Collision                   local     BGK + Guo forcing   [pallas kernel]
+  Propagation                 stencil   streaming           [pallas kernel]
+  Advection (+ Boundaries)    stencil   upwind div(u Q)
+  LC Update                   local     Beris-Edwards       [core.launch]
+
+Site-local stages run through core.target.launch so the engine (jnp vs
+pallas) and the data layout are pure configuration — the paper's central
+claim, which tests/test_ludwig.py asserts by running both engines step-
+for-step.
+
+The sharded form (`make_sharded_step`) wraps the same stage functions in
+jax.shard_map on a Domain: per step it halo-exchanges Q (width 2), the
+post-collision distributions (width 1) and the velocity field (width 1),
+then applies the identical periodic-roll stencils on the halo'd local
+arrays and crops — the dimension-by-dimension exchange makes the wrapped
+reads land in valid halo, the standard MPI decomposition of both papers'
+codes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Field, Layout, SOA, TargetConfig, launch, target_sum
+from repro.core import stencil as st
+from repro.kernels.lb_collision import collide
+from repro.kernels.lb_collision import ref as lbref
+from repro.kernels.lb_propagation import ops as prop_ops
+from repro.lattice import Domain
+from . import gradients as gr
+from . import lc
+
+SITE_DIMS = (1, 2, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class LudwigConfig:
+    lattice: Tuple[int, int, int] = (16, 16, 16)
+    tau: float = 0.8            # LB relaxation time; nu = cs2 (tau - 1/2)
+    a0: float = 0.01            # Landau-de Gennes bulk scale
+    gamma: float = 3.0          # effective temperature (>2.7: nematic)
+    kappa: float = 0.01         # elastic constant (one-constant approx.)
+    gamma_rot: float = 0.3     # rotational diffusion Gamma
+    xi: float = 0.7             # flow-aligning parameter
+    dt: float = 1.0
+    layout: Layout = SOA
+    target: TargetConfig = TargetConfig("jnp", vvl=128)
+
+
+@dataclasses.dataclass
+class LudwigState:
+    dist: Field   # (19,) distributions
+    q: Field      # (5,)  order parameter
+
+
+jax.tree_util.register_pytree_node(
+    LudwigState,
+    lambda s: ((s.dist, s.q), None),
+    lambda _, ch: LudwigState(dist=ch[0], q=ch[1]),
+)
+
+
+def init_state(cfg: LudwigConfig, seed: int = 0, q_amp: float = 1e-2) -> LudwigState:
+    rng = np.random.default_rng(seed)
+    nsites = int(np.prod(cfg.lattice))
+    rho = jnp.ones((nsites,), jnp.float32)
+    u = jnp.zeros((3, nsites), jnp.float32)
+    f0 = lbref.equilibrium(rho, u)
+    dist = Field.from_canonical("dist", f0, cfg.lattice, cfg.layout)
+    q0 = q_amp * rng.normal(size=(5, nsites)).astype(np.float32)
+    q = Field.from_canonical("q", jnp.asarray(q0), cfg.lattice, cfg.layout)
+    return LudwigState(dist=dist, q=q)
+
+
+# -- site-local kernel bodies wrapped for core.launch -------------------------
+
+def _mol_field_body(v, *, a0, gamma, kappa):
+    return {"h": lc.molecular_field_chunk(v["q"], v["lapq"], a0=a0, gamma=gamma, kappa=kappa)}
+
+
+def _stress_body(v, *, kappa, xi):
+    return {"sigma": lc.stress_chunk(v["q"], v["h"], v["dq"], kappa=kappa, xi=xi)}
+
+
+def _be_rhs_body(v, *, gamma_rot, xi):
+    return {"rhs": lc.beris_edwards_rhs_chunk(v["q"], v["h"], v["w"], gamma_rot=gamma_rot, xi=xi)}
+
+
+def _q_update_body(v, *, dt):
+    return {"q": lc.q_update_chunk(v["q"], v["rhs"], v["adv"], dt=dt)}
+
+
+def _moments_body(v):
+    rho, u = lbref.moments(v["dist"])
+    # half-force velocity correction (consistent with Guo forcing)
+    u = u + 0.5 * v["force"] / rho[None, :]
+    return {"rho": rho[None, :], "u": u}
+
+
+def _fed_body(v, *, a0, gamma, kappa):
+    return {"fed": lc.free_energy_density_chunk(v["q"], v["dq"], a0=a0, gamma=gamma, kappa=kappa)}
+
+
+def _mkfield(name: str, arr_nd: jnp.ndarray, cfg: LudwigConfig) -> Field:
+    return Field.from_canonical(name, arr_nd, tuple(arr_nd.shape[1:]), cfg.layout)
+
+
+# -- stage functions (single-shard periodic) ----------------------------------
+
+def stage_gradients(q_nd: jnp.ndarray):
+    """Order Parameter Gradients."""
+    return gr.grad_central(q_nd), gr.laplacian(q_nd)
+
+
+def stage_chemical_stress(state_q: Field, dq_nd, lapq_nd, cfg: LudwigConfig):
+    """molecular field + stress + force divergence."""
+    lapq = _mkfield("lapq", lapq_nd, cfg)
+    h = launch(
+        _mol_field_body,
+        {"q": state_q, "lapq": lapq},
+        {"h": 5},
+        config=cfg.target,
+        params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa),
+    )["h"]
+    dq = _mkfield("dq", dq_nd, cfg)
+    sigma = launch(
+        _stress_body,
+        {"q": state_q, "h": h, "dq": dq},
+        {"sigma": 9},
+        config=cfg.target,
+        params=dict(kappa=cfg.kappa, xi=cfg.xi),
+    )["sigma"]
+    force_nd = gr.divergence(sigma.canonical_nd())
+    return h, force_nd
+
+
+def stage_collision(dist: Field, force: Field, cfg: LudwigConfig) -> Field:
+    return collide(dist, force, tau=cfg.tau, config=cfg.target)
+
+
+def stage_propagation(dist: Field, cfg: LudwigConfig) -> Field:
+    return prop_ops.propagate(dist, config=cfg.target)
+
+
+def stage_hydrodynamics(dist: Field, force: Field, cfg: LudwigConfig):
+    out = launch(_moments_body, {"dist": dist, "force": force}, {"rho": 1, "u": 3},
+                 config=cfg.target)
+    return out["rho"], out["u"]
+
+
+def stage_advection(q_nd, u_nd):
+    """Advection (+ periodic boundaries: no correction term)."""
+    return gr.advective_divergence(q_nd, u_nd)
+
+
+def stage_lc_update(state_q: Field, h: Field, w_nd, adv_nd, cfg: LudwigConfig) -> Field:
+    w = _mkfield("w", w_nd, cfg)
+    rhs = launch(
+        _be_rhs_body,
+        {"q": state_q, "h": h, "w": w},
+        {"rhs": 5},
+        config=cfg.target,
+        params=dict(gamma_rot=cfg.gamma_rot, xi=cfg.xi),
+    )["rhs"]
+    adv = _mkfield("adv", adv_nd, cfg)
+    return launch(
+        _q_update_body,
+        {"q": state_q, "rhs": rhs, "adv": adv},
+        {"q": 5},
+        config=cfg.target,
+        params=dict(dt=cfg.dt),
+    )["q"]
+
+
+def _w_tensor(u_nd: jnp.ndarray) -> jnp.ndarray:
+    """W_ab = d u_a / d x_b as (9,) row-major from grad_central layout."""
+    g = gr.grad_central(u_nd)  # [d/dx u(3), d/dy u(3), d/dz u(3)] => g[b*3+a]
+    return jnp.stack([g[b * 3 + a] for a in range(3) for b in range(3)])
+
+
+def step(state: LudwigState, cfg: LudwigConfig) -> LudwigState:
+    """One full LC-LB timestep (single shard, periodic)."""
+    q_nd = state.q.canonical_nd()
+    dq_nd, lapq_nd = stage_gradients(q_nd)
+    h, force_nd = stage_chemical_stress(state.q, dq_nd, lapq_nd, cfg)
+    force = _mkfield("force", force_nd, cfg)
+
+    dist1 = stage_collision(state.dist, force, cfg)
+    dist2 = stage_propagation(dist1, cfg)
+
+    _, u = stage_hydrodynamics(state.dist, force, cfg)
+    u_nd = u.canonical_nd()
+    w_nd = _w_tensor(u_nd)
+    adv_nd = stage_advection(q_nd, u_nd)
+
+    q_new = stage_lc_update(state.q, h, w_nd, adv_nd, cfg)
+    return LudwigState(dist=dist2, q=q_new)
+
+
+def step_timed(state: LudwigState, cfg: LudwigConfig) -> Tuple[LudwigState, Dict[str, float]]:
+    """Unjitted per-kernel wall timings (benchmarks/fig3)."""
+    t: Dict[str, float] = {}
+
+    def timed(name, fn, *a):
+        t0 = time.perf_counter()
+        out = fn(*a)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        t[name] = time.perf_counter() - t0
+        return out
+
+    q_nd = state.q.canonical_nd()
+    dq_nd, lapq_nd = timed("order_parameter_gradients", stage_gradients, q_nd)
+    h, force_nd = timed(
+        "chemical_stress", stage_chemical_stress, state.q, dq_nd, lapq_nd, cfg
+    )
+    force = _mkfield("force", force_nd, cfg)
+    dist1 = timed("collision", stage_collision, state.dist, force, cfg)
+    dist2 = timed("propagation", stage_propagation, dist1, cfg)
+    _, u = stage_hydrodynamics(state.dist, force, cfg)
+    u_nd = u.canonical_nd()
+    w_nd = _w_tensor(u_nd)
+    adv_nd = timed("advection", stage_advection, q_nd, u_nd)
+    q_new = timed("lc_update", stage_lc_update, state.q, h, w_nd, adv_nd, cfg)
+    return LudwigState(dist=dist2, q=q_new), t
+
+
+# -- diagnostics ---------------------------------------------------------------
+
+def diagnostics(state: LudwigState, cfg: LudwigConfig) -> Dict[str, jnp.ndarray]:
+    """Total mass, momentum, free energy (targetDP reduction API)."""
+    mass = target_sum(state.dist, cfg.target).sum()
+    q_nd = state.q.canonical_nd()
+    dq_nd = gr.grad_central(q_nd)
+    dq = _mkfield("dq", dq_nd, cfg)
+    fed = launch(
+        _fed_body, {"q": state.q, "dq": dq}, {"fed": 1},
+        config=cfg.target,
+        params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa),
+    )["fed"]
+    free_energy = target_sum(fed, cfg.target)[0]
+    rho, u = lbref.moments(state.dist.canonical())
+    mom = jnp.sum(rho[None] * u, axis=1)
+    return {"mass": mass, "free_energy": free_energy, "momentum": mom}
+
+
+# -- sharded driver ------------------------------------------------------------
+
+def make_sharded_step(cfg: LudwigConfig, domain: Domain):
+    """Build a jitted shard_map step over canonical-nd global arrays.
+
+    Takes/returns (dist_nd (19, X, Y, Z), q_nd (5, X, Y, Z)) sharded per
+    ``domain.spec()``.  Inside: halo exchanges + the identical periodic
+    stencils applied to halo'd local arrays (wrap reads land in valid halo
+    because exchanges are dimension-ordered), then crops.
+    """
+    mesh = domain.mesh
+    spec = domain.spec()
+    WQ = 2  # q halo: grad/lap (1) + stress divergence (1)
+    dec = domain.decomposed
+
+    def pad(x, w):
+        # wrap-pad ALL site dims: for non-decomposed dims the wrap IS the
+        # (local-)periodic halo; for decomposed dims exchange overwrites it.
+        pads = [(0, 0)] + [(w, w)] * 3
+        return jnp.pad(x, pads, mode="wrap")
+
+    def crop(x, w):
+        idx = [slice(None)] + [slice(w, s - w) for s in x.shape[1:]]
+        return x[tuple(idx)]
+
+    def exchange_w(x, w):
+        from repro.core import halo as _halo
+        return _halo.exchange(x, dec, width=w)
+
+    tgt = cfg.target
+
+    def local_step(dist_nd, q_nd):
+        # ---- Q stencils on width-2 halo
+        qh = exchange_w(pad(q_nd, WQ), WQ)
+        dq_h = gr.grad_central(qh)
+        lapq_h = gr.laplacian(qh)
+        mk = lambda name, arr: Field.from_canonical(name, arr, tuple(arr.shape[1:]), cfg.layout)
+        qF = mk("q", qh)
+        h_F = launch(
+            _mol_field_body, {"q": qF, "lapq": mk("lapq", lapq_h)}, {"h": 5},
+            config=tgt, params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa),
+        )["h"]
+        sigma = launch(
+            _stress_body, {"q": qF, "h": h_F, "dq": mk("dq", dq_h)}, {"sigma": 9},
+            config=tgt, params=dict(kappa=cfg.kappa, xi=cfg.xi),
+        )["sigma"]
+        force_h = gr.divergence(sigma.canonical_nd())   # valid ring >= 1
+        force_nd = crop(force_h, WQ)
+
+        # ---- collision on interior, then exchange dist and propagate
+        distF = mk("dist", dist_nd)
+        dist1 = collide(distF, mk("force", force_nd), tau=cfg.tau, config=tgt)
+        d1h = exchange_w(pad(dist1.canonical_nd(), 1), 1)
+        dist2_nd = prop_ops.propagate_halo(d1h, config=tgt, width=1)
+
+        # ---- hydrodynamics from the pre-collision distributions
+        mo = launch(_moments_body, {"dist": distF, "force": mk("force", force_nd)},
+                    {"rho": 1, "u": 3}, config=tgt)
+        u_nd = mo["u"].canonical_nd()
+        uh = exchange_w(pad(u_nd, 1), 1)
+        w_h = _w_tensor(uh)
+        w_nd = crop(w_h, 1)
+        # advection: q +-1 from the wide-halo q, u faces from u halo
+        qh1 = crop(qh, WQ - 1)
+        adv_h = gr.advective_divergence(qh1, uh)
+        adv_nd = crop(adv_h, 1)
+
+        # ---- Beris-Edwards update on interior
+        qiF = mk("qi", q_nd)
+        rhs = launch(
+            _be_rhs_body,
+            {"q": qiF, "h": mk("h", crop(h_F.canonical_nd(), WQ)), "w": mk("w", w_nd)},
+            {"rhs": 5}, config=tgt, params=dict(gamma_rot=cfg.gamma_rot, xi=cfg.xi),
+        )["rhs"]
+        q_new = launch(
+            _q_update_body,
+            {"q": qiF, "rhs": rhs, "adv": mk("adv", adv_nd)},
+            {"q": 5}, config=tgt, params=dict(dt=cfg.dt),
+        )["q"]
+        return dist2_nd, q_new.canonical_nd()
+
+    sharded = jax.shard_map(
+        local_step, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
+    )
+    return jax.jit(sharded)

@@ -1,0 +1,1 @@
+from .driver import MilcConfig, init_problem, solve, solve_sharded  # noqa: F401

@@ -1,0 +1,39 @@
+"""Architecture registry: --arch <id> -> ArchConfig (FULL and SMOKE)."""
+
+from __future__ import annotations
+
+from . import (
+    arctic_480b,
+    deepseek_67b,
+    granite_3_2b,
+    hymba_1_5b,
+    olmo_1b,
+    qwen2_vl_7b,
+    qwen3_moe_30b_a3b,
+    rwkv6_7b,
+    seamless_m4t_medium,
+    starcoder2_7b,
+)
+from .base import ArchConfig, LM_SHAPES, ShapeCfg, get_shape, shape_supported  # noqa: F401
+
+_MODULES = {
+    "qwen2-vl-7b": qwen2_vl_7b,
+    "granite-3-2b": granite_3_2b,
+    "starcoder2-7b": starcoder2_7b,
+    "olmo-1b": olmo_1b,
+    "deepseek-67b": deepseek_67b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "arctic-480b": arctic_480b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "hymba-1.5b": hymba_1_5b,
+    "rwkv6-7b": rwkv6_7b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str, *, smoke: bool = False) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    mod = _MODULES[arch_id]
+    return mod.SMOKE if smoke else mod.FULL

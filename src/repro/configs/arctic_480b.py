@@ -1,0 +1,38 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+Arctic's dense-MoE hybrid: a dense residual MLP runs in parallel with the
+routed experts in every block.  At 480B parameters this is the memory
+stress case: the launcher selects 8-bit optimizer moments for it."""
+
+from .base import ArchConfig, MoECfg
+
+FULL = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    norm="rmsnorm",
+    act="silu",
+    moe=MoECfg(n_experts=128, top_k=2, d_ff_expert=4864,
+               capacity_factor=1.25, dense_d_ff=4864),
+    tie_embeddings=False,
+)
+
+SMOKE = ArchConfig(
+    name="arctic-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab=256,
+    moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=96, capacity_factor=1.5,
+               dense_d_ff=96),
+    tie_embeddings=False,
+)

@@ -1,0 +1,36 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads, meta tokens, SWA+global
+mix [arXiv:2411.13676; hf].  Sub-quadratic: runs long_500k."""
+
+from .base import ArchConfig, HybridCfg, SSMCfg
+
+FULL = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    norm="rmsnorm",
+    act="silu",
+    ssm=SSMCfg(d_state=16, d_conv=4, expand=2),
+    hybrid=HybridCfg(swa_window=1024, meta_tokens=128),
+    tie_embeddings=True,
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="hymba-smoke",
+    family="hybrid",
+    n_layers=4,  # layers {0, 2, 3} global, layer 1 SWA: both paths exercised
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    ssm=SSMCfg(d_state=4, d_conv=4, expand=2),
+    hybrid=HybridCfg(swa_window=8, meta_tokens=4),
+    tie_embeddings=True,
+    subquadratic=True,
+)

@@ -1,0 +1,38 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+Backbone only; the vision frontend is a stub (input_specs provides
+precomputed patch embeddings spliced into the token stream)."""
+
+from .base import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    norm="rmsnorm",
+    act="silu",
+    rope_theta=1e6,
+    mrope_sections=(16, 24, 24),  # t/h/w splits of head_dim/2 = 64
+    tie_embeddings=False,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-vl-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    d_head=16,
+    norm="rmsnorm",
+    act="silu",
+    mrope_sections=(4, 2, 2),
+    tie_embeddings=False,
+)

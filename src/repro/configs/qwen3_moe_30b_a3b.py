@@ -1,0 +1,36 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8, qk-norm
+[hf:Qwen/Qwen3-30B-A3B; hf]."""
+
+from .base import ArchConfig, MoECfg
+
+FULL = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=768,  # per-expert ff
+    vocab=151936,
+    norm="rmsnorm",
+    act="silu",
+    qk_norm=True,
+    moe=MoECfg(n_experts=128, top_k=8, d_ff_expert=768, capacity_factor=1.25),
+    tie_embeddings=False,
+)
+
+SMOKE = ArchConfig(
+    name="qwen3-moe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=96,
+    vocab=256,
+    qk_norm=True,
+    moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=96, capacity_factor=1.5),
+    tie_embeddings=False,
+)

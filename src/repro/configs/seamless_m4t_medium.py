@@ -1,0 +1,40 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+Backbone only: the speech frontend is a stub (input_specs provides
+precomputed frame embeddings to the encoder)."""
+
+from .base import ArchConfig
+
+FULL = ArchConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,          # decoder layers
+    n_enc_layers=12,
+    enc_dec=True,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=256206,
+    norm="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="seamless-smoke",
+    family="audio",
+    n_layers=2,
+    n_enc_layers=2,
+    enc_dec=True,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    norm="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+)

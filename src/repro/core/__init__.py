@@ -1,0 +1,30 @@
+"""targetDP-JAX core: the paper's abstraction layer, adapted to TPU.
+
+Layout (INDEX macro)  ->  core.layout
+Field                  ->  core.field
+Engines / launch       ->  core.target   (__targetTLP__/__targetILP__/VVL)
+Memory spaces          ->  core.memspace (targetMalloc / copyToTarget / ...)
+Reductions             ->  core.reduce   (targetDoubleSum ...)
+Stencils               ->  core.stencil
+Halo exchange (MPI)    ->  core.halo     (shard_map + ppermute)
+"""
+
+from .layout import AOS, SOA, Layout, LayoutKind, aosoa, parse_layout  # noqa: F401
+from .field import Field  # noqa: F401
+from .target import (  # noqa: F401
+    TargetConfig,
+    TargetKernel,
+    choose_vvl,
+    kernel,
+    launch,
+)
+from .memspace import (  # noqa: F401
+    copy_const_to_target,
+    copy_from_target,
+    copy_to_target,
+    target_free,
+    target_malloc,
+    target_synchronize,
+)
+from .reduce import target_max, target_sum  # noqa: F401
+from . import halo, stencil  # noqa: F401

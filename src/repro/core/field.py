@@ -1,0 +1,114 @@
+"""Field: a multi-valued lattice quantity stored in a configurable Layout.
+
+A Field is the targetDP-JAX unit of data: ``ncomp`` components at every site
+of a (possibly multi-dimensional) lattice, physically stored per its Layout
+(paper §3.1).  Kernels (core.target) consume and produce Fields; the kernel
+body only ever sees canonical ``(ncomp, VVL)`` chunks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layout import Layout, SOA
+
+__all__ = ["Field"]
+
+
+@dataclasses.dataclass
+class Field:
+    """ncomp values per site on a lattice, in a given physical layout.
+
+    data      physical jax.Array, shape == layout.physical_shape(ncomp, nsites)
+    lattice   site-space shape, e.g. (nx, ny, nz); nsites = prod(lattice)
+    """
+
+    name: str
+    ncomp: int
+    lattice: Tuple[int, ...]
+    layout: Layout
+    data: jax.Array
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def zeros(cls, name, ncomp, lattice, layout=SOA, dtype=jnp.float32):
+        nsites = math.prod(lattice)
+        data = jnp.zeros(layout.physical_shape(ncomp, nsites), dtype)
+        return cls(name, ncomp, tuple(lattice), layout, data)
+
+    @classmethod
+    def from_canonical(cls, name, canonical, lattice, layout=SOA):
+        """canonical: (ncomp, *lattice) or (ncomp, nsites)."""
+        canonical = jnp.asarray(canonical)
+        ncomp = canonical.shape[0]
+        nsites = math.prod(lattice)
+        flat = canonical.reshape(ncomp, nsites)
+        return cls(name, ncomp, tuple(lattice), layout, layout.pack(flat))
+
+    @classmethod
+    def from_numpy(cls, name, array_cs, lattice, layout=SOA, dtype=jnp.float32):
+        return cls.from_canonical(name, jnp.asarray(array_cs, dtype), lattice, layout)
+
+    # -- views -----------------------------------------------------------------
+
+    @property
+    def nsites(self) -> int:
+        return math.prod(self.lattice)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def canonical(self) -> jax.Array:
+        """(ncomp, nsites) logical view (layout-independent)."""
+        return self.layout.unpack(self.data)
+
+    def canonical_nd(self) -> jax.Array:
+        """(ncomp, *lattice) logical view — stencil/geometry operations."""
+        return self.canonical().reshape((self.ncomp,) + self.lattice)
+
+    def to_numpy(self) -> np.ndarray:
+        return np.asarray(self.canonical_nd())
+
+    # -- functional updates ----------------------------------------------------
+
+    def with_data(self, data: jax.Array) -> "Field":
+        return dataclasses.replace(self, data=data)
+
+    def with_canonical(self, canonical: jax.Array) -> "Field":
+        flat = canonical.reshape(self.ncomp, self.nsites)
+        return dataclasses.replace(self, data=self.layout.pack(flat))
+
+    def as_layout(self, layout: Layout) -> "Field":
+        """Relayout (the paper's per-architecture layout switch)."""
+        if layout == self.layout:
+            return self
+        return dataclasses.replace(
+            self, layout=layout, data=layout.pack(self.canonical())
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"Field({self.name!r}, ncomp={self.ncomp}, lattice={self.lattice}, "
+            f"layout={self.layout.name}, dtype={self.dtype})"
+        )
+
+
+# Fields are pytrees: data is the leaf, everything else is static metadata.
+def _field_flatten(f: Field):
+    return (f.data,), (f.name, f.ncomp, f.lattice, f.layout)
+
+
+def _field_unflatten(aux, children):
+    name, ncomp, lattice, layout = aux
+    return Field(name, ncomp, lattice, layout, children[0])
+
+
+jax.tree_util.register_pytree_node(Field, _field_flatten, _field_unflatten)

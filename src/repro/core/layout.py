@@ -1,0 +1,191 @@
+"""Data-layout abstraction: the JAX analogue of the targetDP ``INDEX()`` macro.
+
+The paper (Gray & Stratford 2016, §3.1) abstracts the linearization of
+multi-valued lattice data — ``ncomp`` numerical components stored at each of
+``nsites`` lattice sites — behind a C-preprocessor macro so the layout can be
+switched per architecture without touching application code.  The three
+layouts, in the paper's rgb-pixel notation:
+
+  AoS    |rgb|rgb|rgb|rgb|          index = site*ncomp + comp
+  SoA    |rrrr|gggg|bbbb|           index = comp*nsites + site
+  AoSoA  ||rr|gg|bb|||rr|gg|bb||    index = (site/SAL)*ncomp*SAL
+                                            + comp*SAL + (site - (site/SAL)*SAL)
+
+Here the same abstraction is an axis *order* of the backing ``jax.Array``
+(XLA stores arrays row-major, so the flat memory order of each physical shape
+reproduces the paper's linearizations exactly):
+
+  SoA    physical shape (ncomp, nsites)
+  AoS    physical shape (nsites, ncomp)
+  AoSoA  physical shape (nsites//SAL, ncomp, SAL)
+
+The *canonical* (logical) view used by every kernel body is ``(ncomp,
+nsites)`` — kernels never see the layout, exactly as targetDP kernels only
+ever write ``field[INDEX(comp, site)]``.
+
+On the TPU target the short-array length SAL plays the role the paper gives
+the Virtual Vector Length on AVX/IMCI hardware: SAL equal to the 128-wide
+lane dimension (or a multiple) makes a site-chunk land as contiguous
+(sublane=comp, lane=site) VREG tiles, which is the layout the VPU/MXU wants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LayoutKind", "Layout", "AOS", "SOA", "aosoa"]
+
+
+class LayoutKind(enum.Enum):
+    AOS = "aos"
+    SOA = "soa"
+    AOSOA = "aosoa"
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """A concrete data layout: kind + short-array length (AoSoA only).
+
+    ``sal`` is the paper's SAL preprocessor constant.  AoS and SoA are the
+    SAL=1 and SAL=nsites degenerate cases respectively (paper §3.1); we keep
+    them as distinct kinds because their physical shapes are 2-D.
+    """
+
+    kind: LayoutKind
+    sal: int = 1
+
+    def __post_init__(self):
+        if self.kind is LayoutKind.AOSOA and self.sal < 1:
+            raise ValueError(f"AoSoA needs sal >= 1, got {self.sal}")
+
+    # -- shape bookkeeping ---------------------------------------------------
+
+    def physical_shape(self, ncomp: int, nsites: int) -> Tuple[int, ...]:
+        if self.kind is LayoutKind.SOA:
+            return (ncomp, nsites)
+        if self.kind is LayoutKind.AOS:
+            return (nsites, ncomp)
+        if nsites % self.sal:
+            raise ValueError(
+                f"AoSoA(sal={self.sal}) requires sal | nsites, got nsites={nsites}"
+            )
+        return (nsites // self.sal, ncomp, self.sal)
+
+    # -- the INDEX() macro ----------------------------------------------------
+
+    def flat_index(self, comp, site, ncomp: int, nsites: int):
+        """The paper's INDEX(comp, site) linearization (for tests/tools).
+
+        Accepts scalars or integer arrays.  Matches the flat (row-major)
+        memory order of :meth:`pack`'s output by construction; the property
+        test in tests/test_layout.py asserts this.
+        """
+        if self.kind is LayoutKind.SOA:
+            return comp * nsites + site
+        if self.kind is LayoutKind.AOS:
+            return site * ncomp + comp
+        sal = self.sal
+        return (site // sal) * ncomp * sal + comp * sal + (site - (site // sal) * sal)
+
+    # -- canonical <-> physical ------------------------------------------------
+
+    def pack(self, canonical):
+        """(ncomp, nsites) canonical -> physical array in this layout."""
+        ncomp, nsites = canonical.shape
+        if self.kind is LayoutKind.SOA:
+            return canonical
+        if self.kind is LayoutKind.AOS:
+            return canonical.T
+        sal = self.sal
+        if nsites % sal:
+            raise ValueError(f"AoSoA(sal={sal}): sal must divide nsites={nsites}")
+        # (ncomp, nblk, sal) -> (nblk, ncomp, sal)
+        return canonical.reshape(ncomp, nsites // sal, sal).transpose(1, 0, 2)
+
+    def unpack(self, physical):
+        """Physical array in this layout -> canonical (ncomp, nsites)."""
+        if self.kind is LayoutKind.SOA:
+            return physical
+        if self.kind is LayoutKind.AOS:
+            return physical.T
+        nblk, ncomp, sal = physical.shape
+        return physical.transpose(1, 0, 2).reshape(ncomp, nblk * sal)
+
+    # -- pallas BlockSpec support ----------------------------------------------
+
+    def block_shape(self, ncomp: int, vvl: int) -> Tuple[int, ...]:
+        """Physical VMEM block shape covering `vvl` sites x all components.
+
+        vvl (the Virtual Vector Length, paper §3.2.2) is the number of lattice
+        sites one pallas program instance owns.  For AoSoA we require
+        sal | vvl so a block is a whole number of short arrays.
+        """
+        if self.kind is LayoutKind.SOA:
+            return (ncomp, vvl)
+        if self.kind is LayoutKind.AOS:
+            return (vvl, ncomp)
+        if vvl % self.sal:
+            raise ValueError(f"AoSoA(sal={self.sal}): sal must divide vvl={vvl}")
+        return (vvl // self.sal, ncomp, self.sal)
+
+    def block_index_map(self):
+        """index_map for a 1-D site-block grid, in units of block_shape."""
+        if self.kind is LayoutKind.SOA:
+            return lambda i: (0, i)
+        if self.kind is LayoutKind.AOS:
+            return lambda i: (i, 0)
+        return lambda i: (i, 0, 0)
+
+    def block_to_canonical(self, block, ncomp: int, vvl: int):
+        """Physical VMEM block -> canonical (ncomp, vvl) chunk for the body."""
+        if self.kind is LayoutKind.SOA:
+            return block
+        if self.kind is LayoutKind.AOS:
+            return block.T
+        nblk = vvl // self.sal
+        return block.transpose(1, 0, 2).reshape(ncomp, vvl)
+
+    def canonical_to_block(self, chunk, ncomp: int, vvl: int):
+        """Canonical (ncomp, vvl) chunk -> physical VMEM block."""
+        if self.kind is LayoutKind.SOA:
+            return chunk
+        if self.kind is LayoutKind.AOS:
+            return chunk.T
+        return chunk.reshape(ncomp, vvl // self.sal, self.sal).transpose(1, 0, 2)
+
+    # -- descriptive -----------------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        if self.kind is LayoutKind.AOSOA:
+            return f"aosoa{self.sal}"
+        return self.kind.value
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Layout({self.name})"
+
+
+AOS = Layout(LayoutKind.AOS)
+SOA = Layout(LayoutKind.SOA)
+
+
+def aosoa(sal: int) -> Layout:
+    """AoSoA with short-array length ``sal`` (TPU-native at sal=128)."""
+    return Layout(LayoutKind.AOSOA, sal)
+
+
+def parse_layout(spec: str) -> Layout:
+    """Parse 'aos' | 'soa' | 'aosoa<N>' — the config-file entry point."""
+    s = spec.strip().lower()
+    if s == "aos":
+        return AOS
+    if s == "soa":
+        return SOA
+    if s.startswith("aosoa"):
+        return aosoa(int(s[len("aosoa"):] or 128))
+    raise ValueError(f"unknown layout spec {spec!r}")

@@ -1,0 +1,71 @@
+"""Host/target memory-space abstraction (paper §3.2.3).
+
+targetDP keeps an explicit host/target distinction even when both are the
+same device, so the application is portable to split-memory hardware.  On
+TPU the split is real again (host DRAM vs device HBM), and one level down a
+second split (HBM vs VMEM) is handled per-kernel by BlockSpecs.  This module
+provides the paper-named API; under JAX the implementations are thin on
+purpose — the *model* (explicit transfers, no implicit aliasing) is what we
+preserve.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "target_malloc",
+    "target_free",
+    "copy_to_target",
+    "copy_from_target",
+    "copy_const_to_target",
+    "target_synchronize",
+]
+
+
+def target_malloc(shape, dtype=jnp.float32, *, sharding: Optional[object] = None):
+    """targetMalloc: allocate target (device) memory."""
+    z = jnp.zeros(shape, dtype)
+    if sharding is not None:
+        z = jax.device_put(z, sharding)
+    return z
+
+
+def target_free(buf) -> None:
+    """targetFree: drop the device buffer (JAX arrays are GC'd; delete eagerly)."""
+    try:
+        buf.delete()
+    except Exception:
+        pass
+
+
+def copy_to_target(host_array, *, sharding: Optional[object] = None, dtype=None):
+    """copyToTarget: host -> target transfer (device_put, optionally sharded)."""
+    arr = jnp.asarray(host_array, dtype=dtype)
+    if sharding is not None:
+        arr = jax.device_put(arr, sharding)
+    return arr
+
+
+def copy_from_target(target_array) -> np.ndarray:
+    """copyFromTarget: target -> host transfer (blocks until ready)."""
+    return np.asarray(jax.device_get(target_array))
+
+
+def copy_const_to_target(value):
+    """__targetConst__/copyConstToTarget: constants are closed over and baked
+    into the compiled executable — the analogue of GPU constant memory is the
+    scalar cache / inlined immediates on TPU."""
+    return value
+
+
+def target_synchronize(*arrays) -> None:
+    """targetSynchronize: barrier on outstanding device work."""
+    if arrays:
+        jax.block_until_ready(arrays)
+    else:  # global barrier: sync a trivial op
+        jax.block_until_ready(jnp.zeros(()))

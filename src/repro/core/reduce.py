@@ -1,0 +1,76 @@
+"""Lattice-wide reductions (paper §3.2.3, ``targetDoubleSum`` et al.).
+
+The application produces a per-site array (a Field); the reduction API
+combines it.  jnp engine: a plain sum.  pallas engine: a grid-sequential
+accumulation kernel — each program adds its site-block into a (ncomp, VVL)
+partial-sum buffer (TPU pallas grids execute sequentially per core, so
+read-modify-write accumulation across grid steps is well defined), and the
+final (ncomp, VVL) -> (ncomp,) fold happens outside.  Across shards, callers
+compose with ``jax.lax.psum`` (see core.halo / apps drivers), mirroring the
+paper's MPI_Allreduce-above-targetDP split.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .field import Field
+from .target import TargetConfig
+
+__all__ = ["target_sum", "target_max"]
+
+_MONOIDS = {
+    "sum": (lambda a, b: a + b, lambda shape, dt: jnp.zeros(shape, dt), jnp.sum),
+    "max": (
+        lambda a, b: jnp.maximum(a, b),
+        lambda shape, dt: jnp.full(shape, -jnp.inf, dt),
+        jnp.max,
+    ),
+}
+
+
+def _reduce(field: Field, config: Optional[TargetConfig], op: str) -> jax.Array:
+    config = config or TargetConfig()
+    combine, init, fold = _MONOIDS[op]
+    if config.engine == "jnp":
+        return fold(field.canonical(), axis=1)
+
+    vvl = config.vvl
+    nsites, ncomp = field.nsites, field.ncomp
+    if nsites % vvl:
+        raise ValueError(f"vvl={vvl} must divide nsites={nsites}")
+    grid = (nsites // vvl,)
+    layout = field.layout
+
+    def kern(x_ref, acc_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            acc_ref[...] = init(acc_ref.shape, acc_ref.dtype)
+
+        chunk = layout.block_to_canonical(x_ref[...], ncomp, vvl)
+        acc_ref[...] = combine(acc_ref[...], chunk)
+
+    partial = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(layout.block_shape(ncomp, vvl), layout.block_index_map())],
+        out_specs=pl.BlockSpec((ncomp, vvl), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ncomp, vvl), field.dtype),
+        interpret=config.resolved_interpret(),
+        name=f"target_{op}",
+    )(field.data)
+    return fold(partial, axis=1)
+
+
+def target_sum(field: Field, config: Optional[TargetConfig] = None) -> jax.Array:
+    """targetDoubleSum: per-component sum over all local lattice sites."""
+    return _reduce(field, config, "sum")
+
+
+def target_max(field: Field, config: Optional[TargetConfig] = None) -> jax.Array:
+    """Per-component max over all local lattice sites."""
+    return _reduce(field, config, "max")

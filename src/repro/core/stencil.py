@@ -1,0 +1,65 @@
+"""Stencil helpers on canonical (ncomp, *lattice) views.
+
+targetDP classes kernels as site-local or stencil (paper §2.1.1); stencil
+kernels read neighbour sites.  Single-shard (periodic) stencils use rolls;
+multi-shard stencils read halo'd arrays filled by core.halo.  These helpers
+are the jnp-engine implementations and the oracles for the bespoke pallas
+stencil kernels in repro.kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["shift_periodic", "interior", "halo_pad", "shifted_window"]
+
+
+def shift_periodic(x_nd: jax.Array, disp: Sequence[int]) -> jax.Array:
+    """Value at site r of the result = value at site (r - disp) of x (periodic).
+
+    x_nd: (ncomp, *lattice); disp indexes the lattice dims.  This is the LB
+    propagation semantics: f'(r + c_i) = f(r), i.e. out(r) = in(r - c_i).
+    """
+    out = x_nd
+    for d, s in enumerate(disp):
+        if s:
+            out = jnp.roll(out, shift=s, axis=d + 1)
+    return out
+
+
+def halo_pad(x_nd: jax.Array, width: int, site_dims: Sequence[int]) -> jax.Array:
+    """Pad with periodic wrap — the single-shard halo fill."""
+    pads = [(0, 0)] * x_nd.ndim
+    for d in site_dims:
+        pads[d] = (width, width)
+    return jnp.pad(x_nd, pads, mode="wrap")
+
+
+def interior(x_halo: jax.Array, width: int, site_dims: Sequence[int]) -> jax.Array:
+    """Strip halos back off."""
+    idx = [slice(None)] * x_halo.ndim
+    for d in site_dims:
+        idx[d] = slice(width, x_halo.shape[d] - width)
+    return x_halo[tuple(idx)]
+
+
+def shifted_window(
+    x_halo: jax.Array, disp: Sequence[int], width: int, site_dims: Sequence[int]
+) -> jax.Array:
+    """Interior-shaped window of a halo'd array displaced by -disp.
+
+    out(r) = x(r - disp) for every interior site r; reads reach at most
+    ``width`` into the halo, so require max|disp| <= width.
+    """
+    idx = [slice(None)] * x_halo.ndim
+    for d, dim in enumerate(site_dims):
+        s = disp[d]
+        if abs(s) > width:
+            raise ValueError(f"|disp|={abs(s)} exceeds halo width {width}")
+        lo = width - s
+        hi = x_halo.shape[dim] - width - s
+        idx[dim] = slice(lo, hi)
+    return x_halo[tuple(idx)]

@@ -1,0 +1,240 @@
+"""Engine dispatch: one kernel body, two targets (paper §3.2).
+
+targetDP compiles the same source to OpenMP (host C) or CUDA.  Here a kernel
+body is a Python function over canonical ``(ncomp, VVL)`` site-chunks and is
+*traced* by two engines:
+
+  engine="jnp"     TLP and ILP collapse into whole-lattice array ops — the
+                   paper's C/OpenMP build.  Also serves as the oracle.
+  engine="pallas"  ``pl.pallas_call`` over a 1-D grid of site blocks; VMEM
+                   tiling comes from each Field's Layout via BlockSpec, so
+                   the body never sees the layout — the paper's CUDA build,
+                   re-tiled for the TPU memory hierarchy (HBM -> VMEM ->
+                   (8,128) VREG tiles).
+
+__targetTLP__  -> the pallas grid (site blocks across TensorCores)
+__targetILP__  -> the trailing VVL axis of each chunk (VPU lanes)
+VVL            -> sites per pallas program; multiples of 128 are the TPU
+                  analogue of VVL=4 (AVX) / VVL=8 (IMCI-512).
+
+Site-local kernels only (collision, stress, LC update, MILC linear algebra).
+Stencil kernels (propagation, dslash) have bespoke pallas implementations in
+``repro.kernels`` and jnp implementations via ``core.stencil``; both engines
+remain available for them through their ops.py wrappers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .field import Field
+from .layout import Layout
+
+__all__ = ["TargetConfig", "kernel", "launch", "choose_vvl", "TargetKernel"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetConfig:
+    """Compile-time configuration (the paper's build options).
+
+    engine     "jnp" (host C / OpenMP analogue) or "pallas" (device analogue)
+    vvl        Virtual Vector Length: lattice sites per pallas program.
+    interpret  run pallas in interpret mode (True automatically off-TPU).
+    """
+
+    engine: str = "jnp"
+    vvl: int = 128
+    interpret: Optional[bool] = None
+
+    def resolved_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return not _on_tpu()
+
+
+def choose_vvl(nsites: int, preferred: int = 128) -> int:
+    """Largest divisor of nsites that is <= preferred (and a multiple of the
+    AoSoA SAL when relevant — callers align preferred to their SAL)."""
+    v = min(preferred, nsites)
+    while nsites % v:
+        v -= 1
+    return max(v, 1)
+
+
+class TargetKernel:
+    """A site-local data-parallel kernel (the paper's __targetEntry__ unit)."""
+
+    def __init__(self, body: Callable, name: Optional[str] = None):
+        self.body = body
+        self.name = name or getattr(body, "__name__", "kernel")
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"TargetKernel({self.name})"
+
+    # -- engines ---------------------------------------------------------------
+
+    def _run_jnp(self, ins: Dict[str, Field], params: Mapping) -> Dict[str, jax.Array]:
+        chunks = {k: f.canonical() for k, f in ins.items()}
+        return self.body(chunks, **dict(params))
+
+    def _run_pallas(
+        self,
+        ins: Dict[str, Field],
+        out_specs: Mapping[str, Tuple[int, object]],
+        params: Mapping,
+        vvl: int,
+        interpret: bool,
+        out_layouts: Mapping[str, Layout],
+    ) -> Dict[str, jax.Array]:
+        names = list(ins)
+        nsites = ins[names[0]].nsites
+        for f in ins.values():
+            if f.nsites != nsites:
+                raise ValueError("all fields in one launch must share nsites")
+        if nsites % vvl:
+            raise ValueError(
+                f"vvl={vvl} must divide nsites={nsites} "
+                f"(use choose_vvl or pad the lattice)"
+            )
+        grid = (nsites // vvl,)
+
+        in_block_specs = [
+            pl.BlockSpec(
+                f.layout.block_shape(f.ncomp, vvl), f.layout.block_index_map()
+            )
+            for f in ins.values()
+        ]
+        out_names = list(out_specs)
+        out_shapes = []
+        out_block_specs = []
+        for k in out_names:
+            ncomp, dtype = out_specs[k]
+            lay = out_layouts[k]
+            out_shapes.append(
+                jax.ShapeDtypeStruct(lay.physical_shape(ncomp, nsites), dtype)
+            )
+            out_block_specs.append(
+                pl.BlockSpec(lay.block_shape(ncomp, vvl), lay.block_index_map())
+            )
+
+        body = self.body
+        static_params = dict(params)
+        in_fields = list(ins.values())
+
+        def pallas_kernel(*refs):
+            in_refs = refs[: len(in_fields)]
+            out_refs = refs[len(in_fields):]
+            chunks = {}
+            for k, f, r in zip(names, in_fields, in_refs):
+                chunks[k] = f.layout.block_to_canonical(r[...], f.ncomp, vvl)
+            outs = body(chunks, **static_params)
+            for k, r in zip(out_names, out_refs):
+                ncomp, _ = out_specs[k]
+                r[...] = out_layouts[k].canonical_to_block(outs[k], ncomp, vvl)
+
+        call = pl.pallas_call(
+            pallas_kernel,
+            grid=grid,
+            in_specs=in_block_specs,
+            out_specs=(
+                out_block_specs if len(out_block_specs) > 1 else out_block_specs[0]
+            ),
+            out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+            interpret=interpret,
+            name=self.name,
+        )
+        result = call(*[f.data for f in in_fields])
+        if len(out_names) == 1:
+            result = [result]
+        # physical -> canonical
+        out = {}
+        for k, phys in zip(out_names, result):
+            out[k] = out_layouts[k].unpack(phys)
+        return out
+
+
+def kernel(fn: Optional[Callable] = None, *, name: Optional[str] = None):
+    """Decorator: register a site-local kernel body.
+
+    Body signature::
+
+        def body(v: dict[str, Array(ncomp, VVL)], **params) -> dict[str, Array]
+    """
+
+    def wrap(f):
+        return TargetKernel(f, name=name)
+
+    return wrap(fn) if fn is not None else wrap
+
+
+def _normalize_out_specs(out_specs, ref_dtype):
+    norm = {}
+    for k, v in out_specs.items():
+        if isinstance(v, tuple):
+            norm[k] = (int(v[0]), v[1])
+        else:
+            norm[k] = (int(v), ref_dtype)
+    return norm
+
+
+def launch(
+    kern: Union[TargetKernel, Callable],
+    ins: Dict[str, Field],
+    out_specs: Mapping[str, Union[int, Tuple[int, object]]],
+    *,
+    config: Optional[TargetConfig] = None,
+    params: Optional[Mapping] = None,
+    out_layouts: Optional[Mapping[str, Layout]] = None,
+) -> Dict[str, Field]:
+    """Execute a kernel over the lattice (the paper's __targetLaunch__).
+
+    ins         name -> input Field (all sharing nsites; layouts may differ).
+    out_specs   name -> ncomp (or (ncomp, dtype)) of each output Field.
+    Returns     name -> output Field (same lattice; layout = out_layouts[name]
+                or the first input's layout).
+    """
+    if not isinstance(kern, TargetKernel):
+        kern = TargetKernel(kern)
+    config = config or TargetConfig()
+    params = params or {}
+    first = next(iter(ins.values()))
+    out_specs = _normalize_out_specs(out_specs, first.dtype)
+    out_layouts = dict(out_layouts or {})
+    for k in out_specs:
+        out_layouts.setdefault(k, first.layout)
+
+    if config.engine == "jnp":
+        outs = kern._run_jnp(ins, params)
+    elif config.engine == "pallas":
+        outs = kern._run_pallas(
+            ins,
+            out_specs,
+            params,
+            vvl=config.vvl,
+            interpret=config.resolved_interpret(),
+            out_layouts=out_layouts,
+        )
+    else:
+        raise ValueError(f"unknown engine {config.engine!r}")
+
+    fields = {}
+    for k, (ncomp, dtype) in out_specs.items():
+        arr = outs[k].astype(dtype)
+        fields[k] = Field(
+            k, ncomp, first.lattice, out_layouts[k], out_layouts[k].pack(arr)
+        )
+    return fields

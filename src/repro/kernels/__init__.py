@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the performance hot-spots.
+
+Each kernel package has three files (per the repo convention):
+  kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target,
+             validated in interpret mode on CPU)
+  ref.py     pure-jnp oracle (also the "host C" engine of the paper)
+  ops.py     jit'd public wrapper with engine dispatch
+
+Hot-spots mirror the paper's profiled kernels: LB collision & propagation
+(Ludwig), the Wilson-Dirac hopping term (MILC), and — for the assigned LM
+architectures — the RWKV6 chunked linear-recurrence scan.
+"""

@@ -1,0 +1,158 @@
+"""Pallas TPU flash attention (GQA, causal/windowed) — the beyond-paper
+optimization identified by the train_4k hillclimb (EXPERIMENTS.md §Perf).
+
+The HLO profile of the baseline train step shows the dominant memory-term
+contributor is S^2-sized fp32 score traffic (scores, mask, softmax ops,
+and their transposes/gradients) materialized between fusion boundaries —
+~10 GiB/layer/device at train_4k.  This kernel keeps the entire score
+block in VMEM (the targetDP memory-space discipline applied one level
+down): HBM sees only q/k/v/out.
+
+Design (TPU v5e):
+  grid = (BG, S/qb) with BG = B*KV*rep grouped query rows.  Per program:
+    q block   (qb, dh)            VMEM via BlockSpec
+    k, v      (S, dh) full rows   VMEM via BlockSpec (index_map bg//rep —
+                                  GQA sharing without materialized repeat)
+    scores    (qb, S) fp32        VMEM value (never HBM)
+  qb=256, S=4096, dh=128 -> ~4.5 MiB/program: scores 4 MiB + k/v 2 MiB.
+  For S beyond ~16k the k/v rows outgrow VMEM and the kv-chunked variant
+  (online softmax over pl.ds slices, same math as models.attention's
+  blockwise path) takes over; both are exercised in interpret mode.
+
+Mask arithmetic uses broadcasted_iota (TPU needs >=2-D iota).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mask(qi0, qb, S, causal: bool, window: int):
+    qi = qi0 + jax.lax.broadcasted_iota(jnp.int32, (qb, S), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (qb, S), 1)
+    ok = jnp.ones((qb, S), bool)
+    if causal:
+        ok = ok & (kj <= qi)
+    if window > 0:
+        ok = ok & (qi - kj < window)
+    return ok
+
+
+def flash_pallas(q, k, v, *, rep: int, causal: bool = True, window: int = 0,
+                 q_block: int = 256, interpret: bool = True):
+    """q: (BG, S, dh); k/v: (BKV, S, dh); BG = BKV * rep.
+    Returns (BG, S, dh) in q.dtype."""
+    BG, S, dh = q.shape
+    qb = min(q_block, S)
+    while S % qb:
+        qb -= 1
+    scale = 1.0 / math.sqrt(dh)
+    grid = (BG, S // qb)
+
+    def kern(q_ref, k_ref, v_ref, o_ref):
+        qi0 = pl.program_id(1) * qb
+        qblk = q_ref[0].astype(jnp.float32)          # (qb, dh)
+        kall = k_ref[0].astype(jnp.float32)          # (S, dh)
+        vall = v_ref[0].astype(jnp.float32)
+        s = qblk @ kall.T * scale                    # (qb, S) fp32, VMEM only
+        ok = _mask(qi0, qb, S, causal, window)
+        s = jnp.where(ok, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = (p @ vall) / jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda bg, qi: (bg, qi, 0)),
+            pl.BlockSpec((1, S, dh), lambda bg, qi: (bg // rep, 0, 0)),
+            pl.BlockSpec((1, S, dh), lambda bg, qi: (bg // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda bg, qi: (bg, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BG, S, dh), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)
+
+
+def flash_pallas_kvchunk(q, k, v, *, rep: int, causal: bool = True,
+                         window: int = 0, q_block: int = 256,
+                         kv_block: int = 1024, interpret: bool = True):
+    """Long-sequence variant: online softmax over kv chunks so VMEM holds
+    only (qb, kvb) scores + running stats; k/v stream through VMEM blocks
+    via a third grid dimension (sequential minor-most on TPU)."""
+    BG, S, dh = q.shape
+    qb = min(q_block, S)
+    while S % qb:
+        qb -= 1
+    kvb = min(kv_block, S)
+    while S % kvb:
+        kvb -= 1
+    nk = S // kvb
+    scale = 1.0 / math.sqrt(dh)
+    grid = (BG, S // qb, nk)
+
+    def kern(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+        ki = pl.program_id(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        qi0 = pl.program_id(1) * qb
+        kj0 = ki * kvb
+        qblk = q_ref[0].astype(jnp.float32)
+        kblk = k_ref[0].astype(jnp.float32)          # (kvb, dh)
+        vblk = v_ref[0].astype(jnp.float32)
+        s = qblk @ kblk.T * scale                    # (qb, kvb)
+        qi = qi0 + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 0)
+        kj = kj0 + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 1)
+        ok = jnp.ones((qb, kvb), bool)
+        if causal:
+            ok = ok & (kj <= qi)
+        if window > 0:
+            ok = ok & (qi - kj < window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ vblk
+        m_ref[...] = m_new
+
+        @pl.when(ki == nk - 1)
+        def _fin():
+            o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda bg, qi, ki: (bg, qi, 0)),
+            pl.BlockSpec((1, kvb, dh), lambda bg, qi, ki: (bg // rep, ki, 0)),
+            pl.BlockSpec((1, kvb, dh), lambda bg, qi, ki: (bg // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda bg, qi, ki: (bg, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BG, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, dh), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention_kvchunk",
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Public wrapper: grouped-layout flash attention with engine dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.target import _on_tpu
+from . import kernel, ref
+
+
+def flash_attention(q, k, v, *, rep: int, causal: bool = True,
+                    window: int = 0, engine: str = "auto",
+                    q_block: int = 256, kv_block: int = 1024):
+    """q: (BG, S, dh); k/v: (BKV, S, dh); BG = BKV * rep.
+
+    engine: "auto" (pallas on TPU, ref otherwise), "jnp", "pallas",
+            "pallas_kvchunk" (long-sequence streaming variant).
+    """
+    if engine == "auto":
+        engine = "pallas" if _on_tpu() else "jnp"
+    if engine == "jnp":
+        return ref.flash_ref(q, k, v, rep=rep, causal=causal, window=window)
+    if engine == "pallas":
+        return kernel.flash_pallas(
+            q, k, v, rep=rep, causal=causal, window=window,
+            q_block=q_block, interpret=not _on_tpu())
+    if engine == "pallas_kvchunk":
+        return kernel.flash_pallas_kvchunk(
+            q, k, v, rep=rep, causal=causal, window=window,
+            q_block=q_block, kv_block=kv_block, interpret=not _on_tpu())
+    raise ValueError(engine)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the GQA flash-attention kernel.
+
+Computes masked softmax attention per (batch, kv-group, rep) with the
+same grouped layout the kernel uses:
+  q: (BG, S, dh) where BG = B * KV * rep (grouped queries, row-major)
+  k, v: (BKV, S, dh) where BKV = B * KV (each row serves `rep` q rows)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_ref(q, k, v, *, rep: int, causal: bool = True, window: int = 0):
+    """Returns (BG, S, dh) in q.dtype; softmax statistics in fp32."""
+    BG, S, dh = q.shape
+    kk = jnp.repeat(k, rep, axis=0)
+    vv = jnp.repeat(v, rep, axis=0)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok = ok & (kj <= qi)
+    if window > 0:
+        ok = ok & (qi - kj < window)
+    s = jnp.where(ok[None], s, NEG_INF)
+    w = jnp.exp(s - s.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", w, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import collide  # noqa: F401

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the D3Q19 BGK collision (Ludwig "Collision").
+
+Site-local and embarrassingly data-parallel: a 1-D grid of site blocks, one
+block of VVL sites per program.  The VMEM tiles are derived from the Field
+Layout exactly as targetDP derives addresses from INDEX():
+
+  SoA         block (19, VVL)           — lane axis = sites (TPU-native)
+  AoS         block (VVL, 19)           — deliberately wrong on TPU: minor
+                                          dim 19 pads to 128 lanes (C2)
+  AoSoA(SAL)  block (VVL/SAL, 19, SAL)  — short arrays ride the lanes
+
+VMEM budget per program (fp32): (19 + 3 + 19) * VVL * 4 bytes plus
+temporaries ~ 5 * VVL * 4; at VVL=1024 that is ~188 KiB, far under the
+~16 MiB/core VMEM, so VVL can be raised until the grid is coarse enough to
+amortize control overhead (the paper tunes VVL the same way, §3.2.2).
+
+The body is ``ref.collide_chunk`` — the same source the jnp engine runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layout import Layout
+from . import ref
+
+
+def collide_pallas(
+    dist: jax.Array,
+    force: jax.Array,
+    *,
+    tau: float,
+    layout: Layout,
+    force_layout: Layout,
+    vvl: int,
+    nsites: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """dist/force are *physical* arrays in their layouts; returns physical."""
+    if nsites % vvl:
+        raise ValueError(f"vvl={vvl} must divide nsites={nsites}")
+    grid = (nsites // vvl,)
+    nvel, ndim = 19, 3
+
+    def kern(f_ref, frc_ref, out_ref):
+        f = layout.block_to_canonical(f_ref[...], nvel, vvl)
+        frc = force_layout.block_to_canonical(frc_ref[...], ndim, vvl)
+        out = ref.collide_chunk(f, frc, tau)
+        out_ref[...] = layout.canonical_to_block(out, nvel, vvl)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(layout.block_shape(nvel, vvl), layout.block_index_map()),
+            pl.BlockSpec(
+                force_layout.block_shape(ndim, vvl), force_layout.block_index_map()
+            ),
+        ],
+        out_specs=pl.BlockSpec(layout.block_shape(nvel, vvl), layout.block_index_map()),
+        out_shape=jax.ShapeDtypeStruct(
+            layout.physical_shape(nvel, nsites), dist.dtype
+        ),
+        interpret=interpret,
+        name="lb_collision",
+    )(dist, force)

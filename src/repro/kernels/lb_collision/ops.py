@@ -1,0 +1,32 @@
+"""Public wrapper for the LB collision kernel (engine dispatch + jit)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import Field, TargetConfig
+from . import kernel, ref
+
+
+def collide(
+    dist: Field, force: Field, *, tau: float, config: TargetConfig
+) -> Field:
+    """Post-collision distributions; same Field layout/lattice as ``dist``."""
+    if config.engine == "jnp":
+        out = ref.collide_ref(dist.canonical(), force.canonical(), tau)
+        return dist.with_canonical(out)
+    if config.engine == "pallas":
+        phys = kernel.collide_pallas(
+            dist.data,
+            force.data,
+            tau=tau,
+            layout=dist.layout,
+            force_layout=force.layout,
+            vvl=config.vvl,
+            nsites=dist.nsites,
+            interpret=config.resolved_interpret(),
+        )
+        return dist.with_data(phys)
+    raise ValueError(f"unknown engine {config.engine!r}")

@@ -1,0 +1,35 @@
+"""Public wrapper for LB propagation (engine dispatch)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import Field, TargetConfig, stencil
+from . import kernel, ref
+
+
+def propagate(dist: Field, *, config: TargetConfig) -> Field:
+    """Periodic streaming step on a single shard (the multi-shard driver
+    exchanges halos and calls the halo variants directly)."""
+    f_nd = dist.canonical_nd()
+    if config.engine == "jnp":
+        out = ref.propagate_ref(f_nd)
+    elif config.engine == "pallas":
+        f_halo = stencil.halo_pad(f_nd, 1, (1, 2, 3))
+        out = kernel.propagate_pallas(
+            f_halo, width=1, interpret=config.resolved_interpret()
+        )
+    else:
+        raise ValueError(f"unknown engine {config.engine!r}")
+    return dist.with_canonical(out.reshape(dist.ncomp, dist.nsites))
+
+
+def propagate_halo(dist_halo: jnp.ndarray, *, config: TargetConfig, width: int = 1):
+    """Halo'd-array form used inside shard_map (halos already exchanged)."""
+    if config.engine == "jnp":
+        return ref.propagate_halo_ref(dist_halo, width)
+    if config.engine == "pallas":
+        return kernel.propagate_pallas(
+            dist_halo, width=width, interpret=config.resolved_interpret()
+        )
+    raise ValueError(f"unknown engine {config.engine!r}")

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for D3Q19 propagation (Ludwig "Propagation").
+
+Streaming step: f'_i(r + c_i) = f_i(r), i.e. out_i(r) = f_i(r - c_i).
+Pure data movement (OI ~ 0 F/B — the paper's most bandwidth-bound kernel).
+Periodic form uses rolls; halo form reads displaced interior windows of a
+halo'd array (multi-shard path, halos filled by core.halo/Domain.exchange).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import stencil
+from repro.maths import d3q19
+
+
+def propagate_ref(f_nd: jnp.ndarray) -> jnp.ndarray:
+    """Periodic propagation. f_nd: (19, X, Y, Z) canonical."""
+    outs = []
+    for i in range(d3q19.NVEL):
+        disp = tuple(int(c) for c in d3q19.CV[i])
+        outs.append(stencil.shift_periodic(f_nd[i : i + 1], disp)[0])
+    return jnp.stack(outs)
+
+
+def propagate_halo_ref(f_halo: jnp.ndarray, width: int = 1) -> jnp.ndarray:
+    """Halo'd propagation. f_halo: (19, X+2w, Y+2w, Z+2w) with halos already
+    exchanged; returns interior (19, X, Y, Z)."""
+    site_dims = (1, 2, 3)
+    outs = []
+    for i in range(d3q19.NVEL):
+        disp = tuple(int(c) for c in d3q19.CV[i])
+        outs.append(
+            stencil.shifted_window(f_halo[i : i + 1], disp, width, site_dims)[0]
+        )
+    return jnp.stack(outs)

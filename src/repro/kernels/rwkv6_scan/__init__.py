@@ -1,0 +1,1 @@
+from .ops import rwkv6, rwkv6_decode_step  # noqa: F401

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the RWKV6 chunked WKV recurrence.
+
+TPU adaptation of the GPU recurrent/chunked WKV kernels (e.g. FLA): the
+pallas grid is (B*H, T/C) with the chunk dimension minor-most — on TPU the
+grid executes *sequentially* per core, so the (dk, dv) recurrent state is
+carried across chunk steps in a VMEM scratch buffer, replacing the CUDA
+pattern of one threadblock owning a head and looping over time.  Between
+heads (major grid dim) the state is re-initialised from the s0 input.
+
+Blocks per program (fp32): r/k/w (C, dk), v (C, dv), o (C, dv), state
+(dk, dv), u (dk,) plus the (C, C, dk) pairwise-decay temporary.  With
+C = dk = dv = 64: ~1.2 MiB — comfortably inside VMEM; C=64, dk=128:
+~4.5 MiB, still fine.  All matmul shapes are (C, dk)x(dk, dv) and
+(C, C)x(C, dv) — MXU-aligned when C, dk, dv are multiples of 128 (bf16) /
+8x128 tiles (fp32); dk=dv=64 heads still map efficiently via 2x packing.
+
+The chunk math is ref.chunk_body — the identical source traced by the jnp
+engine (paper C1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+
+def rwkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = True):
+    """r,k,w: (BH, T, dk); v: (BH, T, dv); u: (BH, dk); s0: (BH, dk, dv).
+    Returns o (BH, T, dv), sT (BH, dk, dv).  fp32 in/out."""
+    BH, T, dk = r.shape
+    dv = v.shape[-1]
+    C = chunk
+    if T % C:
+        raise ValueError(f"chunk={C} must divide T={T}")
+    nC = T // C
+    grid = (BH, nC)  # minor-most (chunk) dim iterates fastest => sequential
+
+    def kern(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref, s_scr):
+        tc = pl.program_id(1)
+
+        @pl.when(tc == 0)
+        def _init():
+            s_scr[...] = s0_ref[0]
+
+        rc = r_ref[0]
+        kc = k_ref[0]
+        vc = v_ref[0]
+        lwc = jnp.log(jnp.maximum(w_ref[0], 1e-26))
+        uu = u_ref[0]
+        o, s1 = ref.chunk_body(rc, kc, vc, lwc, uu, s_scr[...])
+        o_ref[0] = o
+        s_scr[...] = s1
+        sT_ref[0] = s1  # last write (tc == nC-1) is the final state
+
+    seq_spec = lambda d: pl.BlockSpec((1, C, d), lambda bh, tc: (bh, tc, 0))
+    head_spec2 = lambda d: pl.BlockSpec((1, d), lambda bh, tc: (bh, 0))
+    head_spec3 = pl.BlockSpec((1, dk, dv), lambda bh, tc: (bh, 0, 0))
+
+    o, sT = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            seq_spec(dk),  # r
+            seq_spec(dk),  # k
+            seq_spec(dv),  # v
+            seq_spec(dk),  # w
+            head_spec2(dk),  # u
+            head_spec3,  # s0
+        ],
+        out_specs=[seq_spec(dv), head_spec3],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, dv), jnp.float32),
+            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+        name="rwkv6_scan",
+    )(
+        r.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        w.astype(jnp.float32),
+        u.astype(jnp.float32),
+        s0.astype(jnp.float32),
+    )
+    return o, sT

@@ -1,0 +1,65 @@
+"""Public wrapper for the RWKV6 WKV op (engine dispatch + jit-friendly)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.target import _on_tpu
+from . import kernel, ref
+
+
+def rwkv6(
+    r, k, v, w, u, s0=None, *, engine: str = "auto", chunk: int = 64
+):
+    """RWKV6 WKV over a sequence.
+
+    r, k, w: (B, H, T, dk); v: (B, H, T, dv); u: (H, dk);
+    s0: optional (B, H, dk, dv).
+    Returns o (B, H, T, dv) in r.dtype, sT (B, H, dk, dv) fp32.
+
+    engine: "auto" (pallas on TPU else chunked jnp), "jnp" (chunked),
+            "scan" (exact sequential oracle), "pallas".
+    """
+    if engine == "auto":
+        engine = "pallas" if _on_tpu() else "jnp"
+    B, H, T, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    if engine == "scan":
+        o, sT = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    elif engine == "jnp":
+        o, sT = ref.rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    elif engine == "pallas":
+        BH = B * H
+        rr = lambda x, d: x.reshape(BH, T, d)
+        ub = jnp.broadcast_to(u[None], (B, H, dk)).reshape(BH, dk)
+        o, sT = kernel.rwkv6_pallas(
+            rr(r, dk),
+            rr(k, dk),
+            rr(v, dv),
+            rr(w, dk),
+            ub,
+            s0.reshape(BH, dk, dv),
+            chunk=chunk,
+            interpret=not _on_tpu(),
+        )
+        o = o.reshape(B, H, T, dv)
+        sT = sT.reshape(B, H, dk, dv)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return o.astype(r.dtype), sT
+
+
+def rwkv6_decode_step(r1, k1, v1, w1, u, s):
+    """One autoregressive token: O(dk*dv) per head, no sequence dim.
+    r1,k1,w1: (B,H,dk); v1: (B,H,dv); s: (B,H,dk,dv) fp32 carried state."""
+    o, s = ref.rwkv6_decode_ref(r1, k1, v1, w1, u, s)
+    return o.astype(r1.dtype), s

@@ -1,0 +1,134 @@
+"""RWKV6 ("Finch") WKV recurrence — oracle + chunked closed form.
+
+Per head: state S in R^{dk x dv};  w_t in (0,1)^{dk} is the data-dependent
+decay, u in R^{dk} the first-token bonus:
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+``rwkv6_scan_ref`` is the exact sequential oracle.  ``rwkv6_chunked`` is
+the O(T/C * (C^2 dk + C dk dv)) block-parallel form used for prefill: all
+pairwise decay factors are expressed as exp(L_{t-1,d} - L_{s,d}) with
+L = cumsum(log w) — the exponent is <= 0 wherever the causal mask admits it,
+so the chunked form is overflow-free by construction (unlike the 1/P
+"unnormalized" trick common in GPU linear-attention kernels; this is the
+TPU-friendly numerically-safe variant).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import probe as _probe
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Exact recurrence.
+
+    r, k, w: (B, H, T, dk); v: (B, H, T, dv); u: (H, dk);
+    s0: (B, H, dk, dv) or None.
+    Returns o: (B, H, T, dv), sT: (B, H, dk, dv).  fp32 internally.
+    """
+    B, H, T, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), f32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,dk) ... (B,H,dv)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,dk,dv)
+        wkv = S + u[None, :, :, None] * kv                  # bonus on current
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, wkv)
+        S = wt[..., :, None] * S + kv
+        return S, ot
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0.astype(f32), xs)
+    return jnp.moveaxis(o, 0, 2), sT
+
+
+def chunk_body(r, k, v, lw, u, s0):
+    """One chunk, one head: the body shared by the jnp engine and the
+    pallas kernel.
+
+    r, k: (C, dk); v: (C, dv); lw = log(w): (C, dk); u: (dk,);
+    s0: (dk, dv).  Returns (o (C, dv), s1 (dk, dv)).
+    """
+    C, dk = r.shape
+    Lc = jnp.cumsum(lw, axis=0)          # L_t, t = 1..C      (C, dk)
+    Lprev = Lc - lw                      # L_{t-1}            (C, dk)
+
+    q = r * jnp.exp(Lprev)               # decayed receptance
+    inter = q @ s0                       # (C, dv) cross-chunk
+
+    # intra-chunk pairwise: A[t,s] = sum_d r_td k_sd exp(L_{t-1,d} - L_{s,d})
+    expo = Lprev[:, None, :] - Lc[None, :, :]          # (C, C, dk)
+    expo = jnp.minimum(expo, 0.0)                      # masked region safety
+    A = jnp.einsum("td,tsd,sd->ts", r, jnp.exp(expo), k)
+    mask = jnp.tril(jnp.ones((C, C), A.dtype), k=-1)   # strictly causal
+    intra = (A * mask) @ v                             # (C, dv)
+
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+
+    o = inter + intra + bonus
+
+    # state propagation: S' = exp(L_C) . S0 + sum_s exp(L_C - L_s) k_s v_s^T
+    decay_all = jnp.exp(Lc[-1])                        # (dk,)
+    kd = k * jnp.exp(Lc[-1][None, :] - Lc)             # (C, dk)
+    s1 = decay_all[:, None] * s0 + kd.T @ v
+    return o, s1
+
+
+def rwkv6_chunked(r, k, v, w, u, s0=None, *, chunk: int = 64):
+    """Block-parallel closed form (jnp engine).  Same signature/returns as
+    rwkv6_scan_ref; T must be a multiple of ``chunk``."""
+    B, H, T, dk = r.shape
+    dv = v.shape[-1]
+    if T % chunk:
+        raise ValueError(f"chunk={chunk} must divide T={T}")
+    f32 = jnp.float32
+    r, k, v = (x.astype(f32) for x in (r, k, v))
+    # clamp: w can underflow to 0 (extreme decay); log(0) = -inf makes
+    # (-inf) - (-inf) = NaN in the pairwise form.  exp(-60) is already far
+    # below fp32 resolution of any accumulated state.
+    lw = jnp.log(jnp.maximum(w.astype(f32), 1e-26))
+    u = u.astype(f32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), f32)
+
+    nC = T // chunk
+    resh = lambda x, d: x.reshape(B, H, nC, chunk, d).transpose(2, 0, 1, 3, 4)
+    rs, ks, lws = resh(r, dk), resh(k, dk), resh(lw, dk)
+    vs = resh(v, dv)
+
+    body = jax.vmap(jax.vmap(chunk_body, in_axes=(0, 0, 0, 0, 0, 0)),
+                    in_axes=(0, 0, 0, 0, None, 0))
+    # vmap over B (outer) then H (inner); u varies per head only.
+
+    def scan_step(S, xs):
+        rc, kc, vc, lwc = xs  # (B, H, C, d*)
+        o, S1 = body(rc, kc, vc, lwc, u, S)
+        return S1, o
+
+    sT, os = jax.lax.scan(scan_step, s0, (rs, ks, vs, lws),
+                          unroll=_probe.scan_unroll())
+    # os: (nC, B, H, C, dv) -> (B, H, T, dv)
+    o = os.transpose(1, 2, 0, 3, 4).reshape(B, H, T, dv)
+    return o, sT
+
+
+def rwkv6_decode_ref(r1, k1, v1, w1, u, s):
+    """Single decode step.  r1,k1,w1: (B,H,dk); v1: (B,H,dv); s: (B,H,dk,dv).
+    Returns (o (B,H,dv), s')."""
+    f32 = jnp.float32
+    r1, k1, v1, w1 = (x.astype(f32) for x in (r1, k1, v1, w1))
+    kv = k1[..., :, None] * v1[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r1, s + u.astype(f32)[None, :, :, None] * kv)
+    s = w1[..., :, None] * s + kv
+    return o, s

@@ -1,0 +1,1 @@
+from .ops import dslash, wilson_matvec  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for the fused site-local Wilson-dslash stage.
+
+After the Shift stage gathers the 8 neighbour spinors (halo windows across
+shards, rolls within), the hopping term is site-local: per site read
+72 + 72 + 192 fp32 components, write 24, ~1320 flops.  The grid is 1-D over
+site blocks of VVL sites; the three input Fields and the output share the
+Layout-derived BlockSpecs of the core layer, so layout is a config knob
+here exactly as in the collision kernel.
+
+VMEM per program (fp32): (72+72+192+24) * VVL * 4 B = 1.4 KiB/site; VVL=512
+-> ~0.7 MiB plus temporaries; hardware-aligned when VVL is a multiple of
+128.  The color einsums contract a length-3 axis — too small for the MXU —
+so the multiply-adds run on the VPU across the VVL lane axis, which is why
+AoSoA/SoA (sites minor) is the right layout on TPU and AoS collapses
+(paper C2, quantified in benchmarks/fig4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layout import Layout
+from . import ref
+
+
+def dslash_site_pallas(
+    u_fwd: jax.Array,
+    u_bwd: jax.Array,
+    nbrs: jax.Array,
+    *,
+    layout: Layout,
+    vvl: int,
+    nsites: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Physical arrays in `layout`; returns physical (24-comp) D psi."""
+    if nsites % vvl:
+        raise ValueError(f"vvl={vvl} must divide nsites={nsites}")
+    grid = (nsites // vvl,)
+    NU, NN, NS = ref.GAUGE_NCOMP, ref.NBR_NCOMP, ref.SPINOR_NCOMP
+
+    def kern(uf_ref, ub_ref, nb_ref, out_ref):
+        uf = layout.block_to_canonical(uf_ref[...], NU, vvl)
+        ub = layout.block_to_canonical(ub_ref[...], NU, vvl)
+        nb = layout.block_to_canonical(nb_ref[...], NN, vvl)
+        out = ref.dslash_site_chunk(uf, ub, nb)
+        out_ref[...] = layout.canonical_to_block(out, NS, vvl)
+
+    spec = lambda ncomp: pl.BlockSpec(
+        layout.block_shape(ncomp, vvl), layout.block_index_map()
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec(NU), spec(NU), spec(NN)],
+        out_specs=spec(NS),
+        out_shape=jax.ShapeDtypeStruct(
+            layout.physical_shape(NS, nsites), u_fwd.dtype
+        ),
+        interpret=interpret,
+        name="wilson_dslash",
+    )(u_fwd, u_bwd, nbrs)

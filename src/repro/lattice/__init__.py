@@ -1,0 +1,1 @@
+from .domain import Domain  # noqa: F401

@@ -1,0 +1,121 @@
+"""Domain decomposition of a global lattice over a named device mesh.
+
+The paper's applications decompose the lattice across MPI ranks with halo
+regions (§2.1).  Domain carries that geometry for the shard_map runtime:
+which lattice dims map to which mesh axes, local shapes, halo width, and the
+PartitionSpecs used to shard canonical (ncomp, *lattice) arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import halo as _halo
+
+__all__ = ["Domain"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Geometry of a decomposed lattice.
+
+    global_shape   full lattice, e.g. (nx, ny, nz)
+    mesh           jax Mesh (may be None for single-process use)
+    dim_axes       per lattice dim: mesh axis name or None (not decomposed)
+    halo           halo width (max stencil reach; 1 for D3Q19 & Wilson)
+    """
+
+    global_shape: Tuple[int, ...]
+    mesh: Optional[Mesh] = None
+    dim_axes: Tuple[Optional[str], ...] = ()
+    halo: int = 1
+
+    def __post_init__(self):
+        if self.dim_axes and len(self.dim_axes) != len(self.global_shape):
+            raise ValueError("dim_axes must match lattice rank")
+
+    # -- shapes ----------------------------------------------------------------
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if name is None or self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def local_shape(self) -> Tuple[int, ...]:
+        """Per-shard interior shape (no halos)."""
+        out = []
+        for d, n in enumerate(self.global_shape):
+            ax = self.dim_axes[d] if self.dim_axes else None
+            size = self.axis_size(ax)
+            if n % size:
+                raise ValueError(
+                    f"lattice dim {d} ({n}) not divisible by mesh axis "
+                    f"{ax} ({size})"
+                )
+            out.append(n // size)
+        return tuple(out)
+
+    @property
+    def local_shape_halo(self) -> Tuple[int, ...]:
+        return tuple(
+            n + 2 * self.halo if (self.dim_axes and self.dim_axes[d]) else n
+            for d, n in enumerate(self.local_shape)
+        )
+
+    @property
+    def decomposed(self) -> Tuple[Tuple[int, str, int], ...]:
+        """(array_dim_in_canonical_nd, mesh_axis, size) per decomposed dim.
+
+        array dim is offset by 1 for the leading component axis.
+        """
+        out = []
+        for d, ax in enumerate(self.dim_axes or ()):
+            if ax is not None:
+                out.append((d + 1, ax, self.axis_size(ax)))
+        return tuple(out)
+
+    # -- sharding --------------------------------------------------------------
+
+    def spec(self) -> P:
+        """PartitionSpec for canonical (ncomp, *lattice) arrays."""
+        return P(None, *(self.dim_axes or (None,) * len(self.global_shape)))
+
+    def sharding(self) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec())
+
+    # -- halo ops (inside shard_map) --------------------------------------------
+
+    def exchange(self, x_local: jax.Array) -> jax.Array:
+        """Fill halos of a local (ncomp, *local_shape_halo) array."""
+        return _halo.exchange(x_local, self.decomposed, width=self.halo)
+
+    def add_halo(self, x_local: jax.Array) -> jax.Array:
+        """Interior -> halo'd local array (halo values undefined until
+        exchange)."""
+        pads = [(0, 0)] * x_local.ndim
+        for dim, _, _ in self.decomposed:
+            pads[dim] = (self.halo, self.halo)
+        return jnp.pad(x_local, pads)
+
+    def strip_halo(self, x_local: jax.Array) -> jax.Array:
+        idx = [slice(None)] * x_local.ndim
+        for dim, _, _ in self.decomposed:
+            idx[dim] = slice(self.halo, x_local.shape[dim] - self.halo)
+        return x_local[tuple(idx)]
+
+    @property
+    def nsites_local(self) -> int:
+        return math.prod(self.local_shape)
+
+    @property
+    def nsites_global(self) -> int:
+        return math.prod(self.global_shape)

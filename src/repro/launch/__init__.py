@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, dry-run lowering, roofline analysis,
+train/serve entry points."""

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax-importing statement — jax locks
+the device count at first backend init; the dry-run (and only the
+dry-run) needs 512 placeholder host devices so jax.make_mesh can build
+the production meshes (16x16 single-pod, 2x16x16 multi-pod).
+
+Per cell this lowers the *production* step function:
+  train_*    build_train_step (remat + optimizer + FSDP/TP/SP shardings)
+  prefill_*  forward (blockwise attention for 32k)
+  decode_*   decode_step against a full-length cache
+then ``.lower().compile()`` and records memory_analysis / cost_analysis /
+parsed collective bytes into a JSON row for the roofline report.
+
+Loop-exact costs: XLA's HloCostAnalysis counts a while-loop body ONCE, so
+a scanned-layers module under-reports FLOPs/bytes by ~n_layers.  Each cell
+is therefore additionally lowered at n_layers=1 and n_layers=2 (same
+widths) and the per-layer delta is extrapolated:
+    total(L) = cost(L1) + (L - 1) * (cost(L2) - cost(L1))
+which is exact for scan (identical body per iteration) and needs no
+HLO-text loop heuristics.  The FULL config is still compiled — that
+compile is the runnability proof and supplies memory_analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k \
+      --mesh single --out out.json
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape, shape_supported
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    batch_sharding,
+    cache_plan,
+    opt_plan,
+    params_plan,
+    rules_for,
+    sds,
+    train_batch_plan,
+)
+from repro.models import decode_step, forward
+from repro.train.optimizer import OptConfig, opt_kind_for
+from repro.train.sharding import set_rules
+from repro.train.train_step import TrainConfig, build_train_step
+
+
+def _lower_one(cfg: ArchConfig, shape: ShapeCfg, mesh, opt_kind: str):
+    """Lower + compile one config; return (compiled, lowered)."""
+    set_rules(rules_for(cfg, shape, mesh))
+    p_sds, pspecs, pshard = params_plan(cfg, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            from repro import tuning as _tuning
+            ocfg = OptConfig(kind=opt_kind)
+            tcfg = TrainConfig(opt=ocfg,
+                               microbatches=_tuning.get().microbatches)
+            o_sds, oshard = opt_plan(cfg, p_sds, pspecs, mesh, ocfg)
+            b_sds, bshard = train_batch_plan(cfg, shape, mesh)
+            step = build_train_step(cfg, tcfg)
+            fn = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, None, bshard),
+                out_shardings=(pshard, oshard, None, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(p_sds, o_sds, None, b_sds)
+        elif shape.kind == "prefill":
+            b_sds, bshard = train_batch_plan(cfg, shape, mesh,
+                                             with_labels=False)
+
+            def prefill(params, batch):
+                logits, _ = forward(params, cfg, batch)
+                return logits
+
+            fn = jax.jit(prefill, in_shardings=(pshard, bshard))
+            lowered = fn.lower(p_sds, b_sds)
+        else:  # decode
+            c_sds, cshard = cache_plan(cfg, shape, mesh)
+            bdp = batch_sharding(shape, mesh)
+            tok_sds = sds((shape.global_batch,), jnp.int32)
+            tok_shard = NamedSharding(mesh, P(bdp))
+
+            def serve_step(params, cache, tokens):
+                return decode_step(params, cfg, cache, tokens)
+
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, tok_shard),
+                out_shardings=(None, cshard),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(p_sds, c_sds, tok_sds)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _reduced(cfg: ArchConfig, n: int) -> ArchConfig:
+    kw = {"n_layers": n}
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = n
+    return dataclasses.replace(cfg, **kw)
+
+
+def _cost_and_coll(compiled, mesh):
+    cost = compiled.cost_analysis()
+    coll = RL.parse_collectives(compiled.as_text(),
+                                default_group=mesh.shape["model"],
+                                loop_multiplier=1)
+    return cost, coll
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh_kind: str,
+               smoke: bool = False, exact_loops: bool = True,
+               variant: str = None):
+    from repro import tuning
+    tuning.reset()
+    if variant:
+        tuning.set_tuning(**tuning.parse_variant(variant))
+    cfg = get_arch(arch_id, smoke=smoke)
+    shape = get_shape(shape_name)
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why,
+                "variant": variant or "baseline"}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    opt_kind = opt_kind_for(cfg.name, cfg.param_count())
+
+    t0 = time.time()
+    compiled = _lower_one(cfg, shape, mesh, opt_kind)   # the runnability proof
+    t_full = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    if exact_loops and cfg.n_layers > 1:
+        from repro import probe
+        probe.set_probe(True)
+        try:
+            c1 = _lower_one(_reduced(cfg, 1), shape, mesh, opt_kind)
+            c2 = _lower_one(_reduced(cfg, 2), shape, mesh, opt_kind)
+        finally:
+            probe.set_probe(False)
+        cost1, coll1 = _cost_and_coll(c1, mesh)
+        cost2, coll2 = _cost_and_coll(c2, mesh)
+        L = cfg.n_layers
+
+        def extrap(a, b):
+            # clamp the per-layer delta at 0: GSPMD occasionally picks a
+            # different strategy at L=1 vs L=2 (e.g. replicating a small
+            # model), which would otherwise extrapolate negative traffic
+            return max(a, a + (L - 1) * max(0.0, b - a))
+
+        cost = {
+            "flops": extrap(cost1.get("flops", 0.0), cost2.get("flops", 0.0)),
+            "bytes accessed": extrap(cost1.get("bytes accessed", 0.0),
+                                     cost2.get("bytes accessed", 0.0)),
+        }
+        coll = {k: extrap(coll1.get(k, 0.0), coll2.get(k, 0.0))
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute", "total_bytes")}
+        coll["raw_count"] = coll1.get("raw_count", 0)
+        cost_method = "L1/L2 extrapolation"
+    else:
+        cost, coll = _cost_and_coll(compiled, mesh)
+        cost_method = "direct (body counted once!)"
+
+    terms = RL.terms_from(cost, coll)
+    n_dev = mesh.devices.size
+    mf_total = RL.model_flops(cfg, shape)
+    row = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "variant": variant or "baseline",
+        "devices": int(n_dev),
+        "compile_s": round(t_full, 1),
+        "cost_method": cost_method,
+        "memory": {
+            "args_bytes": int(mem.argument_size_in_bytes),
+            "out_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "live_per_device_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+                / 2**30, 3),
+        },
+        "roofline": terms.as_dict(),
+        "collectives": {k: coll.get(k, 0.0) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute", "raw_count")},
+        "model_flops_total": mf_total,
+        "model_flops_per_device": mf_total / n_dev,
+        "useful_flops_ratio": (mf_total / n_dev) / max(terms.flops, 1.0),
+    }
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--smoke-arch", action="store_true",
+                    help="use the reduced config (debugging the harness)")
+    ap.add_argument("--no-exact-loops", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="perf knobs, e.g. remat=dots,kv_block=2048")
+    args = ap.parse_args(argv)
+
+    try:
+        row = lower_cell(args.arch, args.shape, args.mesh,
+                         smoke=args.smoke_arch,
+                         exact_loops=not args.no_exact_loops,
+                         variant=args.variant)
+    except Exception as e:
+        row = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+
+    print(json.dumps(row, indent=2))
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    return 0 if row["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Production mesh construction (16x16 per pod; 2 pods multi-pod).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (jax locks the device count on first backend
+init, and tests/benches must see the single real CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that compose the data-parallel (batch) dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for ax in batch_axes(mesh):
+        n *= mesh.shape[ax]
+    return n

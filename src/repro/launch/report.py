@@ -1,0 +1,114 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.jsonl.
+
+  PYTHONPATH=src python -m repro.launch.report [--results results/dryrun.jsonl]
+prints the §Dry-run and §Roofline markdown tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+
+
+def load(path):
+    rows = OrderedDict()
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except Exception:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("variant", "baseline"))
+        if key in rows and rows[key].get("status") in ("ok", "skipped") \
+                and r.get("status") not in ("ok", "skipped"):
+            continue  # keep the successful row over a later crash duplicate
+        rows[key] = r
+    return rows
+
+
+def fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b/2**30:.1f}G"
+    if b >= 2**20:
+        return f"{b/2**20:.1f}M"
+    return f"{b/2**10:.0f}K"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | HBM live/dev | compile | collectives (AG/AR/RS/A2A/CP count) |",
+           "|---|---|---|---|---|---|---|"]
+    for (a, s, m, v), r in rows.items():
+        if v != "baseline":
+            continue
+        if r["status"] == "ok":
+            mem = f"{r['memory']['live_per_device_gib']:.2f} GiB"
+            comp = f"{r.get('compile_s', 0):.0f}s"
+            c = r["collectives"]
+            cc = f"n={c.get('raw_count', 0)}"
+            out.append(f"| {a} | {s} | {m} | ok | {mem} | {comp} | {cc} |")
+        elif r["status"] == "skipped":
+            reason = r.get("reason", "")[:60]
+            out.append(f"| {a} | {s} | {m} | skip | — | — | {reason} |")
+        else:
+            out.append(f"| {a} | {s} | {m} | **{r['status']}** | — | — | "
+                       f"{r.get('error', '')[:60]} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m, v), r in rows.items():
+        if m != "single" or v != "baseline" or r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        # roofline fraction: ideal compute-bound time over the modeled step
+        frac = t["compute_s"] / step if step else 0.0
+        out.append(
+            f"| {a} | {s} | {t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | {t['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | {frac:.3f} |")
+    return "\n".join(out)
+
+
+def variants_table(rows):
+    out = ["| arch | shape | variant | compute s | memory s | collective s | dominant |",
+           "|---|---|---|---|---|---|---|"]
+    have = False
+    for (a, s, m, v), r in rows.items():
+        if r["status"] != "ok":
+            continue
+        if v == "baseline" and not any(k[0] == a and k[1] == s and k[3] != "baseline" for k in rows):
+            continue
+        t = r["roofline"]
+        out.append(f"| {a} | {s} | {v} | {t['compute_s']:.4f} | "
+                   f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+                   f"{t['dominant']} |")
+        have = True
+    return "\n".join(out) if have else "(no variants yet)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.jsonl")
+    ap.add_argument("--section", default="all",
+                    choices=("all", "dryrun", "roofline", "variants"))
+    args = ap.parse_args()
+    rows = load(args.results)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run\n")
+        print(dryrun_table(rows))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod)\n")
+        print(roofline_table(rows))
+        print()
+    if args.section in ("all", "variants"):
+        print("### Perf variants\n")
+        print(variants_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e model).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = per-device collective bytes (ring-factored) / link_bw
+
+``cost_analysis()`` on an SPMD executable reports per-device module
+FLOPs/bytes, so no further division by chip count is needed.  Collective
+bytes are not in cost_analysis: we parse the optimized HLO text, sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, apply ring factors (all-reduce 2(n-1)/n,
+all-gather & reduce-scatter (n-1)/n, permute/all-to-all 1), and multiply
+collectives inside while-loop bodies by the loop trip count (scan-over-
+layers executes its body collectives n_layers times — a static text parse
+sees them once).  Trip counts are matched per while body; when the parse
+cannot associate a body with a count it falls back to the supplied
+default multiplier and says so.
+
+Hardware constants (v5e): 197 TFLOP/s bf16 per chip; 819 GB/s HBM;
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a possibly-tuple HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / max(n, 1)
+    if kind in ("all-gather", "reduce-scatter"):
+        return 1.0 * (n - 1) / max(n, 1)
+    return 1.0
+
+
+def parse_collectives(hlo_text: str, *, default_group: int = 16,
+                      loop_multiplier: int = 1) -> Dict[str, float]:
+    """Sum per-device collective bytes (ring-factored) by kind.
+
+    Collectives inside while-loop body computations are multiplied by
+    ``loop_multiplier`` (the scan trip count, e.g. n_layers).
+    """
+    out = {k: 0.0 for k in _COLL_KINDS}
+    out["raw_count"] = 0
+    # Split into computations: lines like "%name (...) -> ... {" or
+    # "ENTRY %name ...".  Track whether current computation is a loop body.
+    current_is_body = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.endswith("{") and ("(" in ls):
+            name = ls.split("(")[0].strip().lstrip("%")
+            current_is_body = bool(re.search(r"body|while", name))
+            continue
+        for kind in _COLL_KINDS:
+            # match "kind(" or "kind-start(" as the instruction opcode
+            if re.search(rf"= *\S+ {re.escape(kind)}(-start)?\(", ls):
+                shape_str = ls.split("=", 1)[1].split(kind)[0]
+                nbytes = _shape_bytes(shape_str)
+                n = _group_size(ls, default_group)
+                mult = loop_multiplier if current_is_body else 1
+                out[kind] += nbytes * _ring_factor(kind, n) * mult
+                out["raw_count"] += 1
+                break
+    out["total_bytes"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.bytes_hbm,
+            "collective_bytes_per_device": self.bytes_collective,
+        }
+
+
+def terms_from(cost: Dict, coll: Dict, *, peak=PEAK_FLOPS_BF16,
+               hbm=HBM_BW, link=ICI_LINK_BW) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total_bytes", 0.0))
+    return RooflineTerms(
+        compute_s=flops / peak,
+        memory_s=nbytes / hbm,
+        collective_s=cbytes / link,
+        flops=flops,
+        bytes_hbm=nbytes,
+        bytes_collective=cbytes,
+    )
+
+
+def model_flops(arch, shape) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), D = tokens/step.
+
+    For decode shapes D = global_batch (one token each); training counts
+    the full batch x seq.  Per-device value (divided by chip count) is
+    reported alongside for direct comparison with cost_analysis numbers.
+    """
+    n_active = arch.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token each

@@ -1,0 +1,168 @@
+"""Input specs and sharding plans per (arch x shape x mesh) dry-run cell.
+
+Everything here is ShapeDtypeStruct-based (the shannon/kernels pattern):
+weak-type-correct, shardable, zero device allocation.  Parameter and
+optimizer shapes come from jax.eval_shape over the real init functions, so
+the dry-run lowers exactly the production step functions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import init_cache, init_params
+from repro.train.optimizer import OptConfig, init_opt, opt_specs
+from repro.train.sharding import DEFAULT_RULES
+from .mesh import batch_axes, dp_size
+
+N_IMG_TOKENS = 256  # vlm stub: patch embeddings spliced at sequence head
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def resolve_spec(spec: P, leaf, mesh) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim
+    (jit input shardings are strict about divisibility; odd vocabs like
+    49155 or 256206 fall back to replicated on that dim)."""
+    entries = list(tuple(spec)) + [None] * (len(leaf.shape) - len(tuple(spec)))
+    out = []
+    for dim, entry in zip(leaf.shape, entries):
+        out.append(entry if dim % _axes_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def resolve_tree(specs, sds_tree, mesh):
+    """resolve_spec over a whole (specs, shapes) tree pair."""
+    return jax.tree_util.tree_map(
+        lambda s, l: resolve_spec(s, l, mesh), specs, sds_tree,
+        is_leaf=lambda t: isinstance(t, P),
+    )
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeCfg, mesh) -> Dict:
+    bdp = batch_axes(mesh)
+    r = dict(DEFAULT_RULES)
+    r["batch"] = bdp if shape.global_batch % dp_size(mesh) == 0 else None
+    # Megatron-style sequence parallelism for training activations: the
+    # remat-saved scan carries shrink by the TP degree (required to fit
+    # deepseek-67b train_4k in HBM).
+    from repro import tuning as _tuning
+    r["seq"] = "model" if (shape.kind == "train"
+                           and _tuning.get().seq_shard) else None
+    # Megatron-style: q rows seq-sharded inside attention (k/v full) keeps
+    # the S^2 score block sharded by the TP degree
+    r["seq_q"] = "model" if (_tuning.get().attn_seq_shard
+                             and shape.kind in ("train", "prefill")) else None
+    # logits/cotangent sharding: vocab over "model" unless seq already
+    # rides "model" (a spec may not use one mesh axis twice)
+    r["logits_vocab"] = None if r["seq"] == "model" else "model"
+    r["kv_heads"] = "model" if (cfg.n_kv_heads and cfg.n_kv_heads % mesh.shape["model"] == 0) else None
+    return r
+
+
+def batch_sharding(shape: ShapeCfg, mesh):
+    bdp = batch_axes(mesh)
+    return bdp if shape.global_batch % dp_size(mesh) == 0 else None
+
+
+def params_plan(cfg: ArchConfig, mesh):
+    """(param ShapeDtypeStructs, param PartitionSpecs, NamedShardings)."""
+    from repro.train.sharding import param_specs
+
+    p_sds = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = resolve_tree(param_specs(p_sds), p_sds, mesh)
+    shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    return p_sds, pspecs, shard
+
+
+def train_batch_plan(cfg: ArchConfig, shape: ShapeCfg, mesh,
+                     with_labels: bool = True):
+    B, S = shape.global_batch, shape.seq_len
+    bdp = batch_sharding(shape, mesh)
+    specs: Dict[str, Tuple] = {
+        "tokens": (sds((B, S), jnp.int32), P(bdp, None)),
+    }
+    if with_labels:
+        specs["labels"] = (sds((B, S), jnp.int32), P(bdp, None))
+    if cfg.family == "vlm":
+        specs["image_embeds"] = (
+            sds((B, N_IMG_TOKENS, cfg.d_model), jnp.bfloat16),
+            P(bdp, None, None),
+        )
+        specs["positions"] = (sds((3, B, S), jnp.int32), P(None, bdp, None))
+    if cfg.enc_dec:
+        specs["frames"] = (
+            sds((B, S, cfg.d_model), jnp.bfloat16), P(bdp, None, None)
+        )
+    batch_sds = {k: v[0] for k, v in specs.items()}
+    batch_shard = {
+        k: NamedSharding(mesh, v[1]) for k, v in specs.items()
+    }
+    return batch_sds, batch_shard
+
+
+def cache_plan(cfg: ArchConfig, shape: ShapeCfg, mesh):
+    """Cache ShapeDtypeStructs + shardings for a decode cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bdp = batch_sharding(shape, mesh)
+    kv_div = cfg.n_kv_heads and cfg.n_kv_heads % mesh.shape["model"] == 0
+
+    cache_sds = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, s_enc=S),
+    )
+
+    def spec_for(path_key: str, leaf) -> P:
+        nd = len(leaf.shape)
+        if path_key in ("k", "v", "mem_k", "mem_v"):
+            # (L, B, S, KV, dh): heads over model when divisible, else the
+            # sequence axis carries the model shard (decode caches dominate
+            # HBM at 32k/500k; they must shard over the full mesh).
+            if kv_div:
+                return P(None, bdp, None, "model", None)
+            return P(None, bdp, "model", None, None)
+        if path_key == "wkv":      # (L, B, H, dk, dv)
+            return P(None, bdp, "model", None, None)
+        if path_key == "ssm_h":    # (L, B, di, ds)
+            return P(None, bdp, "model", None)
+        if path_key == "conv":     # (L, B, K-1, di)
+            return P(None, bdp, None, "model")
+        if path_key in ("att_xprev", "ffn_xprev"):  # (L, B, d)
+            return P(None, bdp, "model")
+        return P(*((None,) * nd))
+
+    cache_specs = {k: spec_for(k, v) if hasattr(v, "shape") else P()
+                   for k, v in cache_sds.items()}
+    cache_specs = resolve_tree(cache_specs, cache_sds, mesh)
+    cache_shard = {k: NamedSharding(mesh, s) for k, s in cache_specs.items()}
+    return cache_sds, cache_shard
+
+
+def opt_plan(cfg: ArchConfig, p_sds, pspecs, mesh, ocfg: OptConfig):
+    o_sds = jax.eval_shape(lambda p: init_opt(p, ocfg), p_sds)
+    ospecs = resolve_tree(opt_specs(pspecs, p_sds, ocfg), o_sds, mesh)
+    oshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), ospecs,
+        is_leaf=lambda t: isinstance(t, P),
+    )
+    return o_sds, oshard

@@ -1,0 +1,1 @@
+"""Shared numerical building blocks (lattice models, SU(3)/Dirac algebra)."""

@@ -1,0 +1,38 @@
+"""D3Q19 lattice-Boltzmann model constants (Ludwig's velocity set).
+
+19 discrete velocities on a 3-D lattice: rest particle, 6 face neighbours,
+12 edge neighbours.  cs^2 = 1/3 lattice units.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NVEL = 19
+CS2 = 1.0 / 3.0
+
+# velocity vectors c_i (Ludwig ordering: rest first, then faces, then edges)
+CV = np.array(
+    [
+        (0, 0, 0),
+        (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1),
+        (1, 1, 0), (1, -1, 0), (-1, 1, 0), (-1, -1, 0),
+        (1, 0, 1), (1, 0, -1), (-1, 0, 1), (-1, 0, -1),
+        (0, 1, 1), (0, 1, -1), (0, -1, 1), (0, -1, -1),
+    ],
+    dtype=np.int32,
+)
+
+# quadrature weights
+WV = np.array(
+    [1.0 / 3.0]
+    + [1.0 / 18.0] * 6
+    + [1.0 / 36.0] * 12,
+    dtype=np.float64,
+)
+
+assert CV.shape == (NVEL, 3)
+assert abs(WV.sum() - 1.0) < 1e-12
+# lattice tensor identities: sum_i w_i c_ia c_ib = cs2 * delta_ab
+_t = np.einsum("i,ia,ib->ab", WV, CV, CV)
+assert np.allclose(_t, CS2 * np.eye(3), atol=1e-12)

@@ -1,0 +1,9 @@
+"""LM model zoo for the assigned architectures, built on the substrate.
+
+All models are functional JAX: ``init_params(cfg, key)`` -> pytree;
+forward passes are pure functions with logical-axis sharding annotations
+(repro.train.sharding).  Layers are stacked (leading n_layers axis) and
+iterated with jax.lax.scan for O(1)-in-depth compile time.
+"""
+
+from .model_factory import init_params, forward, decode_step, init_cache  # noqa: F401

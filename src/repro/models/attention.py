@@ -1,0 +1,308 @@
+"""GQA attention with RoPE / M-RoPE, sliding windows, KV cache decode, and
+blockwise (memory-efficient) attention for long sequences.
+
+Grouped-query attention never materialises repeated K/V: queries are
+reshaped to (B, S, KV, rep, dh) and contracted against grouped keys — at
+decode_32k cache sizes a materialised repeat would be ~8x the cache
+footprint, far past HBM.
+
+Blockwise attention is the pure-JAX flash pattern: lax.map over query
+blocks, lax.scan over KV blocks with an online-softmax carry — O(S) memory
+instead of O(S^2), which is what lets prefill_32k lower within HBM.  On
+TPU the XLA fusion of the inner block is MXU-shaped (block x head_dim
+matmuls); a hand-tiled pallas flash kernel is a further hillclimb step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.sharding import lconstraint
+from repro import probe, tuning
+from . import layers
+
+NEG_INF = -1e30
+
+# blockwise thresholds (hillclimb-tunable)
+BLOCKWISE_MIN_SEQ = 8192
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+# -- RoPE -------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, theta: float,
+                 sections: Optional[Tuple[int, int, int]] = None):
+    """cos/sin tables.
+
+    positions: (B, S) int32, or (3, B, S) for M-RoPE with ``sections``
+    (temporal/height/width frequency splits, qwen2-vl).
+    Returns cos, sin of shape (B, S, half).
+    """
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if sections is None:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, half)
+    else:
+        assert sum(sections) == half, (sections, half)
+        parts = []
+        off = 0
+        for i, sec in enumerate(sections):
+            p = positions[i].astype(jnp.float32)[..., None]   # (B, S, 1)
+            parts.append(p * inv[off : off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B, S, half) -> rotated x (rotate-half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# -- parameter init ------------------------------------------------------------------
+
+def init_attn(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              dtype, qk_norm: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": layers.dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": layers.dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": layers.dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": layers.dense_init(
+            ks[3], (n_heads * head_dim, d_model), dtype, fan_in=n_heads * head_dim
+        ),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, qk_norm):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    if qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"]["scale"])
+        k = layers.rmsnorm(k, p["k_norm"]["scale"])
+    return q, k, v
+
+
+def _group_q(q, n_kv_heads):
+    """(B, S, H, dh) -> (B, S, KV, rep, dh)."""
+    B, S, H, dh = q.shape
+    return q.reshape(B, S, n_kv_heads, H // n_kv_heads, dh)
+
+
+# -- dense (short-seq) path ------------------------------------------------------------
+
+def _mask_ok(S_q, S_k, *, causal: bool, window, q_offset=0):
+    """(S_q, S_k) boolean visibility.  window <= 0 means unlimited; window
+    may be a traced scalar (hybrid per-layer windows under scan)."""
+    qi = jnp.arange(S_q)[:, None] + q_offset
+    kj = jnp.arange(S_k)[None, :]
+    ok = jnp.ones((S_q, S_k), bool)
+    if causal:
+        ok = ok & (kj <= qi)
+    win = jnp.asarray(window)
+    ok = ok & ((win <= 0) | (qi - kj < win))
+    return ok
+
+
+def _dense_gqa_fast(q, k, v, ok):
+    """Transpose-free formulation: the (S, dh)-sized bf16 operands are
+    pre-transposed once (MBs) so no S^2 fp32 tensor is ever re-laid-out
+    (the baseline einsum order costs ~8 x 2 GiB fp32 transposes per layer
+    at train_4k, measured from the lowered HLO); the mask enters as a
+    small additive bias instead of an S^2 select; the probability matrix
+    is cast to bf16 for the PV contraction (halves its read traffic)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qt = q.transpose(0, 2, 3, 1, 4)          # (B, KV, rep, Sq, dh) bf16
+    kt = k.transpose(0, 2, 3, 1)             # (B, KV, dh, Sk) bf16
+    vt = v.transpose(0, 2, 1, 3)             # (B, KV, Sk, dh) bf16
+    s = jnp.einsum("bgrqd,bgdk->bgrqk", qt, kt).astype(jnp.float32) * scale
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # (Sq, Sk)
+    s = s + bias[None, None, None]
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", w, vt)
+    return o.transpose(0, 3, 1, 2, 4)        # (B, Sq, KV, rep, dh)
+
+
+def _dense_gqa(q, k, v, ok):
+    """q: (B, Sq, KV, rep, dh), k/v: (B, Sk, KV, dh), ok: (Sq, Sk) bool."""
+    if tuning.get().attn_fast:
+        return _dense_gqa_fast(q, k, v, ok)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if tuning.get().scores_bf16 and q.dtype == jnp.bfloat16:
+        # bf16 score traffic, fp32 max/denominator statistics: halves the
+        # dominant S^2 HBM stream while keeping softmax normalization exact
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", q, k) * jnp.bfloat16(scale)
+        s = jnp.where(ok[None, None, None], s, jnp.bfloat16(-3e38))
+        m = jax.lax.stop_gradient(
+            s.max(axis=-1, keepdims=True).astype(jnp.float32))
+        p = jnp.exp((s.astype(jnp.float32) - m).astype(jnp.bfloat16)
+                    .astype(jnp.float32)).astype(jnp.bfloat16)
+        denom = p.astype(jnp.float32).sum(axis=-1, keepdims=True)
+        w = (p.astype(jnp.float32) / denom).astype(q.dtype)
+        return jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+
+
+# -- blockwise (long-seq) path -----------------------------------------------------------
+
+def _blockwise_gqa(q, k, v, *, causal: bool, window):
+    """Online-softmax attention, O(S) memory.
+    q: (B, S, KV, rep, dh); k/v: (B, S, KV, dh)."""
+    B, S, KV, rep, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    tqb, tkb = tuning.get().q_block, tuning.get().kv_block
+    qb = tqb if S % tqb == 0 else S
+    kb = tkb if S % tkb == 0 else S
+    nq, nk = S // qb, S // kb
+    qs = q.reshape(B, nq, qb, KV, rep, dh)
+    ks = k.reshape(B, nk, kb, KV, dh)
+    vs = v.reshape(B, nk, kb, KV, dh)
+    win = jnp.asarray(window)
+
+    def q_block(qi):
+        qblk = qs[:, qi]  # (B, qb, KV, rep, dh)
+        q_off = qi * qb
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk = ks[:, ki]
+            vblk = vs[:, ki]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk).astype(jnp.float32) * scale
+            qi_ix = q_off + jnp.arange(qb)[:, None]
+            kj_ix = ki * kb + jnp.arange(kb)[None, :]
+            ok = jnp.ones((qb, kb), bool)
+            if causal:
+                ok = ok & (kj_ix <= qi_ix)
+            ok = ok & ((win <= 0) | (qi_ix - kj_ix < win))
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            upd = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v.dtype), vblk)
+            acc_new = acc * corr[..., None] + upd.astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, rep, qb, dh), jnp.float32)
+        m0 = jnp.full((B, KV, rep, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, qb), jnp.float32)
+        if probe.probing():  # unrolled for exact cost analysis
+            carry = (acc0, m0, l0)
+            for ki in range(nk):
+                carry, _ = kv_step(carry, ki)
+            acc, m, l = carry
+        else:
+            (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                          jnp.arange(nk))
+        # (B, KV, rep, qb, dh) -> (B, qb, KV, rep, dh)
+        return (acc / l[..., None]).astype(q.dtype).transpose(0, 3, 1, 2, 4)
+
+    if probe.probing():
+        out = jnp.stack([q_block(qi) for qi in range(nq)])
+    else:
+        out = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, qb, KV, rep, dh)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, rep, dh)
+    return out
+
+
+# -- public entry points --------------------------------------------------------------
+
+def attention(p, x, cos, sin, *, n_heads, n_kv_heads, head_dim,
+              causal: bool = True, window=0, qk_norm: bool = False):
+    """Full-sequence attention (train/prefill).  x: (B, S, d).
+    Returns (out (B, S, d), (k, v) for cache seeding)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, qk_norm)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # "seq_attn" is distinct from "seq": under Megatron-style sequence
+    # parallelism the between-block activations are seq-sharded but
+    # attention itself needs the full sequence per (sharded) head group.
+    q = lconstraint(q, "batch", "seq_q", "kv_heads", None)
+    k = lconstraint(k, "batch", "seq_attn", "kv_heads", None)
+    v = lconstraint(v, "batch", "seq_attn", "kv_heads", None)
+    qg = _group_q(q, n_kv_heads)
+
+    if S >= BLOCKWISE_MIN_SEQ:
+        out = _blockwise_gqa(qg, k, v, causal=causal, window=window)
+    else:
+        ok = _mask_ok(S, S, causal=causal, window=window)
+        out = _dense_gqa(qg, k, v, ok)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return out @ p["wo"], (k, v)
+
+
+def decode_attention(p, x1, cache_k, cache_v, pos, cos1, sin1, *,
+                     n_heads, n_kv_heads, head_dim, window=0,
+                     qk_norm: bool = False):
+    """Single-token decode.  x1: (B, 1, d); cache_k/v: (B, S_max, KV, dh);
+    pos: scalar int32 current position.  Returns (out (B, 1, d), new caches).
+    """
+    B = x1.shape[0]
+    S_max = cache_k.shape[1]
+    q, k1, v1 = _project_qkv(p, x1, n_heads, n_kv_heads, head_dim, qk_norm)
+    if cos1 is not None:
+        q = apply_rope(q, cos1, sin1)
+        k1 = apply_rope(k1, cos1, sin1)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k1.astype(cache_k.dtype), (0, pos, 0, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v1.astype(cache_v.dtype), (0, pos, 0, 0)
+    )
+    qg = _group_q(q, n_kv_heads)  # (B, 1, KV, rep, dh)
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg, cache_k.astype(qg.dtype)
+    ).astype(jnp.float32) * scale
+    kj = jnp.arange(S_max)
+    ok = kj <= pos
+    win = jnp.asarray(window)
+    ok = ok & ((win <= 0) | (pos - kj < win))
+    scores = jnp.where(ok[None, None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x1.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, cache_v.astype(w.dtype))
+    out = out.reshape(B, 1, n_heads * head_dim)
+    return out @ p["wo"], cache_k, cache_v
+
+
+def cross_attention(p, x, mem_k, mem_v, *, n_heads, n_kv_heads, head_dim):
+    """Decoder cross-attention over precomputed encoder memory K/V
+    (B, S_enc, KV, dh).  No RoPE on cross attention."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    qg = _group_q(q, n_kv_heads)
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, mem_k.astype(qg.dtype))
+    scores = scores.astype(jnp.float32) * scale
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, mem_v.astype(w.dtype))
+    out = out.reshape(B, S, n_heads * head_dim)
+    return out @ p["wo"]
+
+
+def mem_kv(p, mem, *, n_kv_heads, head_dim):
+    """Project encoder memory to cross-attention K/V once."""
+    B, S, _ = mem.shape
+    k = (mem @ p["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = (mem @ p["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    return k, v

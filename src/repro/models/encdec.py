@@ -1,0 +1,184 @@
+"""Encoder-decoder stack (seamless-m4t backbone).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs`` feeds
+precomputed audio-frame embeddings (B, S_enc, d_model) straight into the
+encoder.  The decoder is a standard causal stack with per-layer cross-
+attention over the encoder memory; serving precomputes the cross K/V once
+("encoder KV cache") and then decodes against a growing self cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.train.sharding import lconstraint
+from . import attention as attn
+from repro import probe, tuning
+from . import layers
+
+
+def _init_enc_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.dtype
+    return {
+        "norm1": layers.init_norm(ks[0], d, cfg.norm, dt),
+        "attn": attn.init_attn(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dt),
+        "norm2": layers.init_norm(ks[2], d, cfg.norm, dt),
+        "mlp": layers.init_mlp(ks[3], d, cfg.d_ff, dt, cfg.mlp_gated),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    d, dt = cfg.d_model, cfg.dtype
+    return {
+        "norm1": layers.init_norm(ks[0], d, cfg.norm, dt),
+        "attn": attn.init_attn(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dt),
+        "norm_x": layers.init_norm(ks[2], d, cfg.norm, dt),
+        "xattn": attn.init_attn(ks[3], d, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, dt),
+        "norm2": layers.init_norm(ks[4], d, cfg.norm, dt),
+        "mlp": layers.init_mlp(ks[5], d, cfg.d_ff, dt, cfg.mlp_gated),
+    }
+
+
+def init_encdec(cfg: ArchConfig, key):
+    kse = jax.random.split(key, cfg.n_enc_layers)
+    ksd = jax.random.split(jax.random.fold_in(key, 1), cfg.n_layers)
+    enc = [_init_enc_block(k, cfg) for k in kse]
+    dec = [_init_dec_block(k, cfg) for k in ksd]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    k2 = jax.random.fold_in(key, 2)
+    return {
+        "tok": layers.init_embed(k2, cfg.padded_vocab, cfg.d_model,
+                                 cfg.dtype, cfg.tie_embeddings),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_norm_f": layers.init_norm(jax.random.fold_in(key, 3), cfg.d_model,
+                                       cfg.norm, cfg.dtype),
+        "norm_f": layers.init_norm(jax.random.fold_in(key, 4), cfg.d_model,
+                                   cfg.norm, cfg.dtype),
+    }
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, S_enc, d_model) stub embeddings -> encoder memory."""
+    B, S, _ = frames.shape
+    x = frames.astype(cfg.dtype)
+    x = lconstraint(x, "batch", "seq", "embed")
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = attn.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+
+    def body(x, bp):
+        h = layers.apply_norm(bp["norm1"], x, cfg.norm)
+        ao, _ = attn.attention(bp["attn"], h, cos, sin, n_heads=cfg.n_heads,
+                               n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                               causal=False)
+        x = x + ao
+        h2 = layers.apply_norm(bp["norm2"], x, cfg.norm)
+        x = x + layers.apply_mlp(bp["mlp"], h2, cfg.act, cfg.mlp_gated)
+        return x, None
+
+    x, _ = jax.lax.scan(tuning.checkpoint_wrap(body), x, params["enc_layers"],
+                        unroll=probe.scan_unroll())
+    return layers.apply_norm(params["enc_norm_f"], x, cfg.norm)
+
+
+def decode_train(params, cfg: ArchConfig, tokens, memory):
+    """Teacher-forced decoder. tokens (B, S_dec); memory (B, S_enc, d)."""
+    B, S = tokens.shape
+    x = layers.embed_tokens(params["tok"], tokens).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = attn.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+
+    def body(x, bp):
+        h = layers.apply_norm(bp["norm1"], x, cfg.norm)
+        ao, _ = attn.attention(bp["attn"], h, cos, sin, n_heads=cfg.n_heads,
+                               n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                               causal=True)
+        x = x + ao
+        hx = layers.apply_norm(bp["norm_x"], x, cfg.norm)
+        mk, mv = attn.mem_kv(bp["xattn"], memory, n_kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim)
+        x = x + attn.cross_attention(bp["xattn"], hx, mk, mv,
+                                     n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     head_dim=cfg.head_dim)
+        h2 = layers.apply_norm(bp["norm2"], x, cfg.norm)
+        x = x + layers.apply_mlp(bp["mlp"], h2, cfg.act, cfg.mlp_gated)
+        return x, None
+
+    x, _ = jax.lax.scan(tuning.checkpoint_wrap(body), x, params["dec_layers"],
+                        unroll=probe.scan_unroll())
+    x = layers.apply_norm(params["norm_f"], x, cfg.norm)
+    return layers.lm_logits(params["tok"], x, cfg.tie_embeddings)
+
+
+def encdec_forward(params, cfg: ArchConfig, batch: Dict):
+    memory = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], memory)
+    return logits, {"lb_loss": jnp.float32(0.0)}
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, s_max: int, s_enc: int,
+                      dtype=None):
+    dtype = dtype or cfg.dtype
+    L, B = cfg.n_layers, batch
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, B, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, B, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "mem_k": jnp.zeros((L, B, s_enc, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "mem_v": jnp.zeros((L, B, s_enc, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def seed_encdec_cache(params, cfg: ArchConfig, cache: Dict, memory):
+    """Precompute per-layer cross K/V from encoder memory (serving setup)."""
+    def body(_, bp):
+        mk, mv = attn.mem_kv(bp["xattn"], memory, n_kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim)
+        return None, (mk.astype(cache["mem_k"].dtype),
+                      mv.astype(cache["mem_v"].dtype))
+
+    _, (mk, mv) = jax.lax.scan(body, None, params["dec_layers"])
+    return dict(cache, mem_k=mk, mem_v=mv)
+
+
+def encdec_decode_step(params, cfg: ArchConfig, cache: Dict, tokens):
+    """tokens (B,) -> (logits (B, vocab), cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = layers.embed_tokens(params["tok"], tokens)[:, None, :].astype(cfg.dtype)
+    p1 = jnp.broadcast_to(pos[None, None], (B, 1))
+    cos1, sin1 = attn.rope_cos_sin(p1, cfg.head_dim, cfg.rope_theta)
+
+    def body(x, scanned):
+        bp, ck, cv, mk, mv = scanned
+        h = layers.apply_norm(bp["norm1"], x, cfg.norm)
+        ao, ck2, cv2 = attn.decode_attention(
+            bp["attn"], h, ck, cv, pos, cos1, sin1, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        )
+        x = x + ao
+        hx = layers.apply_norm(bp["norm_x"], x, cfg.norm)
+        x = x + attn.cross_attention(bp["xattn"], hx, mk, mv,
+                                     n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     head_dim=cfg.head_dim)
+        h2 = layers.apply_norm(bp["norm2"], x, cfg.norm)
+        x = x + layers.apply_mlp(bp["mlp"], h2, cfg.act, cfg.mlp_gated)
+        return x, (ck2, cv2)
+
+    xs = (params["dec_layers"], cache["k"], cache["v"],
+          cache["mem_k"], cache["mem_v"])
+    x, (k2, v2) = jax.lax.scan(body, x, xs, unroll=probe.scan_unroll())
+    x = layers.apply_norm(params["norm_f"], x[:, 0], cfg.norm)
+    logits = layers.lm_logits(params["tok"], x, cfg.tie_embeddings)
+    return logits, dict(cache, k=k2, v=v2, pos=pos + 1)

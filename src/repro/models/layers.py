@@ -1,0 +1,113 @@
+"""Shared layer primitives: norms, MLPs, embeddings, initializers."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.sharding import lconstraint
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in or shape[0]
+    std = 1.0 / math.sqrt(fan)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rmsnorm(x, scale):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + 1e-6)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_ln(x):
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+
+
+def init_norm(key, d, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    if kind == "nonparam_ln":
+        return nonparam_ln(x)
+    raise ValueError(kind)
+
+
+# -- MLP -------------------------------------------------------------------------
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def init_mlp(key, d_model, d_ff, dtype, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str, gated: bool):
+    up = x @ p["w_up"]
+    if gated:
+        h = _act(x @ p["w_gate"], act) * up
+    else:
+        h = _act(up, act)
+    h = lconstraint(h, "batch", "seq", "mlp")
+    return h @ p["w_down"]
+
+
+# -- embeddings -------------------------------------------------------------------
+
+def init_embed(key, vocab, d_model, dtype, tie: bool):
+    ks = jax.random.split(key, 2)
+    p = {"embed": dense_init(ks[0], (vocab, d_model), dtype, fan_in=d_model)}
+    if not tie:
+        p["lm_head"] = dense_init(ks[1], (d_model, vocab), dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def lm_logits(p, x, tie: bool):
+    if tie:
+        return x @ p["embed"].T
+    return x @ p["lm_head"]

@@ -1,0 +1,103 @@
+"""Mamba-style selective SSM (Hymba's parallel SSM heads).
+
+Diagonal selective state space: per channel c, state s:
+    h_t[c,s] = exp(dt_t[c] A[c,s]) h_{t-1}[c,s] + dt_t[c] B_t[s] x_t[c]
+    y_t[c]   = sum_s C_t[s] h_t[c,s] + D[c] x_t[c]
+with dt_t = softplus(proj(x) + dt_bias), A = -exp(a_log), and a depthwise
+causal conv front-end.  Sequence processing is a lax.scan carrying
+(B, d_inner, d_state) — O(1) memory in T and a single HLO loop body (the
+Pallas chunked variant is the rwkv6_scan pattern; see DESIGN.md perf
+notes).  Decode is the same update for a single step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from . import layers
+
+
+def init_ssm(key, d_model: int, cfg: SSMCfg, dtype):
+    di = cfg.expand * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": layers.dense_init(ks[0], (d_model, 2 * di), dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32).astype(dtype),
+        "w_bc": layers.dense_init(ks[2], (di, 2 * cfg.d_state), dtype),
+        "w_dt": layers.dense_init(ks[3], (di, 1), dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (di, cfg.d_state))
+        ),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": layers.dense_init(ks[5], (di, d_model), dtype, fan_in=di),
+    }
+
+
+def _conv_causal(xc, conv_w, conv_state=None):
+    """Depthwise causal conv. xc: (B, T, di); conv_w: (K, di).
+    conv_state: (B, K-1, di) carried inputs for decode."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xc.shape[0], K - 1, xc.shape[2]), xc.dtype)
+    else:
+        pad = conv_state.astype(xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)  # (B, T+K-1, di)
+    out = 0.0
+    for i in range(K):
+        out = out + xp[:, i : i + xc.shape[1]] * conv_w[i][None, None, :]
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+def _ssm_step(h, inputs):
+    """h: (B, di, ds); inputs: per-step tensors."""
+    da, dbx, c_t = inputs  # (B, di, ds), (B, di, ds), (B, ds)
+    h = jnp.exp(da) * h + dbx
+    y = jnp.einsum("bds,bs->bd", h, c_t)
+    return h, y
+
+
+def apply_ssm(p, x, cfg: SSMCfg, h0=None, conv_state=None):
+    """x: (B, T, d_model) -> (B, T, d_model), (hT, conv_stateT)."""
+    B, T, d = x.shape
+    di = cfg.expand * d
+    xz = x @ p["w_in"]
+    xc, z = xz[..., :di], xz[..., di:]
+    xc, conv_state_new = _conv_causal(xc, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    bc = xc @ p["w_bc"]                                      # (B, T, 2*ds)
+    b_t, c_t = bc[..., : cfg.d_state], bc[..., cfg.d_state :]
+    dt = jax.nn.softplus(
+        (xc @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"][None, None]
+    )                                                        # (B, T, di)
+    A = -jnp.exp(p["a_log"])                                 # (di, ds)
+
+    da = dt[..., None] * A[None, None]                       # (B, T, di, ds)
+    # (B, T, di, ds) = (dt * x) (B,T,di) outer B_t (B,T,ds)
+    dbx = (dt * xc.astype(jnp.float32))[..., :, None] * b_t.astype(jnp.float32)[..., None, :]
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, cfg.d_state), jnp.float32)
+    xs = (
+        jnp.moveaxis(da, 1, 0),
+        jnp.moveaxis(dbx, 1, 0),
+        jnp.moveaxis(c_t.astype(jnp.float32), 1, 0),
+    )
+    hT, ys = jax.lax.scan(_ssm_step, h0, xs)                 # ys: (T, B, di)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = y + xc * p["d_skip"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], (hT, conv_state_new)
+
+
+def decode_ssm(p, x1, cfg: SSMCfg, h, conv_state):
+    """Single-token decode. x1: (B, 1, d); h: (B, di, ds);
+    conv_state: (B, K-1, di)."""
+    out, (hT, conv_new) = apply_ssm(p, x1, cfg, h0=h, conv_state=conv_state)
+    return out, (hT, conv_new)

@@ -1,0 +1,39 @@
+"""Family dispatch: one entry point per lifecycle stage for every arch."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import encdec, transformer
+
+
+def init_params(cfg: ArchConfig, key):
+    if cfg.enc_dec:
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def forward(params, cfg: ArchConfig, batch: Dict, *, wkv_engine: str = "jnp"):
+    """Training/prefill forward -> (logits, aux)."""
+    if cfg.enc_dec:
+        return encdec.encdec_forward(params, cfg, batch)
+    return transformer.lm_forward(params, cfg, batch, wkv_engine=wkv_engine)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, *, s_enc: int = 0,
+               dtype=None):
+    if cfg.enc_dec:
+        return encdec.init_encdec_cache(cfg, batch, s_max, s_enc or s_max,
+                                        dtype=dtype)
+    return transformer.init_cache(cfg, batch, s_max, dtype=dtype)
+
+
+def decode_step(params, cfg: ArchConfig, cache: Dict, tokens):
+    """One token of autoregressive decode -> (logits, cache)."""
+    if cfg.enc_dec:
+        return encdec.encdec_decode_step(params, cfg, cache, tokens)
+    return transformer.lm_decode_step(params, cfg, cache, tokens)

@@ -1,0 +1,161 @@
+"""RWKV6 ("Finch") block: data-dependent-decay time mix + channel mix.
+
+The WKV recurrence runs through repro.kernels.rwkv6_scan (pallas on TPU,
+chunked jnp otherwise) — the LM-side instance of the paper's pattern: one
+kernel source, engine selected by configuration.
+
+Time-mix (per head, dk = dv = head size):
+    token-shift interpolation with learned mu per r/k/v/w/g
+    decay  w_t = exp(-exp(w0 + tanh(x_t A_w) B_w))   (LoRA-style, bounded)
+    o_t    = wkv(r, k, v, w, u)  ->  per-head groupnorm -> * silu(g) -> W_o
+Channel-mix: r = sigmoid(xr W_r); out = r * (relu(xk W_k)^2 W_v).
+Decode state per layer: (x_prev_att, x_prev_ffn, wkv state (H, dk, dv)).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import rwkv6 as wkv_op
+from repro.kernels.rwkv6_scan import rwkv6_decode_step as wkv_decode
+from . import layers
+
+LORA_R = 64
+
+
+def init_rwkv_block(key, d_model: int, d_ff: int, head_dim: int, dtype):
+    H = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    tmix = {
+        "mu": 0.5 * jnp.ones((5, d_model), jnp.float32),  # r,k,v,w,g
+        "w_r": layers.dense_init(ks[0], (d_model, d_model), dtype),
+        "w_k": layers.dense_init(ks[1], (d_model, d_model), dtype),
+        "w_v": layers.dense_init(ks[2], (d_model, d_model), dtype),
+        "w_g": layers.dense_init(ks[3], (d_model, d_model), dtype),
+        "w_o": layers.dense_init(ks[4], (d_model, d_model), dtype),
+        "decay_w0": -6.0 * jnp.ones((d_model,), jnp.float32),
+        "decay_a": layers.dense_init(ks[5], (d_model, LORA_R), dtype),
+        "decay_b": layers.dense_init(ks[6], (LORA_R, d_model), dtype),
+        "bonus": jnp.zeros((H, head_dim), jnp.float32),
+        "ln_scale": jnp.ones((d_model,), dtype),  # output groupnorm scale
+    }
+    cmix = {
+        "mu": 0.5 * jnp.ones((2, d_model), jnp.float32),  # r,k
+        "w_r": layers.dense_init(ks[7], (d_model, d_model), dtype),
+        "w_k": layers.dense_init(ks[8], (d_model, d_ff), dtype),
+        "w_v": layers.dense_init(ks[9], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    return {"tmix": tmix, "cmix": cmix}
+
+
+def _token_shift(x, x_prev):
+    """x: (B, T, d); x_prev: (B, d) last token of previous segment.
+    Returns (xx = shifted x, new x_prev)."""
+    xx = jnp.concatenate([x_prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    return xx, x[:, -1, :]
+
+
+def _heads(x, H, hd):
+    B, T, _ = x.shape
+    return x.reshape(B, T, H, hd).transpose(0, 2, 1, 3)  # (B, H, T, hd)
+
+
+def _unheads(x):
+    B, H, T, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+
+
+def _group_norm(x, scale, H, hd):
+    """Per-head layer norm on (B, T, d)."""
+    B, T, d = x.shape
+    xh = x.reshape(B, T, H, hd).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(B, T, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(p, x, x_prev, wkv_state, head_dim: int, engine: str = "jnp"):
+    """x: (B, T, d).  Returns (out, new_x_prev, new_wkv_state)."""
+    B, T, d = x.shape
+    H = d // head_dim
+    xx, x_last = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xx - x) * mu[0]
+    xk = x + (xx - x) * mu[1]
+    xv = x + (xx - x) * mu[2]
+    xw = x + (xx - x) * mu[3]
+    xg = x + (xx - x) * mu[4]
+
+    r = _heads(xr @ p["w_r"], H, head_dim)
+    k = _heads(xk @ p["w_k"], H, head_dim)
+    v = _heads(xv @ p["w_v"], H, head_dim)
+    g = xg @ p["w_g"]
+
+    # bounded data-dependent decay
+    lora = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]        # (B, T, d)
+    wlog = -jnp.exp(
+        jnp.clip(p["decay_w0"][None, None].astype(jnp.float32)
+                 + lora.astype(jnp.float32), -8.0, 1.0)
+    )
+    w = _heads(jnp.exp(wlog).astype(x.dtype), H, head_dim)   # decay in (0,1)
+
+    u = p["bonus"].astype(jnp.float32)
+    from repro import tuning as _tuning
+    o, sT = wkv_op(r, k, v, w, u, wkv_state, engine=engine,
+                   chunk=_tuning.get().rwkv_chunk)
+    o = _unheads(o)
+    o = _group_norm(o, p["ln_scale"], H, head_dim)
+    out = (o * jax.nn.silu(g)) @ p["w_o"]
+    return out, x_last, sT
+
+
+def channel_mix(p, x, x_prev):
+    xx, x_last = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xx - x) * mu[0]
+    xk = x + (xx - x) * mu[1]
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return r * (k @ p["w_v"]), x_last
+
+
+def time_mix_decode(p, x1, x_prev, wkv_state, head_dim: int):
+    """Single token: x1 (B, d)."""
+    B, d = x1.shape
+    H = d // head_dim
+    mu = p["mu"].astype(x1.dtype)
+    xx = x_prev.astype(x1.dtype)
+    xr = x1 + (xx - x1) * mu[0]
+    xk = x1 + (xx - x1) * mu[1]
+    xv = x1 + (xx - x1) * mu[2]
+    xw = x1 + (xx - x1) * mu[3]
+    xg = x1 + (xx - x1) * mu[4]
+    hshape = lambda t: t.reshape(B, H, head_dim)
+    r = hshape(xr @ p["w_r"])
+    k = hshape(xk @ p["w_k"])
+    v = hshape(xv @ p["w_v"])
+    g = xg @ p["w_g"]
+    lora = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    wlog = -jnp.exp(jnp.clip(p["decay_w0"].astype(jnp.float32)
+                             + lora.astype(jnp.float32), -8.0, 1.0))
+    w = hshape(jnp.exp(wlog).astype(x1.dtype))
+    u = p["bonus"].astype(jnp.float32)
+    o, sT = wkv_decode(r, k, v, w, u, wkv_state)
+    o = o.reshape(B, d)
+    o = _group_norm(o[:, None, :], p["ln_scale"], H, head_dim)[:, 0]
+    out = (o * jax.nn.silu(g)) @ p["w_o"]
+    return out, x1, sT
+
+
+def channel_mix_decode(p, x1, x_prev):
+    mu = p["mu"].astype(x1.dtype)
+    xx = x_prev.astype(x1.dtype)
+    xr = x1 + (xx - x1) * mu[0]
+    xk = x1 + (xx - x1) * mu[1]
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return r * (k @ p["w_v"]), x1

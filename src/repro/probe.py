@@ -1,0 +1,28 @@
+"""Cost-probe mode: unroll structural loops for exact HloCostAnalysis.
+
+XLA's cost analysis counts a while-loop body once, so the dry-run lowers
+each cell twice more at n_layers=1/2 with every structural loop unrolled
+(layer scan, blockwise-attention q/kv loops, rwkv chunk scan) and
+extrapolates the per-layer delta.  Production lowering keeps the loops
+(compile time and HLO size stay O(1) in depth).
+
+The only loop left rolled under probe mode is the mamba per-token scan —
+its recurrence body is a few elementwise ops (~0.6% of a hymba block's
+FLOPs), noted in EXPERIMENTS.md §Roofline caveats.
+"""
+
+_PROBE = False
+
+
+def set_probe(on: bool) -> None:
+    global _PROBE
+    _PROBE = bool(on)
+
+
+def probing() -> bool:
+    return _PROBE
+
+
+def scan_unroll():
+    """Pass as lax.scan's unroll= for structural (layer/chunk) scans."""
+    return True if _PROBE else 1

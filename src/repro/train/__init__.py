@@ -1,0 +1,2 @@
+"""Training/serving substrate: sharding rules, optimizers, steps, data,
+checkpointing, fault tolerance."""

@@ -1,0 +1,63 @@
+"""Data pipeline: deterministic synthetic stream + memory-mapped token files.
+
+Determinism is the straggler/fault story's foundation: batch(step) is a
+pure function of (seed, step, shard), so any restart — including an
+*elastic* restart on a different data-parallel size — replays or resumes
+the exact stream with no coordination.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    path: Optional[str] = None   # token file (uint16/uint32 raw); None -> synthetic
+
+
+class TokenStream:
+    """Deterministic batches of (tokens, labels), next-token objective."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._mm = None
+        if cfg.path:
+            dtype = np.uint32 if cfg.vocab > 65535 else np.uint16
+            self._mm = np.memmap(cfg.path, dtype=dtype, mode="r")
+            if self._mm.size < cfg.seq_len + 1:
+                raise ValueError("token file smaller than one sequence")
+
+    def batch(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        cfg = self.cfg
+        B, S = cfg.global_batch, cfg.seq_len
+        if self._mm is None:
+            rng = np.random.default_rng(np.uint64(cfg.seed * 1_000_003 + step))
+            seqs = rng.integers(0, cfg.vocab, size=(B, S + 1), dtype=np.int64)
+        else:
+            n = self._mm.size - (S + 1)
+            rng = np.random.default_rng(np.uint64(cfg.seed * 1_000_003 + step))
+            starts = rng.integers(0, n, size=(B,))
+            seqs = np.stack([self._mm[s : s + S + 1] for s in starts]).astype(np.int64)
+        tokens = seqs[:, :-1].astype(np.int32)
+        labels = seqs[:, 1:].astype(np.int32)
+        return tokens, labels
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def write_token_file(path: str, tokens: np.ndarray, vocab: int) -> None:
+    dtype = np.uint32 if vocab > 65535 else np.uint16
+    np.asarray(tokens, dtype).tofile(path)

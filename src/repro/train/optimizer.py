@@ -1,0 +1,225 @@
+"""Optimizers with sharded, memory-tiered state.
+
+  adamw      fp32 moments + fp32 master params (default quality tier)
+  adamw8bit  row-wise int8 moments, bf16 params, no master (Arctic-class
+             models: cuts optimizer HBM from ~12 to ~2.1 bytes/param)
+  adafactor  factored second moment + bf16 first moment
+
+Quantized moments are rank-preserving (int8 codes in the parameter's own
+shape + one fp32 scale per trailing-dim row), so every optimizer-state
+leaf inherits the parameter's PartitionSpec — ZeRO-style sharding over the
+full (data x model) mesh falls out of FSDP with no extra machinery
+(``opt_specs`` below).
+
+Implementation is flatten-based: one pass over zipped leaf lists, no
+nested tree_map/is_leaf tricks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# -- row-wise int8 quantization (rank preserving) ---------------------------------
+
+def _q8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """fp32 -> (int8 codes same shape, fp32 scale with trailing dim 1).
+    Linear signed absmax — fine for the (roughly symmetric) first moment."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _dq8(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+_V_TINY = 1e-16
+
+
+def _q8v(x: jnp.ndarray):
+    """Non-negative second moment -> log-space int8 (the dynamic range of v
+    spans many orders of magnitude; linear codes zero out small rows and
+    blow up the preconditioner — bitsandbytes solves this with a dynamic
+    code, we use an explicit log transform).
+    Returns (int8 codes, fp32 offset (...,1), fp32 scale (...,1))."""
+    y = jnp.log(jnp.maximum(x, 0.0) + _V_TINY)
+    lo = jnp.min(y, axis=-1, keepdims=True)
+    hi = jnp.max(y, axis=-1, keepdims=True)
+    scale = (hi - lo) / 254.0 + 1e-12
+    codes = jnp.clip(jnp.round((y - lo) / scale) - 127, -127, 127).astype(jnp.int8)
+    return codes, lo.astype(jnp.float32), scale.astype(jnp.float32)
+
+
+def _dq8v(codes, lo, scale):
+    y = (codes.astype(jnp.float32) + 127.0) * scale + lo
+    v = jnp.exp(y) - _V_TINY
+    return jnp.maximum(v, 0.0)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+    master: object
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adamw8bit | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def _map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree)
+
+
+def init_opt(params, cfg: OptConfig) -> OptState:
+    if cfg.kind == "adamw":
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            _map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            _map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            _map(lambda p: p.astype(jnp.float32), params),
+        )
+    if cfg.kind == "adamw8bit":
+        qz = lambda p: (jnp.zeros(p.shape, jnp.int8),
+                        jnp.full(p.shape[:-1] + (1,), 1e-12, jnp.float32))
+        vz = lambda p: _q8v(jnp.zeros(p.shape, jnp.float32))
+        return OptState(jnp.zeros((), jnp.int32), _map(qz, params),
+                        _map(vz, params), None)
+    if cfg.kind == "adafactor":
+        def vfact(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return (jnp.zeros(p.shape, jnp.float32),)
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            _map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+            jax.tree_util.tree_map(vfact, params),
+            None,
+        )
+    raise ValueError(cfg.kind)
+
+
+def opt_specs(pspecs, params_shape, cfg: OptConfig):
+    """PartitionSpec trees for OptState, derived from the param specs."""
+    drop_last = lambda s: P(*(tuple(s)[:-1] + (None,))) if len(tuple(s)) else s
+
+    if cfg.kind == "adamw":
+        return OptState(P(), pspecs, pspecs, pspecs)
+    if cfg.kind == "adamw8bit":
+        qspec = jax.tree_util.tree_map(lambda s: (s, drop_last(s)), pspecs,
+                                       is_leaf=lambda t: isinstance(t, P))
+        vspec = jax.tree_util.tree_map(
+            lambda s: (s, drop_last(s), drop_last(s)), pspecs,
+            is_leaf=lambda t: isinstance(t, P),
+        )
+        return OptState(P(), qspec, vspec, None)
+    if cfg.kind == "adafactor":
+        def vf(s, shp):
+            t = tuple(s) + (None,) * (len(shp.shape) - len(tuple(s)))
+            if len(shp.shape) >= 2:
+                return (P(*t[:-1]), P(*(t[:-2] + t[-1:])))
+            return (P(*t),)
+        vspec = jax.tree_util.tree_map(
+            vf, pspecs, params_shape, is_leaf=lambda t: isinstance(t, P)
+        )
+        return OptState(P(), pspecs, vspec, None)
+    raise ValueError(cfg.kind)
+
+
+def _global_norm(leaves):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = [g.astype(jnp.float32) for g in treedef.flatten_up_to(grads)]
+    gnorm = _global_norm(g_leaves)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    g_leaves = [g * clip for g in g_leaves]
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** sf
+    bc2 = 1.0 - cfg.b2 ** sf
+
+    new_p, new_m, new_v, new_master = [], [], [], []
+
+    if cfg.kind == "adamw":
+        m_l = treedef.flatten_up_to(state.m)
+        v_l = treedef.flatten_up_to(state.v)
+        mp_l = treedef.flatten_up_to(state.master)
+        for p, g, m, v, mp in zip(p_leaves, g_leaves, m_l, v_l, mp_l):
+            m2 = cfg.b1 * m + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+            mp2 = mp - cfg.lr * (u + cfg.weight_decay * mp)
+            new_p.append(mp2.astype(p.dtype))
+            new_m.append(m2); new_v.append(v2); new_master.append(mp2)
+        st = OptState(step,
+                      jax.tree_util.tree_unflatten(treedef, new_m),
+                      jax.tree_util.tree_unflatten(treedef, new_v),
+                      jax.tree_util.tree_unflatten(treedef, new_master))
+    elif cfg.kind == "adamw8bit":
+        m_l = treedef.flatten_up_to(state.m)
+        v_l = treedef.flatten_up_to(state.v)
+        for p, g, mq, vq in zip(p_leaves, g_leaves, m_l, v_l):
+            m = _dq8(*mq)
+            v = _dq8v(*vq)
+            m2 = cfg.b1 * m + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+            pf = p.astype(jnp.float32)
+            p2 = pf - cfg.lr * (u + cfg.weight_decay * pf)
+            new_p.append(p2.astype(p.dtype))
+            new_m.append(_q8(m2)); new_v.append(_q8v(v2))
+        st = OptState(step,
+                      jax.tree_util.tree_unflatten(treedef, new_m),
+                      jax.tree_util.tree_unflatten(treedef, new_v), None)
+    elif cfg.kind == "adafactor":
+        m_l = treedef.flatten_up_to(state.m)
+        v_l = treedef.flatten_up_to(state.v)
+        for p, g, m, v in zip(p_leaves, g_leaves, m_l, v_l):
+            if p.ndim >= 2:
+                vr, vc = v
+                vr2 = cfg.b2 * vr + (1 - cfg.b2) * jnp.mean(g * g, axis=-1)
+                vc2 = cfg.b2 * vc + (1 - cfg.b2) * jnp.mean(g * g, axis=-2)
+                vhat = (vr2[..., :, None] * vc2[..., None, :]) / (
+                    jnp.mean(vr2, axis=-1)[..., None, None] + 1e-30
+                )
+                v2 = (vr2, vc2)
+            else:
+                (vv,) = v
+                vhat = cfg.b2 * vv + (1 - cfg.b2) * g * g
+                v2 = (vhat,)
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            u = (m2 / bc1) / (jnp.sqrt(vhat / bc2) + cfg.eps)
+            pf = p.astype(jnp.float32)
+            p2 = pf - cfg.lr * (u + cfg.weight_decay * pf)
+            new_p.append(p2.astype(p.dtype))
+            new_m.append(m2.astype(jnp.bfloat16)); new_v.append(v2)
+        st = OptState(step,
+                      jax.tree_util.tree_unflatten(treedef, new_m),
+                      jax.tree_util.tree_unflatten(treedef, new_v), None)
+    else:
+        raise ValueError(cfg.kind)
+
+    return jax.tree_util.tree_unflatten(treedef, new_p), st, {"grad_norm": gnorm}
+
+
+def opt_kind_for(arch_name: str, param_count: int) -> str:
+    """Launcher policy: 8-bit moments for >=100B-parameter models."""
+    return "adamw8bit" if param_count >= 100e9 else "adamw"

@@ -1,0 +1,61 @@
+"""Serving steps: prefill and batched autoregressive decode.
+
+``serve_step`` is the dry-run decode unit: one new token per sequence
+against a KV/state cache of seq_len — exactly the decode_32k / long_500k
+shapes.  ``generate`` drives it for the runnable serving example (greedy
+or temperature sampling over a batch of requests).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, forward, init_cache
+
+
+def build_serve_step(cfg: ArchConfig):
+    """(params, cache, tokens (B,)) -> (logits (B, vocab), cache)."""
+
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return step
+
+
+def build_prefill(cfg: ArchConfig):
+    """(params, batch) -> logits — the prefill_32k dry-run unit."""
+
+    def prefill(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        return logits
+
+    return prefill
+
+
+def generate(params, cfg: ArchConfig, prompt_tokens, *, steps: int,
+             s_max: int, temperature: float = 0.0, rng=None,
+             jit_step=None):
+    """Greedy/sampled generation for the examples (CPU, smoke configs).
+    prompt_tokens: (B, P) int32.  Returns (B, P+steps) tokens."""
+    B, P = prompt_tokens.shape
+    cache = init_cache(cfg, B, s_max)
+    step = jit_step or jax.jit(build_serve_step(cfg))
+    toks = [prompt_tokens[:, i] for i in range(P)]
+    logits = None
+    for i in range(P):
+        logits, cache = step(params, cache, toks[i])
+    out = list(toks)
+    for t in range(steps):
+        if temperature > 0.0:
+            rng, sub = jax.random.split(rng)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        out.append(nxt)
+        logits, cache = step(params, cache, nxt)
+    return jnp.stack(out, axis=1)

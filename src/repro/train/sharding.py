@@ -1,0 +1,122 @@
+"""Logical-axis sharding rules (flax-style, dependency-free).
+
+Model code annotates activations with logical names via ``lconstraint``;
+the launcher installs a rules table mapping logical names to mesh axes.
+With no rules installed (unit tests, single device) everything is a no-op,
+so models run anywhere — the same portability discipline targetDP applies
+to kernels, applied to distribution.
+
+Parameter sharding is path-based: ``spec_for_path`` maps parameter-tree
+paths (e.g. "layers/attn/wq") to PartitionSpecs implementing FSDP (shard
+over "data") x TP (shard over "model") x EP (experts over "model").
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Dict[str, object] = {}
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_attn": None,
+    "seq_q": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "logits_vocab": "model",  # set to None when seq rides "model"
+    "expert": "model",
+    "state": None,
+}
+
+# sequence-parallel variant (hillclimb option): shard long sequences on
+# "model" between attention blocks
+SP_RULES = dict(DEFAULT_RULES, seq="model")
+
+
+def set_rules(rules: Optional[Dict[str, object]]) -> None:
+    global _RULES
+    _RULES = dict(rules) if rules else {}
+
+
+def get_rules() -> Dict[str, object]:
+    return dict(_RULES)
+
+
+def lconstraint(x, *logical: Optional[str]):
+    """Constrain activation sharding by logical axis names (no-op without
+    rules or outside a mesh context)."""
+    if not _RULES:
+        return x
+    try:
+        spec = P(*[_RULES.get(n) if n else None for n in logical])
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# -- parameter specs -----------------------------------------------------------
+
+_PARAM_SPEC_PATTERNS: Sequence[Tuple[str, P]] = (
+    # embeddings: (vocab, d_model) — vocab over model (TP), d_model over data (FSDP)
+    (r"embed", P("model", "data")),
+    (r"lm_head", P("data", "model")),
+    # attention: wq/wk/wv (d_model, heads*dh) ; wo (heads*dh, d_model)
+    (r"attn/w[qkv]$", P("data", "model")),
+    (r"attn/wo$", P("model", "data")),
+    # MoE experts: (n_exp, d_model, d_ff) / (n_exp, d_ff, d_model)
+    (r"experts/w_(gate|up)$", P("model", "data", None)),
+    (r"experts/w_down$", P("model", None, "data")),
+    (r"router", P(None, "model")),
+    # dense MLP: (d_model, d_ff) / (d_ff, d_model)
+    (r"mlp/w_(gate|up)$", P("data", "model")),
+    (r"mlp/w_down$", P("model", "data")),
+    # ssm / rwkv projections: in-proj over model, out-proj back
+    (r"(ssm|rwkv|tmix)/w_(in|x|r|k|v|g|b|dt)[a-z0-9_]*$", P("data", "model")),
+    (r"(ssm|rwkv|tmix|cmix)/w_(out|o|down)$", P("model", "data")),
+    (r"cmix/w_(k|up)$", P("data", "model")),
+    # small per-channel vectors: replicate
+    (r"(norm|scale|bias|a_log|dt_bias|d_skip|decay|bonus|mu|meta)", P()),
+)
+
+
+def spec_for_path(path: str) -> P:
+    for pat, spec in _PARAM_SPEC_PATTERNS:
+        if re.search(pat, path):
+            return spec
+    return P()  # default: replicated
+
+
+def param_specs(params) -> object:
+    """PartitionSpec tree mirroring a param tree, keyed by tree paths.
+
+    Stacked-layer params (leading n_layers axis) keep the layer axis
+    unsharded: specs apply to the trailing dims, so prepend None when the
+    leaf rank exceeds the spec rank.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths_leaves, treedef = flat
+
+    def mk(path_entries, leaf):
+        path = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_entries
+        )
+        spec = spec_for_path(path)
+        pad = leaf.ndim - len(spec)
+        if pad > 0:
+            spec = P(*((None,) * pad + tuple(spec)))
+        elif pad < 0:
+            spec = P(*tuple(spec)[-leaf.ndim:] if leaf.ndim else ())
+        return spec
+
+    specs = [mk(p, l) for p, l in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,130 @@
+"""Train/loss step builders: remat'd forward, microbatch gradient
+accumulation, optional int8 error-feedback gradient compression.
+
+``build_train_step`` returns a pure function
+    (params, opt_state, [ef_state,] batch) -> (params, opt_state, metrics)
+suitable for jit with in/out shardings (the dry-run lowers exactly this).
+
+Gradient compression: before the optimizer, gradients pass through a
+row-wise int8 quantize/dequantize with a persistent error-feedback
+accumulator — the arithmetic the compressed DP all-reduce performs at
+scale (quantize -> sum -> dequantize), expressed shard-locally so it works
+in both the GSPMD path and the shard_map path.  The EF residual keeps the
+scheme convergent (Karimireddy et al.); the 8-device shard_map test
+exercises the true ppermute-ring variant in tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import forward
+from .optimizer import OptConfig, OptState, apply_updates, _q8, _dq8
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1            # gradient accumulation
+    z_loss: float = 1e-4
+    lb_coef: float = 1e-2            # MoE load-balance coefficient
+    grad_compression: bool = False   # int8 + error feedback
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict, *, z_coef: float,
+            lb_coef: float):
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    from repro import tuning as _tuning
+    if _tuning.get().logits_fp32:
+        logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0].astype(jnp.float32)
+    nll = jnp.mean(logz - ll)
+    z = z_coef * jnp.mean(jnp.square(logz))
+    lb = lb_coef * aux.get("lb_loss", 0.0)
+    return nll + z + lb, {"nll": nll, "z_loss": z, "lb_loss": lb}
+
+
+def init_ef_state(params):
+    """Error-feedback residuals (fp32, same shapes as params)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def _compress_grads(grads, ef):
+    """int8 quantize/dequantize with error feedback."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        codes, scale = _q8(gf)
+        deq = _dq8(codes, scale)
+        return deq, gf - deq
+    out = jax.tree_util.tree_map(one, grads, ef)
+    g2 = jax.tree_util.tree_map(lambda t: t[0], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    ef2 = jax.tree_util.tree_map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return g2, ef2
+
+
+def build_train_step(cfg: ArchConfig, tcfg: TrainConfig, grad_specs=None):
+    """Returns step(params, opt_state, ef_state|None, batch) -> tuple.
+
+    grad_specs: optional PartitionSpec tree (the param specs); gradients
+    are sharding-constrained to it before the optimizer — without this the
+    embedding-gradient scatter materializes fp32 replicated vocab x d
+    tensors (+30 GiB/device measured on deepseek-67b)."""
+
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, z_coef=tcfg.z_loss, lb_coef=tcfg.lb_coef),
+        has_aux=True,
+    )
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, cfg, batch)
+            return loss, metrics, grads
+
+        mb = tcfg.microbatches
+        split = lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+        batch_mb = {k: split(v) for k, v in batch.items()}
+
+        def acc_step(carry, mb_batch):
+            g_acc, l_acc = carry
+            (loss, metrics), grads = grad_fn(params, cfg, mb_batch)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / mb, g_acc, grads
+            )
+            return (g_acc, l_acc + loss / mb), metrics
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        from repro import probe as _probe
+        (grads, loss), metrics = jax.lax.scan(acc_step, (g0, 0.0), batch_mb,
+                                              unroll=_probe.scan_unroll())
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def step(params, opt_state: OptState, ef_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if grad_specs is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_specs)
+        if tcfg.grad_compression:
+            grads, ef_state = _compress_grads(grads, ef_state)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, tcfg.opt
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, ef_state, metrics
+
+    return step

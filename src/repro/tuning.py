@@ -1,0 +1,85 @@
+"""Perf-tuning knobs for the §Perf hillclimb (trace-time configuration).
+
+The dry-run accepts ``--variant k=v,...`` and installs values here before
+lowering; each knob changes the lowered HLO, and the roofline terms
+before/after are the measurement.  Knobs:
+
+  remat        "full" (checkpoint everything, default), "dots" (save matmul
+               outputs — jax dots_with_no_batch_dims_saveable policy),
+               "none" (no rematerialization)
+  q_block /    blockwise-attention tile sizes (long-sequence path)
+  kv_block
+  rwkv_chunk   WKV chunk length
+  seq_shard    sequence-parallel activations in training (bool)
+  logits_fp32  materialize fp32 logits in the loss (bool; False keeps
+               logsumexp in bf16 inputs -> fp32 accum only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class Tuning:
+    remat: str = "full"
+    q_block: int = 1024
+    kv_block: int = 1024
+    rwkv_chunk: int = 64
+    seq_shard: bool = True
+    logits_fp32: bool = True
+    scores_bf16: bool = False   # bf16 attention scores, fp32 softmax stats
+    attn_fast: bool = False     # transpose-free einsum order + additive mask
+    microbatches: int = 1       # gradient-accumulation passes per step
+    attn_seq_shard: bool = False  # force q-sequence sharding inside attention
+
+
+_TUNING = Tuning()
+
+
+def get() -> Tuning:
+    return _TUNING
+
+
+def set_tuning(**kw) -> Tuning:
+    global _TUNING
+    _TUNING = dataclasses.replace(_TUNING, **kw)
+    return _TUNING
+
+
+def reset() -> None:
+    global _TUNING
+    _TUNING = Tuning()
+
+
+def checkpoint_wrap(fn):
+    """Apply the configured remat policy to a scan body."""
+    t = _TUNING
+    if t.remat == "none":
+        return fn
+    if t.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def parse_variant(spec: Optional[str]) -> dict:
+    """'remat=dots,kv_block=2048,seq_shard=0' -> kwargs dict."""
+    if not spec:
+        return {}
+    out = {}
+    for item in spec.split(","):
+        k, v = item.split("=", 1)
+        k = k.strip()
+        if k in ("q_block", "kv_block", "rwkv_chunk", "microbatches"):
+            out[k] = int(v)
+        elif k in ("seq_shard", "logits_fp32", "scores_bf16", "attn_fast",
+                   "attn_seq_shard"):
+            out[k] = v.strip() not in ("0", "false", "False")
+        else:
+            out[k] = v.strip()
+    return out

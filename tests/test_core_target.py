@@ -1,0 +1,88 @@
+"""Engine dispatch (paper C1: single source, both targets) + reductions."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AOS, SOA, Field, TargetConfig, aosoa, choose_vvl, kernel, launch,
+    target_max, target_sum,
+)
+from repro.core import memspace
+
+LAYOUTS = [SOA, AOS, aosoa(4), aosoa(64)]
+LAT = (4, 8, 16)  # 512 sites
+
+
+@kernel
+def _scale(v, a):
+    return {"out": a * v["field"]}
+
+
+@kernel
+def _saxpy(v, a):
+    return {"out": a * v["x"] + v["y"]}
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+@pytest.mark.parametrize("vvl", [64, 128, 256])
+def test_engines_agree_scale(lay, vvl, rng):
+    if lay.kind.value == "aosoa" and vvl % lay.sal:
+        pytest.skip("sal must divide vvl")
+    x = rng.normal(size=(3, *LAT)).astype(np.float32)
+    f = Field.from_numpy("field", x, LAT, lay)
+    o1 = launch(_scale, {"field": f}, {"out": 3},
+                config=TargetConfig("jnp"), params={"a": 2.5})["out"]
+    o2 = launch(_scale, {"field": f}, {"out": 3},
+                config=TargetConfig("pallas", vvl=vvl), params={"a": 2.5})["out"]
+    np.testing.assert_allclose(o1.to_numpy(), 2.5 * x, rtol=1e-6)
+    np.testing.assert_allclose(o2.to_numpy(), o1.to_numpy(), rtol=1e-6)
+
+
+def test_multi_field_kernel(rng):
+    x = rng.normal(size=(5, *LAT)).astype(np.float32)
+    y = rng.normal(size=(5, *LAT)).astype(np.float32)
+    fx = Field.from_numpy("x", x, LAT, SOA)
+    fy = Field.from_numpy("y", y, LAT, aosoa(8))  # mixed layouts in one launch
+    out = launch(_saxpy, {"x": fx, "y": fy}, {"out": 5},
+                 config=TargetConfig("pallas", vvl=128), params={"a": -1.5})
+    np.testing.assert_allclose(out["out"].to_numpy(), -1.5 * x + y,
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+def test_reductions(lay, rng):
+    x = rng.normal(size=(3, *LAT)).astype(np.float32)
+    f = Field.from_numpy("f", x, LAT, lay)
+    want_sum = x.reshape(3, -1).sum(1)
+    want_max = x.reshape(3, -1).max(1)
+    for cfgt in [TargetConfig("jnp"), TargetConfig("pallas", vvl=128)]:
+        np.testing.assert_allclose(np.asarray(target_sum(f, cfgt)), want_sum,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(target_max(f, cfgt)), want_max,
+                                   rtol=1e-6)
+
+
+def test_choose_vvl():
+    assert choose_vvl(512, 128) == 128
+    assert choose_vvl(100, 128) == 100
+    assert choose_vvl(96, 64) == 48
+
+
+def test_memspace_roundtrip(rng):
+    x = rng.normal(size=(7, 13)).astype(np.float32)
+    buf = memspace.target_malloc((7, 13))
+    assert buf.shape == (7, 13)
+    dev = memspace.copy_to_target(x)
+    back = memspace.copy_from_target(dev)
+    np.testing.assert_array_equal(back, x)
+    memspace.target_synchronize(dev)
+    memspace.target_free(dev)
+
+
+def test_relayout(rng):
+    x = rng.normal(size=(3, *LAT)).astype(np.float32)
+    f = Field.from_numpy("f", x, LAT, SOA)
+    g = f.as_layout(aosoa(16))
+    np.testing.assert_array_equal(g.to_numpy(), x)
+    assert g.layout.sal == 16

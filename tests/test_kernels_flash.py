@@ -1,0 +1,74 @@
+"""Flash-attention pallas kernel: shape/dtype/mask sweeps vs the oracle."""
+
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("cfg", [
+    (2, 2, 64, 16, True, 0),
+    (1, 4, 128, 32, True, 16),
+    (3, 1, 64, 8, False, 0),
+    (2, 3, 96, 16, True, 32),
+], ids=str)
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_flash_vs_oracle(cfg, dtype, rng):
+    import jax.numpy as jnp
+    BKV, rep, S, dh, causal, window = cfg
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    BG = BKV * rep
+    q = jnp.asarray(rng.normal(size=(BG, S, dh)), dt)
+    k = jnp.asarray(rng.normal(size=(BKV, S, dh)), dt)
+    v = jnp.asarray(rng.normal(size=(BKV, S, dh)), dt)
+    tol = 2e-5 if dt == jnp.float32 else 3e-2
+    o_ref = np.asarray(flash_attention(q, k, v, rep=rep, causal=causal,
+                                       window=window, engine="jnp"),
+                       np.float32)
+    for engine, kw in [("pallas", dict(q_block=32)),
+                       ("pallas_kvchunk", dict(q_block=32, kv_block=32))]:
+        o = np.asarray(flash_attention(q, k, v, rep=rep, causal=causal,
+                                       window=window, engine=engine, **kw),
+                       np.float32)
+        np.testing.assert_allclose(o, o_ref, rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention(rng):
+    import jax.numpy as jnp
+    from repro.models.attention import _dense_gqa, _mask_ok
+
+    B, KV, rep, S, dh = 1, 2, 2, 64, 16
+    q5 = rng.normal(size=(B, S, KV, rep, dh)).astype(np.float32)
+    k4 = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    v4 = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    ok = _mask_ok(S, S, causal=True, window=0)
+    o_model = np.asarray(_dense_gqa(jnp.asarray(q5), jnp.asarray(k4),
+                                    jnp.asarray(v4), ok))
+    qg = np.ascontiguousarray(q5.transpose(0, 2, 3, 1, 4)).reshape(B*KV*rep, S, dh)
+    kg = np.ascontiguousarray(k4.transpose(0, 2, 1, 3)).reshape(B*KV, S, dh)
+    vg = np.ascontiguousarray(v4.transpose(0, 2, 1, 3)).reshape(B*KV, S, dh)
+    o_fl = np.asarray(flash_attention(jnp.asarray(qg), jnp.asarray(kg),
+                                      jnp.asarray(vg), rep=rep,
+                                      engine="pallas", q_block=32))
+    o_fl = o_fl.reshape(B, KV, rep, S, dh).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(o_fl, o_model, rtol=2e-5, atol=2e-5)
+
+
+def test_attn_fast_variant_exact(rng):
+    """The attn_fast (transpose-free) formulation is numerically identical."""
+    import jax.numpy as jnp
+    from repro import tuning
+    from repro.models.attention import _dense_gqa, _mask_ok
+
+    B, KV, rep, S, dh = 2, 2, 2, 32, 16
+    q5 = jnp.asarray(rng.normal(size=(B, S, KV, rep, dh)), jnp.float32)
+    k4 = jnp.asarray(rng.normal(size=(B, S, KV, dh)), jnp.float32)
+    v4 = jnp.asarray(rng.normal(size=(B, S, KV, dh)), jnp.float32)
+    ok = _mask_ok(S, S, causal=True, window=8)
+    base = np.asarray(_dense_gqa(q5, k4, v4, ok))
+    try:
+        tuning.set_tuning(attn_fast=True)
+        fast = np.asarray(_dense_gqa(q5, k4, v4, ok))
+    finally:
+        tuning.reset()
+    np.testing.assert_allclose(fast, base, rtol=2e-6, atol=2e-6)

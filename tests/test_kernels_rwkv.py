@@ -1,0 +1,68 @@
+"""RWKV6 WKV: chunked & pallas vs the exact sequential oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rwkv6_scan import rwkv6, rwkv6_decode_step
+
+
+def _problem(rng, B, H, T, dk, dv, strong_decay=True):
+    r = rng.normal(size=(B, H, T, dk)).astype(np.float32)
+    k = (0.3 * rng.normal(size=(B, H, T, dk))).astype(np.float32)
+    v = rng.normal(size=(B, H, T, dv)).astype(np.float32)
+    scale = 1.0 if strong_decay else -2.0
+    w = np.exp(-np.exp(scale + rng.normal(size=(B, H, T, dk)))).astype(np.float32)
+    u = (0.5 * rng.normal(size=(H, dk))).astype(np.float32)
+    s0 = (0.1 * rng.normal(size=(B, H, dk, dv))).astype(np.float32)
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 32, 8, 8), (2, 3, 128, 16, 24),
+                                   (1, 2, 64, 32, 32)], ids=str)
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_chunked_and_pallas_vs_scan(shape, chunk, rng):
+    B, H, T, dk, dv = shape
+    r, k, v, w, u, s0 = _problem(rng, *shape)
+    o_ref, s_ref = rwkv6(r, k, v, w, u, s0, engine="scan")
+    o_jnp, s_jnp = rwkv6(r, k, v, w, u, s0, engine="jnp", chunk=chunk)
+    o_pl, s_pl = rwkv6(r, k, v, w, u, s0, engine="pallas", chunk=chunk)
+    # scan vs chunked differ in fp32 accumulation order; tolerance scales
+    # with sequence length
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(o_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_jnp), np.asarray(s_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_jnp),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_jnp),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_strong_decay_no_overflow(rng):
+    """w near 0 (aggressive forgetting) must not overflow the chunked form
+    (the 1/P trick would)."""
+    B, H, T, dk, dv = 1, 1, 64, 8, 8
+    r, k, v, w, u, s0 = _problem(rng, B, H, T, dk, dv, strong_decay=True)
+    w = np.full_like(w, 1e-6)  # decays to ~zero each step
+    o_ref, _ = rwkv6(r, k, v, w, u, s0, engine="scan")
+    o_jnp, _ = rwkv6(r, k, v, w, u, s0, engine="jnp", chunk=32)
+    assert np.isfinite(np.asarray(o_jnp)).all()
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_continues_scan(rng):
+    B, H, T, dk, dv = 2, 2, 16, 8, 8
+    r, k, v, w, u, s0 = _problem(rng, B, H, T, dk, dv)
+    o_ref, s_ref = rwkv6(r, k, v, w, u, s0, engine="scan")
+    s = jnp.asarray(s0)
+    outs = []
+    for t in range(T):
+        o1, s = rwkv6_decode_step(r[:, :, t], k[:, :, t], v[:, :, t],
+                                  w[:, :, t], jnp.asarray(u), s)
+        outs.append(np.asarray(o1))
+    np.testing.assert_allclose(np.stack(outs, 2), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,67 @@
+"""Layout (INDEX macro) fidelity: the paper's §3.1 linearizations."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import AOS, SOA, aosoa, parse_layout
+
+LAYOUTS = [AOS, SOA, aosoa(2), aosoa(4), aosoa(8)]
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+def test_index_matches_flat_memory_order(lay):
+    """paper formula INDEX(c, s) == flat offset of pack()'s row-major data."""
+    ncomp, nsites = 3, 24
+    can = np.arange(ncomp * nsites, dtype=np.float32).reshape(ncomp, nsites)
+    phys = np.asarray(lay.pack(jnp.asarray(can))).ravel()
+    for c in range(ncomp):
+        for s in range(nsites):
+            assert phys[lay.flat_index(c, s, ncomp, nsites)] == can[c, s]
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+def test_pack_unpack_roundtrip(lay):
+    ncomp, nsites = 5, 32
+    can = np.random.default_rng(1).normal(size=(ncomp, nsites)).astype(np.float32)
+    out = np.asarray(lay.unpack(lay.pack(jnp.asarray(can))))
+    np.testing.assert_array_equal(out, can)
+
+
+@given(
+    ncomp=st.integers(1, 8),
+    nblk=st.integers(1, 8),
+    sal=st.sampled_from([1, 2, 4, 8]),
+)
+@settings(max_examples=30, deadline=None)
+def test_aosoa_index_bijection(ncomp, nblk, sal):
+    """INDEX is a bijection onto [0, ncomp*nsites) — no overlap, no holes."""
+    lay = aosoa(sal)
+    nsites = nblk * sal
+    seen = set()
+    for c in range(ncomp):
+        for s in range(nsites):
+            i = lay.flat_index(c, s, ncomp, nsites)
+            assert 0 <= i < ncomp * nsites
+            seen.add(i)
+    assert len(seen) == ncomp * nsites
+
+
+def test_parse_layout():
+    assert parse_layout("aos") == AOS
+    assert parse_layout("soa") == SOA
+    assert parse_layout("aosoa32").sal == 32
+    assert parse_layout("aosoa").sal == 128
+    with pytest.raises(ValueError):
+        parse_layout("zigzag")
+
+
+def test_block_canonical_roundtrip():
+    for lay in LAYOUTS:
+        ncomp, vvl = 3, 16
+        chunk = jnp.arange(ncomp * vvl, dtype=jnp.float32).reshape(ncomp, vvl)
+        block = lay.canonical_to_block(chunk, ncomp, vvl)
+        assert block.shape == lay.block_shape(ncomp, vvl)
+        back = lay.block_to_canonical(block, ncomp, vvl)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(chunk))

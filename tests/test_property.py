@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Field, SOA, TargetConfig, aosoa, launch, target_sum
+from repro.core.layout import AOS, LayoutKind
+from repro.kernels.lb_collision import collide
+from repro.kernels.rwkv6_scan import rwkv6
+from repro.models import moe as moe_mod
+from repro.configs.base import MoECfg
+from repro.train.optimizer import _dq8, _q8
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    sal=st.sampled_from([1, 2, 4, 8]),
+    nblk=st.integers(1, 6),
+    ncomp=st.integers(1, 7),
+    seed=st.integers(0, 100),
+)
+def test_layout_roundtrip_property(sal, nblk, ncomp, seed):
+    lay = aosoa(sal)
+    nsites = nblk * sal
+    x = np.random.default_rng(seed).normal(size=(ncomp, nsites)).astype(np.float32)
+    back = np.asarray(lay.unpack(lay.pack(jnp.asarray(x))))
+    np.testing.assert_array_equal(back, x)
+
+
+@given(
+    tau=st.floats(0.55, 2.0),
+    seed=st.integers(0, 50),
+)
+def test_collision_mass_conservation_property(tau, seed):
+    lat = (4, 4, 4)
+    rng = np.random.default_rng(seed)
+    f0 = (1.0 + 0.05 * rng.normal(size=(19, *lat))).astype(np.float32)
+    frc = (0.01 * rng.normal(size=(3, *lat))).astype(np.float32)
+    d = Field.from_numpy("d", f0, lat, SOA)
+    g = Field.from_numpy("g", frc, lat, SOA)
+    out = collide(d, g, tau=float(tau), config=TargetConfig("jnp")).to_numpy()
+    np.testing.assert_allclose(out.sum(0), f0.sum(0), rtol=1e-5)
+
+
+@given(
+    t=st.sampled_from([8, 16, 32]),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 30),
+)
+def test_rwkv_chunked_matches_scan_property(t, chunk, seed):
+    rng = np.random.default_rng(seed)
+    B, H, dk, dv = 1, 2, 8, 8
+    r = rng.normal(size=(B, H, t, dk)).astype(np.float32)
+    k = (0.3 * rng.normal(size=(B, H, t, dk))).astype(np.float32)
+    v = rng.normal(size=(B, H, t, dv)).astype(np.float32)
+    w = np.exp(-np.exp(rng.normal(size=(B, H, t, dk)))).astype(np.float32)
+    u = rng.normal(size=(H, dk)).astype(np.float32) * 0.5
+    o1, s1 = rwkv6(r, k, v, w, u, engine="scan")
+    o2, s2 = rwkv6(r, k, v, w, u, engine="jnp", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), rtol=3e-4,
+                               atol=3e-4)
+
+
+@given(seed=st.integers(0, 40))
+def test_q8_error_bound_property(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=(4, 32)) * 10 ** rng.uniform(-3, 3))
+                    .astype(np.float32))
+    codes, scale = _q8(x)
+    err = np.abs(np.asarray(_dq8(codes, scale)) - np.asarray(x))
+    assert (err <= np.asarray(scale) * 0.5 + 1e-6).all()
+
+
+@given(seed=st.integers(0, 25), topk=st.sampled_from([1, 2, 4]))
+def test_moe_gates_normalized_and_capacity_respected(seed, topk):
+    key = jax.random.PRNGKey(seed)
+    B, S, d, E = 2, 16, 8, 8
+    cfg = MoECfg(n_experts=E, top_k=topk, d_ff_expert=16,
+                 capacity_factor=1.25)
+    p = moe_mod.init_moe(key, d, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d))
+    y, aux = moe_mod.apply_moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert 0.0 <= float(aux["drop_frac"]) <= 1.0
+    assert float(aux["lb_loss"]) > 0.0
+
+
+@given(seed=st.integers(0, 30))
+def test_reduction_linear_property(seed):
+    """target_sum(a x + b y) == a target_sum(x) + b target_sum(y)."""
+    rng = np.random.default_rng(seed)
+    lat = (4, 4, 4)
+    x = rng.normal(size=(3, *lat)).astype(np.float32)
+    y = rng.normal(size=(3, *lat)).astype(np.float32)
+    fx = Field.from_numpy("x", x, lat, SOA)
+    fy = Field.from_numpy("y", y, lat, SOA)
+    fz = Field.from_numpy("z", 2 * x - 3 * y, lat, SOA)
+    cfgt = TargetConfig("jnp")
+    lhs = np.asarray(target_sum(fz, cfgt))
+    rhs = 2 * np.asarray(target_sum(fx, cfgt)) - 3 * np.asarray(target_sum(fy, cfgt))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
