@@ -44,11 +44,23 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
+def traffic_row(name: str, t_s: float, bytes_moved: int) -> str:
+    """Row for the fused-vs-unfused comparison: wall time + modelled HBM
+    traffic (LaunchGraph.bytes_moved counting) + implied bandwidth."""
+    gbps = bytes_moved / t_s / 1e9 if t_s > 0 else 0.0
+    return csv_row(name, t_s * 1e6,
+                   f"bytes_moved={bytes_moved};model_GBps={gbps:.2f}")
+
+
 # Per-site traffic model of each application kernel (fp32 bytes, reads +
 # writes, the counting convention of the paper's Fig. 4 OI numbers).
 LUDWIG_KERNELS = {
     # name: (bytes_per_site, flops_per_site)
     "collision": ((19 + 3 + 19) * 4, 300),          # f in, force in, f out
+    # fused moments+collision launch (what driver.step actually runs):
+    # f+force in once, f'+u out (rho is an unrequested intermediate and
+    # never touches HBM)
+    "collision_moments": ((19 + 3 + 19 + 3) * 4, 330),
     "propagation": ((19 + 19) * 4, 0),
     "order_parameter_gradients": ((5 + 15 + 5) * 4, 5 * 8),
     "chemical_stress": ((5 + 5 + 15 + 9) * 4, 450),

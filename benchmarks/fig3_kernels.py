@@ -1,5 +1,10 @@
 """Paper Fig. 3: full-application time decomposed per kernel, plus the
-layout x VVL configuration sweep (bottom panel).
+layout x VVL configuration sweep (bottom panel) and the fused-vs-unfused
+launch-graph comparison (``--fused``): the Ludwig 3-kernel LC chain and the
+MILC CG update chain, each timed unfused (one launch per kernel, every
+intermediate through HBM) and fused (one launch for the chain), with the
+bytes-moved model from LaunchGraph.bytes_moved — the Roofline gain of
+core.fuse measured, not asserted.
 
 On this CPU-only container the *measured* numbers are the jnp-engine wall
 times (the paper's "host C" build); per-processor *modelled* times come
@@ -12,17 +17,31 @@ penalty of each layout for the pallas/TPU target.
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SOA, AOS, TargetConfig, aosoa
+from repro.core import Field, SOA, AOS, TargetConfig, aosoa, launch
 from repro.apps.ludwig import LudwigConfig, init_state
-from repro.apps.ludwig.driver import step_timed
+from repro.apps.ludwig.driver import (
+    _be_rhs_body, _mol_field_body, _q_update_body, lc_chain_graph, step_timed,
+)
 from repro.apps.milc import MilcConfig, init_problem
-from repro.apps.milc.cg import make_wilson_op, axpy, dot
-from .common import LUDWIG_KERNELS, MILC_KERNELS, PROCESSORS, csv_row, time_fn
+from repro.apps.milc.cg import (
+    _square_body, cg_update_graph, fused_cg_update, make_wilson_op, axpy, dot,
+)
+
+try:
+    from .common import (
+        LUDWIG_KERNELS, MILC_KERNELS, PROCESSORS, csv_row, time_fn, traffic_row,
+    )
+except ImportError:  # run as a script: python benchmarks/fig3_kernels.py
+    from common import (
+        LUDWIG_KERNELS, MILC_KERNELS, PROCESSORS, csv_row, time_fn, traffic_row,
+    )
 
 
 def ludwig_decomposition(lattice=(16, 16, 16), steps=3):
@@ -92,11 +111,143 @@ def layout_vvl_sweep(lattice=(16, 16, 16), steps=3):
     return rows
 
 
-def main():
+def fused_vs_unfused(lattice=(16, 16, 16), milc_lattice=(8, 8, 8, 8),
+                     engine="jnp"):
+    """Fused launch graphs vs one-launch-per-kernel on the same chains.
+
+    Three rows per chain: ``unfused`` is the seed behavior (one un-cached
+    launch per kernel, re-traced every call), ``unfused_jit`` wraps the same
+    per-kernel sequence in one jax.jit (the fair launch-cache baseline),
+    ``fused`` is the LaunchGraph.  bytes_moved is engine-aware: on the
+    pallas engine every pallas_call has mandated HBM I/O, so unfused_jit is
+    charged full per-stage traffic; on the jnp engine XLA fuses the
+    elementwise chain inside one jit, so unfused_jit is charged the same
+    external traffic as fused (the LaunchGraph's traffic win is a property
+    of the pallas/TPU target — on jnp its win is the launch cache and the
+    guaranteed single kernel).  On a memory-bound kernel set the byte ratio
+    IS the roofline-speedup bound (paper §4)."""
     rows = []
-    rows += ludwig_decomposition()
-    rows += milc_decomposition()
-    rows += layout_vvl_sweep()
+    tgt = TargetConfig(engine, vvl=128)
+    rng = np.random.default_rng(0)
+
+    # ---- Ludwig 3-kernel LC chain: molecular field -> BE rhs -> Q update
+    cfg = LudwigConfig(lattice=lattice, target=tgt)
+    nsites = int(np.prod(lattice))
+
+    def mk(name, ncomp):
+        arr = (0.01 * rng.normal(size=(ncomp, *lattice))).astype(np.float32)
+        return Field.from_numpy(name, arr, lattice, cfg.layout)
+
+    ins = {"q": mk("q", 5), "lapq": mk("lapq", 5), "w": mk("w", 9),
+           "adv": mk("adv", 5)}
+    graph = lc_chain_graph(cfg)
+    bm = graph.bytes_moved({k: f.ncomp for k, f in ins.items()}, nsites,
+                           outputs=("q_new",))
+    # XLA fuses a jitted jnp chain, eliding the intermediates pallas_calls
+    # must round-trip — charge unfused_jit accordingly
+    jit_bytes = bm["unfused"] if engine == "pallas" else bm["fused"]
+
+    def lc_unfused(q, lapq, w, adv):
+        h = launch(_mol_field_body, {"q": q, "lapq": lapq}, {"h": 5},
+                   config=tgt,
+                   params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa))["h"]
+        rhs = launch(_be_rhs_body, {"q": q, "h": h, "w": w}, {"rhs": 5},
+                     config=tgt,
+                     params=dict(gamma_rot=cfg.gamma_rot, xi=cfg.xi))["rhs"]
+        return launch(_q_update_body, {"q": q, "rhs": rhs, "adv": adv},
+                      {"q": 5}, config=tgt, params=dict(dt=cfg.dt))["q"].data
+
+    def lc_fused(q, lapq, w, adv):
+        return graph.launch({"q": q, "lapq": lapq, "w": w, "adv": adv},
+                            config=tgt, outputs=("q_new",))["q_new"].data
+
+    args = (ins["q"], ins["lapq"], ins["w"], ins["adv"])
+    rows.append(traffic_row("fig3_fused/ludwig_lc_chain_unfused",
+                            time_fn(lc_unfused, *args), bm["unfused"]))
+    rows.append(traffic_row("fig3_fused/ludwig_lc_chain_unfused_jit",
+                            time_fn(jax.jit(lc_unfused), *args), jit_bytes))
+    rows.append(traffic_row("fig3_fused/ludwig_lc_chain_fused",
+                            time_fn(lc_fused, *args), bm["fused"]))
+
+    # ---- MILC CG update chain: x+alpha p, r-alpha ap, r.r square
+    nsites4 = int(np.prod(milc_lattice))
+
+    def mk4(name):
+        arr = rng.normal(size=(24, *milc_lattice)).astype(np.float32)
+        return Field.from_numpy(name, arr, milc_lattice, SOA)
+
+    x, r, p, ap = mk4("x"), mk4("r"), mk4("p"), mk4("ap")
+    cg_graph = cg_update_graph(24)
+    bm4 = cg_graph.bytes_moved({"x": 24, "r": 24, "p": 24, "ap": 24}, nsites4,
+                               outputs=("x_new", "r_new", "rr_prod"))
+
+    def cg_unfused(x, r, p, ap):
+        xn = axpy(0.3, p, x, tgt)
+        rn = axpy(-0.3, ap, r, tgt)
+        prod = launch(_square_body, {"x": rn}, {"out": 24}, config=tgt)["out"]
+        return xn.data, rn.data, prod.data
+
+    def cg_fused(x, r, p, ap):
+        xn, rn, prod = fused_cg_update(x, r, p, ap, jnp.float32(0.3), tgt)
+        return xn.data, rn.data, prod.data
+
+    rows.append(traffic_row("fig3_fused/milc_cg_update_unfused",
+                            time_fn(cg_unfused, x, r, p, ap), bm4["unfused"]))
+    jit_bytes4 = bm4["unfused"] if engine == "pallas" else bm4["fused"]
+    rows.append(traffic_row("fig3_fused/milc_cg_update_unfused_jit",
+                            time_fn(jax.jit(cg_unfused), x, r, p, ap),
+                            jit_bytes4))
+    rows.append(traffic_row("fig3_fused/milc_cg_update_fused",
+                            time_fn(cg_fused, x, r, p, ap), bm4["fused"]))
+
+    # ---- LB step: collide -> propagate (launch-level fusion: propagation is
+    # a stencil, so the fusion is one cached jit, not one pallas program)
+    from repro.kernels.lb_collision import collide
+    from repro.kernels.lb_propagation import propagate
+    from repro.kernels.lb_propagation.ops import collide_propagate
+
+    dist = mk("dist", 19)
+    dist = dist.with_canonical(1.0 + 0.1 * dist.canonical())
+    force = mk("force", 3)
+
+    def lb_unfused(d, g):
+        return propagate(collide(d, g, tau=0.8, config=tgt), config=tgt).data
+
+    def lb_fused(d, g):
+        return collide_propagate(d, g, tau=0.8, config=tgt).data
+
+    # per-kernel traffic from the shared Fig. 4 model.  collide_propagate is
+    # launch-level fusion (one jit, still two kernels on pallas): only the
+    # jnp engine's XLA fusion can elide the post-collision intermediate's
+    # HBM round-trip (one write + one read of the 19-component field)
+    lb_un = (LUDWIG_KERNELS["collision"][0]
+             + LUDWIG_KERNELS["propagation"][0]) * nsites
+    lb_fu = lb_un if engine == "pallas" else lb_un - 2 * 19 * 4 * nsites
+    rows.append(traffic_row("fig3_fused/lb_step_unfused",
+                            time_fn(lb_unfused, dist, force), lb_un))
+    rows.append(traffic_row("fig3_fused/lb_step_unfused_jit",
+                            time_fn(jax.jit(lb_unfused), dist, force),
+                            lb_un if engine == "pallas" else lb_fu))
+    rows.append(traffic_row("fig3_fused/lb_step_fused",
+                            time_fn(lb_fused, dist, force), lb_fu))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fused", action="store_true",
+                    help="only the fused-vs-unfused launch-graph comparison")
+    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"],
+                    help="engine for the fused comparison wall-clock")
+    args = ap.parse_args(argv)
+    rows = []
+    if args.fused:
+        rows += fused_vs_unfused(engine=args.engine)
+    else:
+        rows += ludwig_decomposition()
+        rows += milc_decomposition()
+        rows += layout_vvl_sweep()
+        rows += fused_vs_unfused(engine=args.engine)
     for r in rows:
         print(r)
     return rows

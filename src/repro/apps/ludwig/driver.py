@@ -14,7 +14,10 @@ One timestep reproduces the paper's kernel decomposition (§2.1.1):
 Site-local stages run through core.target.launch so the engine (jnp vs
 pallas) and the data layout are pure configuration — the paper's central
 claim, which tests/test_ludwig.py asserts by running both engines step-
-for-step.
+for-step.  Adjacent site-local stages are *fused* via core.fuse.LaunchGraph
+(molecular field + stress; BE rhs + Q update; LB moments + collision), so
+each chain lowers to a single pallas_call and its intermediates never
+round-trip through HBM between launches.
 
 The sharded form (`make_sharded_step`) wraps the same stage functions in
 jax.shard_map on a Domain: per step it halo-exchanges Q (width 2), the
@@ -36,10 +39,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Field, Layout, SOA, TargetConfig, launch, target_sum
+from repro.core import (
+    Field, LaunchGraph, Layout, SOA, TargetConfig, launch, target_sum,
+)
 from repro.core import stencil as st
 from repro.kernels.lb_collision import collide
 from repro.kernels.lb_collision import ref as lbref
+from repro.kernels.lb_collision.ops import collide_kernel
 from repro.kernels.lb_propagation import ops as prop_ops
 from repro.lattice import Domain
 from . import gradients as gr
@@ -127,40 +133,73 @@ def stage_gradients(q_nd: jnp.ndarray):
     return gr.grad_central(q_nd), gr.laplacian(q_nd)
 
 
+# stage stanzas shared by every graph builder below — one definition per
+# kernel so the production step and the benchmark/test chains cannot drift
+def _add_mol_field(g: LaunchGraph, cfg: LudwigConfig) -> LaunchGraph:
+    return g.add(_mol_field_body, {"q": "q", "lapq": "lapq"}, {"h": 5},
+                 params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa))
+
+
+def _add_stress(g: LaunchGraph, cfg: LudwigConfig) -> LaunchGraph:
+    return g.add(_stress_body, {"q": "q", "h": "h", "dq": "dq"}, {"sigma": 9},
+                 params=dict(kappa=cfg.kappa, xi=cfg.xi))
+
+
+def _add_be_rhs(g: LaunchGraph, cfg: LudwigConfig) -> LaunchGraph:
+    return g.add(_be_rhs_body, {"q": "q", "h": "h", "w": "w"}, {"rhs": 5},
+                 params=dict(gamma_rot=cfg.gamma_rot, xi=cfg.xi))
+
+
+def _add_q_update(g: LaunchGraph, cfg: LudwigConfig) -> LaunchGraph:
+    return g.add(_q_update_body, {"q": "q", "rhs": "rhs", "adv": "adv"},
+                 {"q": 5}, rename={"q": "q_new"}, params=dict(dt=cfg.dt))
+
+
+def chem_stress_graph(cfg: LudwigConfig) -> LaunchGraph:
+    """molecular field -> stress as one fused chain (H also materialized:
+    the BE update needs it later in the step)."""
+    return _add_stress(_add_mol_field(LaunchGraph("ludwig_chem_stress"), cfg), cfg)
+
+
+def lc_update_graph(cfg: LudwigConfig) -> LaunchGraph:
+    """BE rhs -> Q update as one fused chain; rhs stays in VMEM."""
+    return _add_q_update(_add_be_rhs(LaunchGraph("ludwig_lc_update"), cfg), cfg)
+
+
+def lc_chain_graph(cfg: LudwigConfig) -> LaunchGraph:
+    """The 3-kernel LC chain (molecular field -> BE rhs -> Q update) fused
+    into one launch — the benchmarks' fused-vs-unfused exhibit; h and rhs
+    never touch HBM."""
+    g = _add_mol_field(LaunchGraph("ludwig_lc_chain"), cfg)
+    return _add_q_update(_add_be_rhs(g, cfg), cfg)
+
+
+def collide_moments_graph(cfg: LudwigConfig) -> LaunchGraph:
+    """LB moments + BGK collision fused: both stages read the same dist and
+    force Fields, which a fused launch streams from HBM once."""
+    return (
+        LaunchGraph("ludwig_collide_moments")
+        .add(_moments_body, {"dist": "dist", "force": "force"},
+             {"rho": 1, "u": 3})
+        .add(collide_kernel, {"dist": "dist", "force": "force"}, {"dist": 19},
+             rename={"dist": "dist1"}, params=dict(tau=cfg.tau))
+    )
+
+
 def stage_chemical_stress(state_q: Field, dq_nd, lapq_nd, cfg: LudwigConfig):
-    """molecular field + stress + force divergence."""
-    lapq = _mkfield("lapq", lapq_nd, cfg)
-    h = launch(
-        _mol_field_body,
-        {"q": state_q, "lapq": lapq},
-        {"h": 5},
+    """molecular field + stress (one fused launch) + force divergence."""
+    out = chem_stress_graph(cfg).launch(
+        {"q": state_q, "lapq": _mkfield("lapq", lapq_nd, cfg),
+         "dq": _mkfield("dq", dq_nd, cfg)},
         config=cfg.target,
-        params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa),
-    )["h"]
-    dq = _mkfield("dq", dq_nd, cfg)
-    sigma = launch(
-        _stress_body,
-        {"q": state_q, "h": h, "dq": dq},
-        {"sigma": 9},
-        config=cfg.target,
-        params=dict(kappa=cfg.kappa, xi=cfg.xi),
-    )["sigma"]
-    force_nd = gr.divergence(sigma.canonical_nd())
-    return h, force_nd
-
-
-def stage_collision(dist: Field, force: Field, cfg: LudwigConfig) -> Field:
-    return collide(dist, force, tau=cfg.tau, config=cfg.target)
+        outputs=("h", "sigma"),
+    )
+    force_nd = gr.divergence(out["sigma"].canonical_nd())
+    return out["h"], force_nd
 
 
 def stage_propagation(dist: Field, cfg: LudwigConfig) -> Field:
     return prop_ops.propagate(dist, config=cfg.target)
-
-
-def stage_hydrodynamics(dist: Field, force: Field, cfg: LudwigConfig):
-    out = launch(_moments_body, {"dist": dist, "force": force}, {"rho": 1, "u": 3},
-                 config=cfg.target)
-    return out["rho"], out["u"]
 
 
 def stage_advection(q_nd, u_nd):
@@ -169,22 +208,14 @@ def stage_advection(q_nd, u_nd):
 
 
 def stage_lc_update(state_q: Field, h: Field, w_nd, adv_nd, cfg: LudwigConfig) -> Field:
-    w = _mkfield("w", w_nd, cfg)
-    rhs = launch(
-        _be_rhs_body,
-        {"q": state_q, "h": h, "w": w},
-        {"rhs": 5},
+    q_new = lc_update_graph(cfg).launch(
+        {"q": state_q, "h": h, "w": _mkfield("w", w_nd, cfg),
+         "adv": _mkfield("adv", adv_nd, cfg)},
         config=cfg.target,
-        params=dict(gamma_rot=cfg.gamma_rot, xi=cfg.xi),
-    )["rhs"]
-    adv = _mkfield("adv", adv_nd, cfg)
-    return launch(
-        _q_update_body,
-        {"q": state_q, "rhs": rhs, "adv": adv},
-        {"q": 5},
-        config=cfg.target,
-        params=dict(dt=cfg.dt),
-    )["q"]
+        outputs=("q_new",),
+    )["q_new"]
+    # keep the Field name stable across steps (it is pytree aux data)
+    return dataclasses.replace(q_new, name=state_q.name)
 
 
 def _w_tensor(u_nd: jnp.ndarray) -> jnp.ndarray:
@@ -200,10 +231,16 @@ def step(state: LudwigState, cfg: LudwigConfig) -> LudwigState:
     h, force_nd = stage_chemical_stress(state.q, dq_nd, lapq_nd, cfg)
     force = _mkfield("force", force_nd, cfg)
 
-    dist1 = stage_collision(state.dist, force, cfg)
+    # moments + collision fused: dist and force stream from HBM once
+    cm = collide_moments_graph(cfg).launch(
+        {"dist": state.dist, "force": force},
+        config=cfg.target,
+        outputs=("dist1", "u"),
+    )
+    dist1 = dataclasses.replace(cm["dist1"], name=state.dist.name)
     dist2 = stage_propagation(dist1, cfg)
 
-    _, u = stage_hydrodynamics(state.dist, force, cfg)
+    u = cm["u"]
     u_nd = u.canonical_nd()
     w_nd = _w_tensor(u_nd)
     adv_nd = stage_advection(q_nd, u_nd)
@@ -229,10 +266,19 @@ def step_timed(state: LudwigState, cfg: LudwigConfig) -> Tuple[LudwigState, Dict
         "chemical_stress", stage_chemical_stress, state.q, dq_nd, lapq_nd, cfg
     )
     force = _mkfield("force", force_nd, cfg)
-    dist1 = timed("collision", stage_collision, state.dist, force, cfg)
+    # time the same fused moments+collision launch production step() runs;
+    # the row name matches the LUDWIG_KERNELS["collision_moments"] traffic
+    # model (dist+force read once, dist'+rho+u written)
+    cm = timed(
+        "collision_moments",
+        lambda: collide_moments_graph(cfg).launch(
+            {"dist": state.dist, "force": force},
+            config=cfg.target, outputs=("dist1", "u"),
+        ),
+    )
+    dist1 = dataclasses.replace(cm["dist1"], name=state.dist.name)
     dist2 = timed("propagation", stage_propagation, dist1, cfg)
-    _, u = stage_hydrodynamics(state.dist, force, cfg)
-    u_nd = u.canonical_nd()
+    u_nd = cm["u"].canonical_nd()
     w_nd = _w_tensor(u_nd)
     adv_nd = timed("advection", stage_advection, q_nd, u_nd)
     q_new = timed("lc_update", stage_lc_update, state.q, h, w_nd, adv_nd, cfg)
@@ -296,15 +342,12 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain):
         lapq_h = gr.laplacian(qh)
         mk = lambda name, arr: Field.from_canonical(name, arr, tuple(arr.shape[1:]), cfg.layout)
         qF = mk("q", qh)
-        h_F = launch(
-            _mol_field_body, {"q": qF, "lapq": mk("lapq", lapq_h)}, {"h": 5},
-            config=tgt, params=dict(a0=cfg.a0, gamma=cfg.gamma, kappa=cfg.kappa),
-        )["h"]
-        sigma = launch(
-            _stress_body, {"q": qF, "h": h_F, "dq": mk("dq", dq_h)}, {"sigma": 9},
-            config=tgt, params=dict(kappa=cfg.kappa, xi=cfg.xi),
-        )["sigma"]
-        force_h = gr.divergence(sigma.canonical_nd())   # valid ring >= 1
+        cs = chem_stress_graph(cfg).launch(
+            {"q": qF, "lapq": mk("lapq", lapq_h), "dq": mk("dq", dq_h)},
+            config=tgt, outputs=("h", "sigma"),
+        )
+        h_F = cs["h"]
+        force_h = gr.divergence(cs["sigma"].canonical_nd())   # valid ring >= 1
         force_nd = crop(force_h, WQ)
 
         # ---- collision on interior, then exchange dist and propagate
@@ -325,18 +368,13 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain):
         adv_h = gr.advective_divergence(qh1, uh)
         adv_nd = crop(adv_h, 1)
 
-        # ---- Beris-Edwards update on interior
+        # ---- Beris-Edwards update on interior (fused rhs -> update)
         qiF = mk("qi", q_nd)
-        rhs = launch(
-            _be_rhs_body,
-            {"q": qiF, "h": mk("h", crop(h_F.canonical_nd(), WQ)), "w": mk("w", w_nd)},
-            {"rhs": 5}, config=tgt, params=dict(gamma_rot=cfg.gamma_rot, xi=cfg.xi),
-        )["rhs"]
-        q_new = launch(
-            _q_update_body,
-            {"q": qiF, "rhs": rhs, "adv": mk("adv", adv_nd)},
-            {"q": 5}, config=tgt, params=dict(dt=cfg.dt),
-        )["q"]
+        q_new = lc_update_graph(cfg).launch(
+            {"q": qiF, "h": mk("h", crop(h_F.canonical_nd(), WQ)),
+             "w": mk("w", w_nd), "adv": mk("adv", adv_nd)},
+            config=tgt, outputs=("q_new",),
+        )["q_new"]
         return dist2_nd, q_new.canonical_nd()
 
     sharded = jax.shard_map(

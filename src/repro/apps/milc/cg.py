@@ -10,6 +10,12 @@ The linear algebra is decomposed exactly as the paper's MILC profile
 "Scalar Mult Add" — the axpy/xpay updates, which run through the
 targetDP-JAX launch machinery as site-local kernels so both engines and
 all layouts apply (paper C1/C2 for MILC).
+
+The CG inner update fuses its "Scalar Mult Add" chain via
+core.fuse.LaunchGraph: x+alpha*p, r-alpha*ap and the elementwise square
+feeding the residual norm run as ONE launch (p, ap, x, r stream from HBM
+once), with the traced alpha passed as a runtime scalar so the launch
+cache stays valid across iterations.
 """
 
 from __future__ import annotations
@@ -20,7 +26,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import Field, TargetConfig, launch, target_sum
+from repro.core import Field, LaunchGraph, TargetConfig, launch, target_sum
 from repro.kernels.wilson_dslash import dslash
 
 
@@ -34,6 +40,60 @@ def axpy(a, x: Field, y: Field, config: TargetConfig) -> Field:
     """a*x + y through the kernel layer (static a)."""
     return launch(_axpy_body, {"x": x, "y": y}, {"out": x.ncomp},
                   config=config, params=dict(a=a))["out"]
+
+
+def _fma_body(v):
+    """y + a*x with a supplied as a runtime (1, 1) scalar input."""
+    return {"out": v["y"] + v["a"] * v["x"]}
+
+
+def _square_body(v):
+    return {"out": v["x"] * v["x"]}
+
+
+def fused_xpay(y: Field, a, x: Field, config: TargetConfig) -> Field:
+    """y + a*x with traced a (one cached fused launch); keeps x's pytree
+    identity (name/layout) so it can ride a lax.while_loop carry."""
+    g = LaunchGraph("cg_xpay").add(
+        _fma_body, {"x": "x", "y": "y", "a": "a"}, {"out": x.ncomp}
+    )
+    out = g.launch({"x": x, "y": y}, scalars={"a": a}, config=config,
+                   out_layouts={"out": x.layout})["out"]
+    return x.with_data(out.data)
+
+
+def cg_update_graph(ncomp: int) -> LaunchGraph:
+    """The CG inner-update chain as a LaunchGraph (also used by the fused
+    benchmarks for bytes-moved accounting)."""
+    return (
+        LaunchGraph("cg_update")
+        .add(_fma_body, {"x": "p", "y": "x", "a": "alpha"}, {"out": ncomp},
+             rename={"out": "x_new"})
+        .add(_fma_body, {"x": "ap", "y": "r", "a": "neg_alpha"}, {"out": ncomp},
+             rename={"out": "r_new"})
+        .add(_square_body, {"x": "r_new"}, {"out": ncomp},
+             rename={"out": "rr_prod"})
+    )
+
+
+def fused_cg_update(x: Field, r: Field, p: Field, ap: Field, alpha,
+                    config: TargetConfig):
+    """The CG "Scalar Mult Add" chain as ONE fused launch:
+
+        x_new = x + alpha p,  r_new = r - alpha ap,  rr_prod = r_new * r_new
+
+    Unfused this is three kernels (p, ap, x, r and two intermediates round-
+    tripping HBM); fused, each operand streams in once and only the three
+    results stream out.  Returns (x_new, r_new, rr_prod) with x/r pytree
+    identity preserved."""
+    out = cg_update_graph(x.ncomp).launch(
+        {"x": x, "r": r, "p": p, "ap": ap},
+        scalars={"alpha": alpha, "neg_alpha": -alpha},
+        config=config,
+        outputs=("x_new", "r_new", "rr_prod"),
+        out_layouts={"x_new": x.layout, "r_new": r.layout, "rr_prod": r.layout},
+    )
+    return x.with_data(out["x_new"].data), r.with_data(out["r_new"].data), out["rr_prod"]
 
 
 def dot(x: Field, y: Field, config: TargetConfig) -> jnp.ndarray:
@@ -116,13 +176,15 @@ def cg(
         x, r, p, rr, it = carry
         ap = apply_a(p)
         alpha = rr / gdot(p, ap)
-        xc = x.canonical() + alpha * p.canonical()
-        rc = r.canonical() - alpha * ap.canonical()
-        x = x.with_canonical(xc)
-        r = r.with_canonical(rc)
-        rr_new = gdot(r, r)
+        # fused "Scalar Mult Add" chain: x/r updates + residual square in
+        # one launch; the residual reduction follows outside (it crosses
+        # sites, which site-local fusion cannot).
+        x, r, prod = fused_cg_update(x, r, p, ap, alpha, config)
+        rr_new = target_sum(prod, config).sum()
+        for ax in psum_axes:
+            rr_new = jax.lax.psum(rr_new, ax)
         beta = rr_new / rr
-        p = p.with_canonical(rc + beta * p.canonical())
+        p = fused_xpay(r, beta, p, config)
         return (x, r, p, rr_new, it + 1)
 
     rr0 = gdot(r0, r0)

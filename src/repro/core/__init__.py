@@ -7,6 +7,7 @@ Memory spaces          ->  core.memspace (targetMalloc / copyToTarget / ...)
 Reductions             ->  core.reduce   (targetDoubleSum ...)
 Stencils               ->  core.stencil
 Halo exchange (MPI)    ->  core.halo     (shard_map + ppermute)
+Kernel fusion          ->  core.fuse     (LaunchGraph: chain -> one pallas_call)
 """
 
 from .layout import AOS, SOA, Layout, LayoutKind, aosoa, parse_layout  # noqa: F401
@@ -17,7 +18,9 @@ from .target import (  # noqa: F401
     choose_vvl,
     kernel,
     launch,
+    resolve_vvl,
 )
+from .fuse import LaunchGraph, fused_launch  # noqa: F401
 from .memspace import (  # noqa: F401
     copy_const_to_target,
     copy_from_target,

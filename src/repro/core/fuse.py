@@ -1,0 +1,482 @@
+"""Launch graphs: fuse chains of site-local kernels into one device kernel.
+
+The paper's kernels are memory-bandwidth bound (§4), so the dominant cost of
+a multi-kernel timestep is the HBM round-trip between ``__targetLaunch__``es:
+every intermediate field is written to HBM by one kernel and re-read by the
+next.  A :class:`LaunchGraph` takes an ordered chain of
+:class:`~repro.core.target.TargetKernel` stages whose outputs feed later
+inputs, traces the composed body once, and lowers it to a **single**
+``pl.pallas_call`` over the site-block grid — intermediates stay as values in
+VMEM/VREGs and never touch HBM.  The jnp engine runs the same composed body
+over whole-lattice canonical arrays (and is the fusion oracle).
+
+Launch cache
+------------
+Each distinct (kernel chain, layouts, vvl, out_specs, input signature) is
+built and ``jax.jit``-compiled once; repeated launches reuse the compiled
+callable, so a timestep loop does not re-trace (a plain ``core.target.launch``
+builds a fresh ``pallas_call`` per invocation).  The cache key is purely
+structural — stage *params* must be static Python values.  Runtime scalars
+(e.g. CG's traced alpha/beta) are passed via ``scalars=``: they become
+``(1, 1)`` array arguments of the jitted callable (a VMEM block each program
+reads), not cache-key material.
+
+Probes: :func:`stats` counts traces and ``pallas_call`` constructions (each
+fused pallas launch builds exactly one), so tests can assert both the
+single-kernel lowering and cache hits.  :func:`clear_cache` /
+:func:`reset_stats` give tests a clean slate.
+
+Example::
+
+    g = (LaunchGraph("chain")
+         .add(body_a, ins={"x": "x"}, out_specs={"t": 3})
+         .add(body_b, ins={"t": "t", "y": "y"}, out_specs={"out": 3}))
+    out = g.launch({"x": fx, "y": fy}, config=TargetConfig("pallas"))["out"]
+
+Stage ``ins`` maps body argument names to graph value names (external Field
+inputs or earlier stage outputs); ``rename=`` relabels a body output in the
+graph namespace so one body can appear in several stages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .field import Field
+from .layout import Layout
+from .target import (
+    TargetConfig,
+    TargetKernel,
+    build_in_specs,
+    build_out_specs,
+    resolve_vvl,
+)
+
+__all__ = [
+    "LaunchGraph",
+    "fused_launch",
+    "stats",
+    "reset_stats",
+    "clear_cache",
+]
+
+_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_CACHE_CAP = 256
+
+_STATS = {"traces": 0, "pallas_calls": 0, "cache_hits": 0, "cache_misses": 0}
+
+
+def stats() -> Dict[str, int]:
+    """Launch-cache counters: traces (jit trace-time executions of a fused
+    callable), pallas_calls (pallas_call constructions — one per fused pallas
+    trace), cache_hits/cache_misses."""
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _hashable(v) -> bool:
+    try:
+        hash(v)
+    except TypeError:
+        return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class _Stage:
+    kernel: TargetKernel
+    ins: Tuple[Tuple[str, str], ...]              # (body arg, graph value name)
+    outs: Tuple[Tuple[str, str, int, object], ...]  # (body key, value, ncomp, dtype|None)
+    params: Tuple[Tuple[str, object], ...]
+
+    def signature(self):
+        # keyed on the body *function*, not the TargetKernel wrapper, so
+        # graphs rebuilt per call (e.g. per LudwigConfig) still hit the cache
+        return (self.kernel.body, self.kernel.name, self.ins, self.outs, self.params)
+
+
+class LaunchGraph:
+    """An ordered chain of site-local kernel stages fused into one launch."""
+
+    def __init__(self, name: str = "fused"):
+        self.name = name
+        self._stages: List[_Stage] = []
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"LaunchGraph({self.name}, stages={[s.kernel.name for s in self._stages]})"
+
+    def add(
+        self,
+        kern: Union[TargetKernel, Callable],
+        ins: Mapping[str, str],
+        out_specs: Mapping[str, Union[int, Tuple[int, object]]],
+        *,
+        params: Optional[Mapping] = None,
+        rename: Optional[Mapping[str, str]] = None,
+    ) -> "LaunchGraph":
+        """Append a stage.  Returns self (chainable).
+
+        ins        body argument name -> graph value name.
+        out_specs  body output key -> ncomp (or (ncomp, dtype)).
+        rename     body output key -> graph value name (default: the key).
+        params     static keyword arguments baked into the trace (and the
+                   cache key).  Traced values must go through launch scalars.
+        """
+        if not isinstance(kern, TargetKernel):
+            kern = TargetKernel(kern)
+        params = dict(params or {})
+        for k, v in params.items():
+            # params are baked into the (hashed) cache key: traced values and
+            # arrays must go through launch scalars instead
+            if isinstance(v, (jax.core.Tracer, jax.Array)) or not _hashable(v):
+                raise TypeError(
+                    f"stage {kern.name!r} param {k!r} is a traced/array/"
+                    f"unhashable value; pass runtime scalars via "
+                    f"launch(..., scalars={{...}}) or use a static Python value"
+                )
+        rename = dict(rename or {})
+        produced = {v for st in self._stages for (_, v, _, _) in st.outs}
+        outs = []
+        for body_key, spec in out_specs.items():
+            ncomp, dtype = spec if isinstance(spec, tuple) else (spec, None)
+            vname = rename.get(body_key, body_key)
+            if vname in produced:
+                raise ValueError(
+                    f"graph value {vname!r} produced twice; use rename= to "
+                    f"give stage {kern.name!r}'s output a fresh name"
+                )
+            produced.add(vname)
+            outs.append((body_key, vname, int(ncomp), dtype))
+        self._stages.append(
+            _Stage(
+                kern,
+                tuple(sorted(ins.items())),
+                tuple(outs),
+                tuple(sorted(params.items())),
+            )
+        )
+        return self
+
+    # -- graph structure -------------------------------------------------------
+
+    def external_inputs(self) -> List[str]:
+        """Value names consumed but never produced by an earlier stage, in
+        first-use order — what launch() must be fed as Fields or scalars."""
+        produced, ext = set(), []
+        for st in self._stages:
+            for _, vname in st.ins:
+                if vname not in produced and vname not in ext:
+                    ext.append(vname)
+            for _, vname, _, _ in st.outs:
+                produced.add(vname)
+        return ext
+
+    def _produced(self) -> Dict[str, Tuple[int, object]]:
+        return {
+            vname: (ncomp, dtype)
+            for st in self._stages
+            for (_, vname, ncomp, dtype) in st.outs
+        }
+
+    def bytes_moved(
+        self,
+        ins_ncomp: Mapping[str, int],
+        nsites: int,
+        outputs: Optional[Sequence[str]] = None,
+        itemsize: int = 4,
+    ) -> Dict[str, int]:
+        """HBM traffic model of this chain, fused vs unfused (paper Fig. 4
+        counting: reads + writes, itemsize bytes per element).
+
+        unfused: every stage reads all its inputs from and writes all its
+        outputs to HBM.  fused: each distinct external input is read once and
+        only the requested graph outputs are written.  Scalars are ignored.
+        """
+        ncomp = dict(ins_ncomp)
+        for vname, (nc, _) in self._produced().items():
+            ncomp[vname] = nc
+        if outputs is None:
+            outputs = [v for (_, v, _, _) in self._stages[-1].outs]
+        unfused = 0
+        for st in self._stages:
+            for _, vname in st.ins:
+                unfused += ncomp.get(vname, 0)
+            for _, vname, nc, _ in st.outs:
+                unfused += nc
+        fused = sum(ncomp.get(n, 0) for n in self.external_inputs())
+        fused += sum(ncomp[o] for o in outputs)
+        return {
+            "unfused": unfused * nsites * itemsize,
+            "fused": fused * nsites * itemsize,
+        }
+
+    # -- execution --------------------------------------------------------------
+
+    def launch(
+        self,
+        ins: Dict[str, Field],
+        *,
+        config: Optional[TargetConfig] = None,
+        outputs: Optional[Sequence[str]] = None,
+        scalars: Optional[Mapping] = None,
+        out_layouts: Optional[Mapping[str, Layout]] = None,
+    ) -> Dict[str, Field]:
+        """Execute the fused chain (the multi-kernel __targetLaunch__).
+
+        ins         graph value name -> input Field (all sharing nsites).
+        outputs     graph value names to materialize as Fields (default: the
+                    last stage's outputs).  Intermediates not listed here
+                    never touch HBM on the pallas engine.
+        scalars     graph value name -> runtime scalar (traced values OK);
+                    bodies see them as (1, 1) arrays that broadcast.
+        out_layouts graph output name -> Layout (default: first input's).
+        """
+        if not self._stages:
+            raise ValueError("LaunchGraph has no stages")
+        if not ins:
+            raise ValueError("fused launch needs at least one input Field")
+        config = config or TargetConfig()
+        scalars = dict(scalars or {})
+
+        first = next(iter(ins.values()))
+        nsites = first.nsites
+        bad = {k: f.lattice for k, f in ins.items() if f.lattice != first.lattice}
+        if bad:
+            raise ValueError(
+                f"all Fields in a fused launch must share nsites and lattice "
+                f"shape: {first.name!r} has {first.lattice}, mismatched {bad}"
+            )
+
+        double = sorted(set(ins) & set(scalars))
+        if double:
+            raise ValueError(
+                f"value(s) {double} supplied as both input Fields and "
+                f"scalars; each graph value must have exactly one binding"
+            )
+        ext = self.external_inputs()
+        missing = [n for n in ext if n not in ins and n not in scalars]
+        if missing:
+            raise ValueError(
+                f"graph consumes value(s) {missing} produced by no earlier "
+                f"stage and not supplied as inputs or scalars"
+            )
+        ordered_ins = [n for n in ext if n in ins]
+        ordered_scalars = [n for n in ext if n in scalars]
+
+        prod = self._produced()
+        if outputs is None:
+            outputs = [v for (_, v, _, _) in self._stages[-1].outs]
+        outputs = tuple(outputs)
+        unknown = [o for o in outputs if o not in prod]
+        if unknown:
+            raise ValueError(f"requested outputs {unknown} produced by no stage")
+
+        out_layouts = dict(out_layouts or {})
+        for o in outputs:
+            out_layouts.setdefault(o, first.layout)
+        # resolve default dtypes now so they are part of the cache key
+        out_info = {
+            o: (prod[o][0], jnp.dtype(prod[o][1] or first.dtype)) for o in outputs
+        }
+
+        engine = config.engine
+        if engine == "pallas":
+            vvl = resolve_vvl(
+                config,
+                nsites,
+                [ins[n].layout for n in ordered_ins]
+                + [out_layouts[o] for o in outputs],
+            )
+            interpret = config.resolved_interpret()
+        elif engine == "jnp":
+            vvl, interpret = 0, False
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+
+        key = (
+            engine,
+            vvl,
+            interpret,
+            nsites,
+            tuple(st.signature() for st in self._stages),
+            tuple(
+                (n, ins[n].ncomp, str(ins[n].dtype), ins[n].layout)
+                for n in ordered_ins
+            ),
+            tuple(ordered_scalars),
+            outputs,
+            tuple((o, out_layouts[o], str(out_info[o][1])) for o in outputs),
+        )
+        fn = _CACHE.get(key)
+        if fn is None:
+            _STATS["cache_misses"] += 1
+            fn = self._build(
+                engine=engine,
+                ordered_ins=ordered_ins,
+                in_meta=[(ins[n].ncomp, ins[n].layout) for n in ordered_ins],
+                ordered_scalars=ordered_scalars,
+                outputs=outputs,
+                out_info=out_info,
+                out_layouts=out_layouts,
+                nsites=nsites,
+                vvl=vvl,
+                interpret=interpret,
+            )
+            _CACHE[key] = fn
+            while len(_CACHE) > _CACHE_CAP:
+                _CACHE.popitem(last=False)
+        else:
+            _STATS["cache_hits"] += 1
+            _CACHE.move_to_end(key)
+
+        datas = tuple(ins[n].data for n in ordered_ins)
+        svals = tuple(
+            jnp.asarray(scalars[n], first.dtype).reshape(1, 1)
+            for n in ordered_scalars
+        )
+        results = fn(datas, svals)
+
+        fields = {}
+        for o, phys in zip(outputs, results):
+            ncomp, _ = out_info[o]
+            fields[o] = Field(o, ncomp, first.lattice, out_layouts[o], phys)
+        return fields
+
+    # -- lowering ---------------------------------------------------------------
+
+    def _run_stages(self, values: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Composed body: one pass over all stages, in either engine's trace.
+        ``values`` maps graph names to (ncomp, L) arrays (L = nsites for jnp,
+        vvl inside the pallas kernel) plus (1, 1) scalars."""
+        for st in self._stages:
+            chunks = {arg: values[v] for arg, v in st.ins}
+            outs = st.kernel.body(chunks, **dict(st.params))
+            for body_key, vname, ncomp, _ in st.outs:
+                arr = outs[body_key]
+                if arr.shape[0] != ncomp:
+                    raise ValueError(
+                        f"stage {st.kernel.name!r} output {body_key!r} has "
+                        f"ncomp {arr.shape[0]}, declared {ncomp}"
+                    )
+                values[vname] = arr
+        return values
+
+    def _build(
+        self,
+        *,
+        engine: str,
+        ordered_ins: Sequence[str],
+        in_meta: Sequence[Tuple[int, Layout]],
+        ordered_scalars: Sequence[str],
+        outputs: Tuple[str, ...],
+        out_info: Mapping[str, Tuple[int, object]],
+        out_layouts: Mapping[str, Layout],
+        nsites: int,
+        vvl: int,
+        interpret: bool,
+    ) -> Callable:
+        run_stages = self._run_stages
+
+        if engine == "jnp":
+
+            def fn(datas, svals):
+                _STATS["traces"] += 1
+                values = {}
+                for n, (_, lay), d in zip(ordered_ins, in_meta, datas):
+                    values[n] = lay.unpack(d)
+                for n, s in zip(ordered_scalars, svals):
+                    values[n] = s
+                values = run_stages(values)
+                return tuple(
+                    out_layouts[o].pack(values[o].astype(out_info[o][1]))
+                    for o in outputs
+                )
+
+            return jax.jit(fn)
+
+        # pallas: the whole chain is ONE pallas_call over the site-block grid
+        grid = (nsites // vvl,)
+        nin, nsc = len(ordered_ins), len(ordered_scalars)
+        in_specs = build_in_specs(in_meta, vvl) + [
+            pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in range(nsc)
+        ]
+        out_shapes, out_block_specs = build_out_specs(
+            outputs, out_info, out_layouts, nsites, vvl
+        )
+        name = self.name
+
+        def fused_kernel(*refs):
+            in_refs = refs[:nin]
+            sc_refs = refs[nin : nin + nsc]
+            out_refs = refs[nin + nsc :]
+            values = {}
+            for n, (ncomp, lay), r in zip(ordered_ins, in_meta, in_refs):
+                values[n] = lay.block_to_canonical(r[...], ncomp, vvl)
+            for n, r in zip(ordered_scalars, sc_refs):
+                values[n] = r[...]
+            values = run_stages(values)
+            for o, r in zip(outputs, out_refs):
+                ncomp, dtype = out_info[o]
+                r[...] = out_layouts[o].canonical_to_block(
+                    values[o].astype(dtype), ncomp, vvl
+                )
+
+        def fn(datas, svals):
+            _STATS["traces"] += 1
+            _STATS["pallas_calls"] += 1
+            call = pl.pallas_call(
+                fused_kernel,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=(
+                    out_block_specs if len(out_block_specs) > 1 else out_block_specs[0]
+                ),
+                out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+                interpret=interpret,
+                name=name,
+            )
+            res = call(*datas, *svals)
+            if len(outputs) == 1:
+                res = (res,)
+            return tuple(res)
+
+        return jax.jit(fn)
+
+
+def fused_launch(
+    stages: Sequence[Tuple],
+    ins: Dict[str, Field],
+    *,
+    config: Optional[TargetConfig] = None,
+    outputs: Optional[Sequence[str]] = None,
+    scalars: Optional[Mapping] = None,
+    out_layouts: Optional[Mapping[str, Layout]] = None,
+    name: str = "fused",
+) -> Dict[str, Field]:
+    """One-shot form: each stage is (kernel, ins, out_specs[, params[, rename]]).
+
+    Equivalent to building a LaunchGraph and launching it; the launch cache
+    keys on the stage bodies, so rebuilt graphs still hit."""
+    g = LaunchGraph(name)
+    for st in stages:
+        kern, st_ins, st_outs = st[0], st[1], st[2]
+        params = st[3] if len(st) > 3 else None
+        rename = st[4] if len(st) > 4 else None
+        g.add(kern, st_ins, st_outs, params=params, rename=rename)
+    return g.launch(
+        ins, config=config, outputs=outputs, scalars=scalars, out_layouts=out_layouts
+    )

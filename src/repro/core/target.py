@@ -21,6 +21,14 @@ Site-local kernels only (collision, stress, LC update, MILC linear algebra).
 Stencil kernels (propagation, dslash) have bespoke pallas implementations in
 ``repro.kernels`` and jnp implementations via ``core.stencil``; both engines
 remain available for them through their ops.py wrappers.
+
+Chains of site-local launches whose outputs feed later inputs can be fused
+into a *single* device kernel (intermediates never round-trip through HBM)
+with ``core.fuse.LaunchGraph`` / ``core.fuse.fused_launch``, which shares the
+BlockSpec machinery below (``build_in_specs`` / ``build_out_specs`` /
+``resolve_vvl``) and adds a ``jax.jit``-backed launch cache.  A single
+``launch`` remains un-cached by design: its params may be traced values
+(e.g. CG's alpha under ``lax.while_loop``), which must not enter a cache key.
 """
 
 from __future__ import annotations
@@ -28,16 +36,23 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .field import Field
-from .layout import Layout
+from .layout import Layout, LayoutKind
 
-__all__ = ["TargetConfig", "kernel", "launch", "choose_vvl", "TargetKernel"]
+__all__ = [
+    "TargetConfig",
+    "kernel",
+    "launch",
+    "choose_vvl",
+    "resolve_vvl",
+    "TargetKernel",
+]
 
 
 def _on_tpu() -> bool:
@@ -66,13 +81,67 @@ class TargetConfig:
         return not _on_tpu()
 
 
-def choose_vvl(nsites: int, preferred: int = 128) -> int:
-    """Largest divisor of nsites that is <= preferred (and a multiple of the
-    AoSoA SAL when relevant — callers align preferred to their SAL)."""
-    v = min(preferred, nsites)
-    while nsites % v:
-        v -= 1
-    return max(v, 1)
+def choose_vvl(nsites: int, preferred: int = 128, multiple_of: int = 1) -> int:
+    """Largest divisor of nsites that is <= preferred and a multiple of
+    ``multiple_of`` (the lcm of the AoSoA SALs in play, so every VMEM block
+    is a whole number of short arrays).  When no such divisor <= preferred
+    exists, falls back to ``multiple_of`` itself — correctness (SAL-aligned
+    blocks) wins over the preferred block size — and raises only when even
+    that cannot divide the lattice."""
+    for v in range(min(preferred, nsites), 0, -1):
+        if nsites % v == 0 and v % multiple_of == 0:
+            return v
+    if multiple_of <= nsites and nsites % multiple_of == 0:
+        return multiple_of
+    raise ValueError(
+        f"no vvl <= {preferred} divides nsites={nsites} and is a multiple "
+        f"of sal alignment {multiple_of}"
+    )
+
+
+def resolve_vvl(config: "TargetConfig", nsites: int,
+                layouts: Sequence[Layout]) -> int:
+    """config.vvl when it fits, else the best choose_vvl fallback.
+
+    'Fits' means vvl | nsites and sal | vvl for every AoSoA layout touched by
+    the launch; otherwise the largest conforming divisor is substituted, so
+    odd lattice sizes launch instead of raising (auto-vvl)."""
+    align = 1
+    for lay in layouts:
+        if lay.kind is LayoutKind.AOSOA:
+            align = align * lay.sal // math.gcd(align, lay.sal)
+    vvl = config.vvl
+    if nsites % vvl == 0 and vvl % align == 0:
+        return vvl
+    return choose_vvl(nsites, vvl, multiple_of=align)
+
+
+def build_in_specs(
+    in_meta: Sequence[Tuple[int, Layout]], vvl: int
+) -> List[pl.BlockSpec]:
+    """One BlockSpec per (ncomp, Layout) input, derived from its Layout
+    (shared by the single-kernel path and the fused launch-graph path)."""
+    return [
+        pl.BlockSpec(lay.block_shape(ncomp, vvl), lay.block_index_map())
+        for ncomp, lay in in_meta
+    ]
+
+
+def build_out_specs(
+    out_names: Sequence[str],
+    out_specs: Mapping[str, Tuple[int, object]],
+    out_layouts: Mapping[str, Layout],
+    nsites: int,
+    vvl: int,
+) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
+    """(out_shape, out BlockSpec) per output, derived from its Layout."""
+    shapes, specs = [], []
+    for k in out_names:
+        ncomp, dtype = out_specs[k]
+        lay = out_layouts[k]
+        shapes.append(jax.ShapeDtypeStruct(lay.physical_shape(ncomp, nsites), dtype))
+        specs.append(pl.BlockSpec(lay.block_shape(ncomp, vvl), lay.block_index_map()))
+    return shapes, specs
 
 
 class TargetKernel:
@@ -112,24 +181,13 @@ class TargetKernel:
             )
         grid = (nsites // vvl,)
 
-        in_block_specs = [
-            pl.BlockSpec(
-                f.layout.block_shape(f.ncomp, vvl), f.layout.block_index_map()
-            )
-            for f in ins.values()
-        ]
+        in_block_specs = build_in_specs(
+            [(f.ncomp, f.layout) for f in ins.values()], vvl
+        )
         out_names = list(out_specs)
-        out_shapes = []
-        out_block_specs = []
-        for k in out_names:
-            ncomp, dtype = out_specs[k]
-            lay = out_layouts[k]
-            out_shapes.append(
-                jax.ShapeDtypeStruct(lay.physical_shape(ncomp, nsites), dtype)
-            )
-            out_block_specs.append(
-                pl.BlockSpec(lay.block_shape(ncomp, vvl), lay.block_index_map())
-            )
+        out_shapes, out_block_specs = build_out_specs(
+            out_names, out_specs, out_layouts, nsites, vvl
+        )
 
         body = self.body
         static_params = dict(params)
@@ -220,11 +278,18 @@ def launch(
     if config.engine == "jnp":
         outs = kern._run_jnp(ins, params)
     elif config.engine == "pallas":
+        # auto-vvl: fall back to the largest conforming divisor when
+        # config.vvl does not divide nsites (or violates an AoSoA SAL).
+        vvl = resolve_vvl(
+            config,
+            first.nsites,
+            [f.layout for f in ins.values()] + [out_layouts[k] for k in out_specs],
+        )
         outs = kern._run_pallas(
             ins,
             out_specs,
             params,
-            vvl=config.vvl,
+            vvl=vvl,
             interpret=config.resolved_interpret(),
             out_layouts=out_layouts,
         )

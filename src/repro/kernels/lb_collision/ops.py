@@ -6,8 +6,18 @@ import functools
 
 import jax
 
-from repro.core import Field, TargetConfig
+from repro.core import Field, TargetConfig, TargetKernel, resolve_vvl
 from . import kernel, ref
+
+
+def _collide_body(v, *, tau: float):
+    """Site-local chunk body — the same source as the bespoke pallas kernel,
+    exposed as a TargetKernel so collision can join fused launch graphs
+    (core.fuse) with other site-local stages."""
+    return {"dist": ref.collide_chunk(v["dist"], v["force"], tau)}
+
+
+collide_kernel = TargetKernel(_collide_body, name="lb_collision")
 
 
 def collide(
@@ -24,7 +34,7 @@ def collide(
             tau=tau,
             layout=dist.layout,
             force_layout=force.layout,
-            vvl=config.vvl,
+            vvl=resolve_vvl(config, dist.nsites, [dist.layout, force.layout]),
             nsites=dist.nsites,
             interpret=config.resolved_interpret(),
         )

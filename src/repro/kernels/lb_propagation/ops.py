@@ -1,10 +1,22 @@
-"""Public wrapper for LB propagation (engine dispatch)."""
+"""Public wrapper for LB propagation (engine dispatch) and the fused
+collision -> propagation LB step.
+
+Propagation is a stencil (site-neighbour gather), so it cannot be fused
+site-locally into one pallas program with the collision; the fusion here is
+at the launch level: both stages run inside one cached ``jax.jit`` callable,
+so the post-collision distributions flow straight into the streaming step
+without a host round-trip or re-trace per timestep (the collision itself
+goes through the bespoke pallas kernel / jnp oracle as configured)."""
 
 from __future__ import annotations
 
+import functools
+from typing import Tuple
+
+import jax
 import jax.numpy as jnp
 
-from repro.core import Field, TargetConfig, stencil
+from repro.core import Field, Layout, TargetConfig, stencil
 from . import kernel, ref
 
 
@@ -22,6 +34,35 @@ def propagate(dist: Field, *, config: TargetConfig) -> Field:
     else:
         raise ValueError(f"unknown engine {config.engine!r}")
     return dist.with_canonical(out.reshape(dist.ncomp, dist.nsites))
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_step(lattice: Tuple[int, ...], ncomp: int, lay: Layout,
+                fncomp: int, flay: Layout, tau: float, config: TargetConfig):
+    """Build + jit one collide->propagate step per (lattice, ncomps, layouts,
+    tau, config); jax.jit handles dtype/shape retraces within an entry."""
+    from repro.kernels.lb_collision.ops import collide
+
+    def step(dist_data, force_data):
+        d = Field("dist", ncomp, lattice, lay, dist_data)
+        g = Field("force", fncomp, lattice, flay, force_data)
+        d1 = collide(d, g, tau=tau, config=config)
+        return propagate(d1, config=config).data
+
+    return jax.jit(step)
+
+
+def collide_propagate(
+    dist: Field, force: Field, *, tau: float, config: TargetConfig
+) -> Field:
+    """Fused LB step: BGK collision immediately followed by streaming,
+    compiled once per (layouts, lattice, tau, engine config) and cached.
+
+    tau is static (baked into the compiled step, one cache entry per
+    value) — for a traced tau sweep call collide/propagate directly."""
+    fn = _fused_step(dist.lattice, dist.ncomp, dist.layout,
+                     force.ncomp, force.layout, float(tau), config)
+    return dist.with_data(fn(dist.data, force.data))
 
 
 def propagate_halo(dist_halo: jnp.ndarray, *, config: TargetConfig, width: int = 1):

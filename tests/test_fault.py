@@ -36,6 +36,7 @@ def harness():
     return step, make_state, stream, mb
 
 
+@pytest.mark.slow
 def test_resume_reproduces_uninterrupted(harness, tmp_path):
     step, make_state, stream, mb = harness
     ref_dir, dir2 = str(tmp_path / "ref"), str(tmp_path / "crash")

@@ -16,6 +16,7 @@ from repro.train.serve_step import build_serve_step, generate
 from repro.train.train_step import TrainConfig, build_train_step
 
 
+@pytest.mark.slow
 def test_train_then_serve_roundtrip():
     """Memorize a tiny corpus, then greedy-decode it back."""
     cfg = dataclasses.replace(get_arch("olmo-1b", smoke=True),

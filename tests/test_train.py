@@ -28,7 +28,14 @@ def setup():
     return cfg, params, fixed
 
 
-@pytest.mark.parametrize("kind", ["adamw", "adamw8bit", "adafactor"])
+# adamw stays in tier-1; the 8-bit/adafactor variants compile a second and
+# third full train graph apiece, so they ride the -m slow sweep
+@pytest.mark.parametrize(
+    "kind",
+    ["adamw",
+     pytest.param("adamw8bit", marks=pytest.mark.slow),
+     pytest.param("adafactor", marks=pytest.mark.slow)],
+)
 def test_optimizer_memorizes_fixed_batch(setup, kind):
     cfg, params, fixed = setup
     tcfg = TrainConfig(opt=OptConfig(kind=kind, lr=1e-2))
@@ -41,6 +48,7 @@ def test_optimizer_memorizes_fixed_batch(setup, kind):
     assert losses[-1] < losses[0] - 2.0, (kind, losses)
 
 
+@pytest.mark.slow
 def test_grad_compression_converges(setup):
     cfg, params, fixed = setup
     tcfg = TrainConfig(opt=OptConfig(lr=1e-2), grad_compression=True)
@@ -53,6 +61,7 @@ def test_grad_compression_converges(setup):
     assert losses[-1] < losses[0] - 2.0
 
 
+@pytest.mark.slow
 def test_microbatch_equals_full_batch(setup):
     """Gradient accumulation is loss-equivalent to the full batch."""
     cfg, params, fixed = setup
