@@ -4,7 +4,7 @@ timing helpers, kernel byte/flop accounting."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
 import numpy as np
@@ -57,11 +57,14 @@ def traffic_row(name: str, t_s: float, bytes_moved: int) -> str:
 LUDWIG_KERNELS = {
     # name: (bytes_per_site, flops_per_site)
     "collision": ((19 + 3 + 19) * 4, 300),          # f in, force in, f out
-    # fused moments+collision launch (what driver.step actually runs):
-    # f+force in once, f'+u out (rho is an unrequested intermediate and
-    # never touches HBM)
+    # fused moments+collision launch: f+force in once, f'+u out (rho is an
+    # unrequested intermediate and never touches HBM)
     "collision_moments": ((19 + 3 + 19 + 3) * 4, 330),
     "propagation": ((19 + 19) * 4, 0),
+    # fused moments+collision+streaming stencil launch (what driver.step
+    # actually runs): f+force in once, streamed f''+u out — the
+    # post-collision f' never touches HBM
+    "lb_step": ((19 + 3 + 19 + 3) * 4, 330),
     "order_parameter_gradients": ((5 + 15 + 5) * 4, 5 * 8),
     "chemical_stress": ((5 + 5 + 15 + 9) * 4, 450),
     "lc_update": ((5 + 5 + 9 + 5 + 5) * 4, 400),

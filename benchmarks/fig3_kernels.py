@@ -1,10 +1,19 @@
 """Paper Fig. 3: full-application time decomposed per kernel, plus the
 layout x VVL configuration sweep (bottom panel) and the fused-vs-unfused
-launch-graph comparison (``--fused``): the Ludwig 3-kernel LC chain and the
-MILC CG update chain, each timed unfused (one launch per kernel, every
-intermediate through HBM) and fused (one launch for the chain), with the
-bytes-moved model from LaunchGraph.bytes_moved — the Roofline gain of
-core.fuse measured, not asserted.
+launch-graph comparison (``--fused``): the Ludwig 3-kernel LC chain, the
+MILC CG update chain (with its fused terminal residual reduction), the
+fused-*stencil* LB collide->propagate step and the fused Wilson
+dslash+axpy+dot normal-operator application — each timed unfused (one
+launch per kernel, every intermediate and reduction input through HBM) and
+fused (one launch for the chain), with the bytes-moved model from
+LaunchGraph.bytes_moved — the Roofline gain of core.fuse measured, not
+asserted.
+
+CI mode: ``--smoke --json BENCH_ci.json --gate 0.10`` runs tiny lattices,
+writes the rows + structured metrics to JSON, and exits non-zero if any
+fused chain is slower than its per-launch unfused baseline beyond the
+given relative tolerance — the perf-regression gate wired into
+.github/workflows/ci.yml (job: bench-smoke).
 
 On this CPU-only container the *measured* numbers are the jnp-engine wall
 times (the paper's "host C" build); per-processor *modelled* times come
@@ -19,19 +28,22 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Field, SOA, AOS, TargetConfig, aosoa, launch
+from repro.core import Field, SOA, AOS, TargetConfig, aosoa, launch, target_sum
 from repro.apps.ludwig import LudwigConfig, init_state
 from repro.apps.ludwig.driver import (
     _be_rhs_body, _mol_field_body, _q_update_body, lc_chain_graph, step_timed,
 )
 from repro.apps.milc import MilcConfig, init_problem
 from repro.apps.milc.cg import (
-    _square_body, cg_update_graph, fused_cg_update, make_wilson_op, axpy, dot,
+    _square_body, cg_update_graph, fused_cg_update, make_fused_normal,
+    make_wilson_op, wilson_normal_graph, axpy, dot,
 )
 
 try:
@@ -125,10 +137,21 @@ def fused_vs_unfused(lattice=(16, 16, 16), milc_lattice=(8, 8, 8, 8),
     external traffic as fused (the LaunchGraph's traffic win is a property
     of the pallas/TPU target — on jnp its win is the launch cache and the
     guaranteed single kernel).  On a memory-bound kernel set the byte ratio
-    IS the roofline-speedup bound (paper §4)."""
+    IS the roofline-speedup bound (paper §4).
+
+    Returns (rows, metrics): metrics maps chain -> {unfused_s,
+    unfused_jit_s, fused_s} wall-clock seconds for the CI gate."""
     rows = []
+    metrics = {}
     tgt = TargetConfig(engine, vvl=128)
     rng = np.random.default_rng(0)
+
+    def chain(name, bm_unfused, bm_jit, bm_fused, t_un, t_jit, t_fu):
+        metrics[name] = {"unfused_s": t_un, "unfused_jit_s": t_jit,
+                         "fused_s": t_fu}
+        rows.append(traffic_row(f"fig3_fused/{name}_unfused", t_un, bm_unfused))
+        rows.append(traffic_row(f"fig3_fused/{name}_unfused_jit", t_jit, bm_jit))
+        rows.append(traffic_row(f"fig3_fused/{name}_fused", t_fu, bm_fused))
 
     # ---- Ludwig 3-kernel LC chain: molecular field -> BE rhs -> Q update
     cfg = LudwigConfig(lattice=lattice, target=tgt)
@@ -162,49 +185,50 @@ def fused_vs_unfused(lattice=(16, 16, 16), milc_lattice=(8, 8, 8, 8),
                             config=tgt, outputs=("q_new",))["q_new"].data
 
     args = (ins["q"], ins["lapq"], ins["w"], ins["adv"])
-    rows.append(traffic_row("fig3_fused/ludwig_lc_chain_unfused",
-                            time_fn(lc_unfused, *args), bm["unfused"]))
-    rows.append(traffic_row("fig3_fused/ludwig_lc_chain_unfused_jit",
-                            time_fn(jax.jit(lc_unfused), *args), jit_bytes))
-    rows.append(traffic_row("fig3_fused/ludwig_lc_chain_fused",
-                            time_fn(lc_fused, *args), bm["fused"]))
+    chain("ludwig_lc_chain", bm["unfused"], jit_bytes, bm["fused"],
+          time_fn(lc_unfused, *args), time_fn(jax.jit(lc_unfused), *args),
+          time_fn(lc_fused, *args))
 
-    # ---- MILC CG update chain: x+alpha p, r-alpha ap, r.r square
+    # ---- MILC CG update chain: x+alpha p, r-alpha ap, |r_new|^2 — the
+    # residual square AND its reduction fuse into the one launch, so the
+    # unfused baseline includes the separate target_sum pass that re-reads
+    # rr_prod from HBM
     nsites4 = int(np.prod(milc_lattice))
 
-    def mk4(name):
-        arr = rng.normal(size=(24, *milc_lattice)).astype(np.float32)
+    def mk4(name, ncomp=24):
+        arr = rng.normal(size=(ncomp, *milc_lattice)).astype(np.float32)
         return Field.from_numpy(name, arr, milc_lattice, SOA)
 
     x, r, p, ap = mk4("x"), mk4("r"), mk4("p"), mk4("ap")
     cg_graph = cg_update_graph(24)
     bm4 = cg_graph.bytes_moved({"x": 24, "r": 24, "p": 24, "ap": 24}, nsites4,
-                               outputs=("x_new", "r_new", "rr_prod"))
+                               outputs=("x_new", "r_new", "rr"))
 
     def cg_unfused(x, r, p, ap):
         xn = axpy(0.3, p, x, tgt)
         rn = axpy(-0.3, ap, r, tgt)
         prod = launch(_square_body, {"x": rn}, {"out": 24}, config=tgt)["out"]
-        return xn.data, rn.data, prod.data
+        return xn.data, rn.data, target_sum(prod, tgt)
 
     def cg_fused(x, r, p, ap):
-        xn, rn, prod = fused_cg_update(x, r, p, ap, jnp.float32(0.3), tgt)
-        return xn.data, rn.data, prod.data
+        xn, rn, rr = fused_cg_update(x, r, p, ap, jnp.float32(0.3), tgt)
+        return xn.data, rn.data, rr
 
-    rows.append(traffic_row("fig3_fused/milc_cg_update_unfused",
-                            time_fn(cg_unfused, x, r, p, ap), bm4["unfused"]))
     jit_bytes4 = bm4["unfused"] if engine == "pallas" else bm4["fused"]
-    rows.append(traffic_row("fig3_fused/milc_cg_update_unfused_jit",
-                            time_fn(jax.jit(cg_unfused), x, r, p, ap),
-                            jit_bytes4))
-    rows.append(traffic_row("fig3_fused/milc_cg_update_fused",
-                            time_fn(cg_fused, x, r, p, ap), bm4["fused"]))
+    chain("milc_cg_update", bm4["unfused"], jit_bytes4, bm4["fused"],
+          time_fn(cg_unfused, x, r, p, ap),
+          time_fn(jax.jit(cg_unfused), x, r, p, ap),
+          time_fn(cg_fused, x, r, p, ap))
 
-    # ---- LB step: collide -> propagate (launch-level fusion: propagation is
-    # a stencil, so the fusion is one cached jit, not one pallas program)
+    # ---- LB step: collision fused INTO propagation's gather — a stencil
+    # stage of the launch graph, so the fused variant is ONE halo'd kernel
+    # even on the pallas engine and the post-collision distributions never
+    # round-trip HBM (the fused-stencil bytes-moved model)
     from repro.kernels.lb_collision import collide
     from repro.kernels.lb_propagation import propagate
-    from repro.kernels.lb_propagation.ops import collide_propagate
+    from repro.kernels.lb_propagation.ops import (
+        collide_propagate, collide_propagate_graph,
+    )
 
     dist = mk("dist", 19)
     dist = dist.with_canonical(1.0 + 0.1 * dist.canonical())
@@ -216,21 +240,54 @@ def fused_vs_unfused(lattice=(16, 16, 16), milc_lattice=(8, 8, 8, 8),
     def lb_fused(d, g):
         return collide_propagate(d, g, tau=0.8, config=tgt).data
 
-    # per-kernel traffic from the shared Fig. 4 model.  collide_propagate is
-    # launch-level fusion (one jit, still two kernels on pallas): only the
-    # jnp engine's XLA fusion can elide the post-collision intermediate's
-    # HBM round-trip (one write + one read of the 19-component field)
-    lb_un = (LUDWIG_KERNELS["collision"][0]
-             + LUDWIG_KERNELS["propagation"][0]) * nsites
-    lb_fu = lb_un if engine == "pallas" else lb_un - 2 * 19 * 4 * nsites
-    rows.append(traffic_row("fig3_fused/lb_step_unfused",
-                            time_fn(lb_unfused, dist, force), lb_un))
-    rows.append(traffic_row("fig3_fused/lb_step_unfused_jit",
-                            time_fn(jax.jit(lb_unfused), dist, force),
-                            lb_un if engine == "pallas" else lb_fu))
-    rows.append(traffic_row("fig3_fused/lb_step_fused",
-                            time_fn(lb_fused, dist, force), lb_fu))
-    return rows
+    lb_bm = collide_propagate_graph(0.8).bytes_moved(
+        {"dist": 19, "force": 3}, nsites, outputs=("dist2",))
+    chain("lb_step", lb_bm["unfused"],
+          lb_bm["unfused"] if engine == "pallas" else lb_bm["fused"],
+          lb_bm["fused"],
+          time_fn(lb_unfused, dist, force),
+          time_fn(jax.jit(lb_unfused), dist, force),
+          time_fn(lb_fused, dist, force))
+
+    # ---- MILC normal-operator application: both dslash stencils fused into
+    # the xpay/g5 chain with <p, Ap> as a terminal reduction (one halo'd
+    # kernel) vs one launch per dslash/axpy plus a separate dot
+    cfg4 = MilcConfig(lattice=milc_lattice, kappa=0.1, target=tgt)
+    u4, b4 = init_problem(cfg4, seed=0)
+    _, _, apply_normal = make_wilson_op(u4, cfg4.kappa, tgt)
+    fused_normal = make_fused_normal(u4, cfg4.kappa, tgt)
+    wn_bm = wilson_normal_graph(cfg4.kappa).bytes_moved(
+        {"p": 24, "u": 72}, nsites4, outputs=("ap", "pap"))
+
+    def wn_unfused(pf):
+        ap = apply_normal(pf)
+        return ap.data, dot(pf, ap, tgt)
+
+    def wn_fused(pf):
+        ap, pap = fused_normal(pf)
+        return ap.data, pap
+
+    chain("milc_wilson_normal", wn_bm["unfused"],
+          wn_bm["unfused"] if engine == "pallas" else wn_bm["fused"],
+          wn_bm["fused"],
+          time_fn(wn_unfused, b4), time_fn(jax.jit(wn_unfused), b4),
+          time_fn(wn_fused, b4))
+    return rows, metrics
+
+
+def gate_regressions(metrics, tolerance):
+    """The CI perf gate: every fused chain must beat (or tie, within
+    ``tolerance`` relative) its per-launch unfused baseline — the seed
+    behavior the fusion subsystem exists to improve on."""
+    failures = []
+    for name, m in metrics.items():
+        limit = m["unfused_s"] * (1.0 + tolerance)
+        if m["fused_s"] > limit:
+            failures.append(
+                f"{name}: fused {m['fused_s']*1e6:.1f}us > unfused "
+                f"{m['unfused_s']*1e6:.1f}us * (1+{tolerance:.2f})"
+            )
+    return failures
 
 
 def main(argv=None):
@@ -239,19 +296,39 @@ def main(argv=None):
                     help="only the fused-vs-unfused launch-graph comparison")
     ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"],
                     help="engine for the fused comparison wall-clock")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny lattices (CI-sized run)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows/metrics/gate results to PATH")
+    ap.add_argument("--gate", type=float, default=None, metavar="TOL",
+                    help="exit 1 if any fused chain is slower than its "
+                         "unfused baseline beyond TOL (e.g. 0.10)")
     args = ap.parse_args(argv)
+    sizes = (dict(lattice=(8, 8, 8), milc_lattice=(4, 4, 4, 4))
+             if args.smoke else {})
     rows = []
-    if args.fused:
-        rows += fused_vs_unfused(engine=args.engine)
-    else:
+    if not args.fused:
         rows += ludwig_decomposition()
         rows += milc_decomposition()
         rows += layout_vvl_sweep()
-        rows += fused_vs_unfused(engine=args.engine)
+    frows, metrics = fused_vs_unfused(engine=args.engine, **sizes)
+    rows += frows
     for r in rows:
         print(r)
-    return rows
+    failures = (gate_regressions(metrics, args.gate)
+                if args.gate is not None else [])
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "metrics": metrics,
+                       "engine": args.engine, "smoke": args.smoke,
+                       "gate": {"tolerance": args.gate,
+                                "failures": failures}}, f, indent=2)
+    if failures:
+        print("PERF REGRESSION GATE FAILED:", *failures, sep="\n  ",
+              file=sys.stderr)
+    return rows, metrics, failures
 
 
 if __name__ == "__main__":
-    main()
+    _, _, _failures = main()
+    sys.exit(1 if _failures else 0)

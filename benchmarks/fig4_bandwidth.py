@@ -17,9 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Field, SOA, TargetConfig
-from repro.apps.ludwig import LudwigConfig, init_state
-from repro.apps.ludwig import driver as LD
 from repro.apps.ludwig import gradients as LG
 from repro.kernels.lb_collision import ref as lbref
 from repro.kernels.lb_propagation import ref as propref

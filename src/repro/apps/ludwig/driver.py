@@ -6,8 +6,8 @@ One timestep reproduces the paper's kernel decomposition (§2.1.1):
   (molecular field)           local     H(Q, lap Q)
   Chemical Stress             local     sigma(Q, H, grad Q)
   (force)                     stencil   F = div sigma
-  Collision                   local     BGK + Guo forcing   [pallas kernel]
-  Propagation                 stencil   streaming           [pallas kernel]
+  Collision                   local     BGK + Guo forcing   [fused LB step]
+  Propagation                 stencil   streaming           [fused LB step]
   Advection (+ Boundaries)    stencil   upwind div(u Q)
   LC Update                   local     Beris-Edwards       [core.launch]
 
@@ -15,9 +15,11 @@ Site-local stages run through core.target.launch so the engine (jnp vs
 pallas) and the data layout are pure configuration — the paper's central
 claim, which tests/test_ludwig.py asserts by running both engines step-
 for-step.  Adjacent site-local stages are *fused* via core.fuse.LaunchGraph
-(molecular field + stress; BE rhs + Q update; LB moments + collision), so
-each chain lowers to a single pallas_call and its intermediates never
-round-trip through HBM between launches.
+(molecular field + stress; BE rhs + Q update), and the whole LB half of the
+step — moments, BGK collision and the streaming *stencil* — is one halo'd
+launch graph (`lb_step_graph`): collision is recomputed on the halo ring so
+propagation gathers post-collision neighbours from VMEM, and the
+post-collision distributions never round-trip through HBM.
 
 The sharded form (`make_sharded_step`) wraps the same stage functions in
 jax.shard_map on a Domain: per step it halo-exchanges Q (width 2), the
@@ -31,19 +33,16 @@ codes.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    Field, LaunchGraph, Layout, SOA, TargetConfig, launch, target_sum,
+    Field, LaunchGraph, Layout, SOA, TargetConfig, compat, launch, target_sum,
 )
-from repro.core import stencil as st
-from repro.kernels.lb_collision import collide
 from repro.kernels.lb_collision import ref as lbref
 from repro.kernels.lb_collision.ops import collide_kernel
 from repro.kernels.lb_propagation import ops as prop_ops
@@ -174,15 +173,20 @@ def lc_chain_graph(cfg: LudwigConfig) -> LaunchGraph:
     return _add_q_update(_add_be_rhs(g, cfg), cfg)
 
 
-def collide_moments_graph(cfg: LudwigConfig) -> LaunchGraph:
-    """LB moments + BGK collision fused: both stages read the same dist and
-    force Fields, which a fused launch streams from HBM once."""
+def lb_step_graph(cfg: LudwigConfig) -> LaunchGraph:
+    """The whole LB half of a timestep — moments, BGK collision and the
+    streaming stencil — as ONE halo'd launch (one pallas_call): dist and
+    force stream from HBM once, collision is recomputed on the width-1 halo
+    ring, and propagation gathers the post-collision neighbours from the
+    VMEM-resident block, so dist1 never materializes in HBM."""
     return (
-        LaunchGraph("ludwig_collide_moments")
+        LaunchGraph("ludwig_lb_step")
         .add(_moments_body, {"dist": "dist", "force": "force"},
              {"rho": 1, "u": 3})
         .add(collide_kernel, {"dist": "dist", "force": "force"}, {"dist": 19},
              rename={"dist": "dist1"}, params=dict(tau=cfg.tau))
+        .add_stencil(prop_ops.propagate_body, {"dist": "dist1"}, {"dist": 19},
+                     width=1, rename={"dist": "dist2"})
     )
 
 
@@ -196,10 +200,6 @@ def stage_chemical_stress(state_q: Field, dq_nd, lapq_nd, cfg: LudwigConfig):
     )
     force_nd = gr.divergence(out["sigma"].canonical_nd())
     return out["h"], force_nd
-
-
-def stage_propagation(dist: Field, cfg: LudwigConfig) -> Field:
-    return prop_ops.propagate(dist, config=cfg.target)
 
 
 def stage_advection(q_nd, u_nd):
@@ -231,16 +231,16 @@ def step(state: LudwigState, cfg: LudwigConfig) -> LudwigState:
     h, force_nd = stage_chemical_stress(state.q, dq_nd, lapq_nd, cfg)
     force = _mkfield("force", force_nd, cfg)
 
-    # moments + collision fused: dist and force stream from HBM once
-    cm = collide_moments_graph(cfg).launch(
+    # moments + collision + streaming fused: one halo'd launch, dist and
+    # force stream from HBM once, post-collision dist never touches HBM
+    lb = lb_step_graph(cfg).launch(
         {"dist": state.dist, "force": force},
         config=cfg.target,
-        outputs=("dist1", "u"),
+        outputs=("dist2", "u"),
     )
-    dist1 = dataclasses.replace(cm["dist1"], name=state.dist.name)
-    dist2 = stage_propagation(dist1, cfg)
+    dist2 = dataclasses.replace(lb["dist2"], name=state.dist.name)
 
-    u = cm["u"]
+    u = lb["u"]
     u_nd = u.canonical_nd()
     w_nd = _w_tensor(u_nd)
     adv_nd = stage_advection(q_nd, u_nd)
@@ -266,19 +266,18 @@ def step_timed(state: LudwigState, cfg: LudwigConfig) -> Tuple[LudwigState, Dict
         "chemical_stress", stage_chemical_stress, state.q, dq_nd, lapq_nd, cfg
     )
     force = _mkfield("force", force_nd, cfg)
-    # time the same fused moments+collision launch production step() runs;
-    # the row name matches the LUDWIG_KERNELS["collision_moments"] traffic
-    # model (dist+force read once, dist'+rho+u written)
-    cm = timed(
-        "collision_moments",
-        lambda: collide_moments_graph(cfg).launch(
+    # time the same fused LB launch production step() runs; the row name
+    # matches the LUDWIG_KERNELS["lb_step"] traffic model (dist+force read
+    # once, dist''+u written; dist' and rho never touch HBM)
+    lb = timed(
+        "lb_step",
+        lambda: lb_step_graph(cfg).launch(
             {"dist": state.dist, "force": force},
-            config=cfg.target, outputs=("dist1", "u"),
+            config=cfg.target, outputs=("dist2", "u"),
         ),
     )
-    dist1 = dataclasses.replace(cm["dist1"], name=state.dist.name)
-    dist2 = timed("propagation", stage_propagation, dist1, cfg)
-    u_nd = cm["u"].canonical_nd()
+    dist2 = dataclasses.replace(lb["dist2"], name=state.dist.name)
+    u_nd = lb["u"].canonical_nd()
     w_nd = _w_tensor(u_nd)
     adv_nd = timed("advection", stage_advection, q_nd, u_nd)
     q_new = timed("lc_update", stage_lc_update, state.q, h, w_nd, adv_nd, cfg)
@@ -347,19 +346,25 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain):
             config=tgt, outputs=("h", "sigma"),
         )
         h_F = cs["h"]
-        force_h = gr.divergence(cs["sigma"].canonical_nd())   # valid ring >= 1
-        force_nd = crop(force_h, WQ)
+        force_h = gr.divergence(cs["sigma"].canonical_nd())
+        force_nd = crop(force_h, WQ)  # interior: ring-1 div reads ring-2
+        # gradients, which wrap locally — so exchange the true force halo
 
-        # ---- collision on interior, then exchange dist and propagate
-        distF = mk("dist", dist_nd)
-        dist1 = collide(distF, mk("force", force_nd), tau=cfg.tau, config=tgt)
-        d1h = exchange_w(pad(dist1.canonical_nd(), 1), 1)
-        dist2_nd = prop_ops.propagate_halo(d1h, config=tgt, width=1)
+        # ---- fused LB half-step on pre-exchanged halos (halo="pre"): the
+        # *pre-collision* dist (and the force) is exchanged instead of the
+        # seed's post-collision dist, then moments + collision + streaming
+        # run as ONE launch — collision recomputed on the neighbour ring
+        # from true neighbour dist/force values.
+        d_h = exchange_w(pad(dist_nd, 1), 1)
+        f_h = exchange_w(pad(force_nd, 1), 1)
+        lb = lb_step_graph(cfg).launch(
+            {"dist": mk("dist", d_h), "force": mk("force", f_h)},
+            config=tgt, outputs=("dist2", "u"), halo="pre",
+        )
+        dist2_nd = lb["dist2"].canonical_nd()
 
         # ---- hydrodynamics from the pre-collision distributions
-        mo = launch(_moments_body, {"dist": distF, "force": mk("force", force_nd)},
-                    {"rho": 1, "u": 3}, config=tgt)
-        u_nd = mo["u"].canonical_nd()
+        u_nd = lb["u"].canonical_nd()
         uh = exchange_w(pad(u_nd, 1), 1)
         w_h = _w_tensor(uh)
         w_nd = crop(w_h, 1)
@@ -377,7 +382,7 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain):
         )["q_new"]
         return dist2_nd, q_new.canonical_nd()
 
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         local_step, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
     )
     return jax.jit(sharded)

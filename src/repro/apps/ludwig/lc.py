@@ -21,7 +21,7 @@ Physics (one-constant approximation, Ludwig defaults):
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List
 
 import jax.numpy as jnp
 

@@ -11,16 +11,23 @@ The linear algebra is decomposed exactly as the paper's MILC profile
 targetDP-JAX launch machinery as site-local kernels so both engines and
 all layouts apply (paper C1/C2 for MILC).
 
-The CG inner update fuses its "Scalar Mult Add" chain via
-core.fuse.LaunchGraph: x+alpha*p, r-alpha*ap and the elementwise square
-feeding the residual norm run as ONE launch (p, ap, x, r stream from HBM
-once), with the traced alpha passed as a runtime scalar so the launch
-cache stays valid across iterations.
+Two fused launch graphs cover the whole CG iteration (core.fuse):
+
+* ``wilson_normal_graph`` — the operator application M^dag M p with the
+  dslash *stencil* stages fused into the xpay/g5 site-local chain and the
+  <p, A p> inner product as a terminal reduction: ONE halo'd pallas_call
+  per iteration computes ap and its dot with p (neighbour spinors gather
+  from the VMEM-resident halo'd block; the dot's per-site products never
+  materialize in HBM).
+* ``cg_update_graph`` — the "Scalar Mult Add" chain x+alpha*p, r-alpha*ap
+  and the residual norm |r_new|^2 as a terminal reduction, again ONE
+  launch (p, ap, x, r stream from HBM once; rr_prod never exists in HBM),
+  with the traced alpha passed as a runtime scalar so the launch cache
+  stays valid across iterations.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -28,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import Field, LaunchGraph, TargetConfig, launch, target_sum
 from repro.kernels.wilson_dslash import dslash
+from repro.kernels.wilson_dslash.ops import dslash_stencil_body
 
 
 # -- site-local linear-algebra kernels (the "Scalar Mult Add" family) ---------
@@ -51,6 +59,16 @@ def _square_body(v):
     return {"out": v["x"] * v["x"]}
 
 
+def _mul_body(v):
+    return {"out": v["x"] * v["y"]}
+
+
+def _m_g5_body(v, *, kappa):
+    """g5 (psi - kappa d): one Wilson matvec + gamma5, site-local."""
+    t = v["psi"] - kappa * v["d"]
+    return {"out": jnp.concatenate([t[:12], -t[12:]], axis=0)}
+
+
 def fused_xpay(y: Field, a, x: Field, config: TargetConfig) -> Field:
     """y + a*x with traced a (one cached fused launch); keeps x's pytree
     identity (name/layout) so it can ride a lax.while_loop carry."""
@@ -63,8 +81,9 @@ def fused_xpay(y: Field, a, x: Field, config: TargetConfig) -> Field:
 
 
 def cg_update_graph(ncomp: int) -> LaunchGraph:
-    """The CG inner-update chain as a LaunchGraph (also used by the fused
-    benchmarks for bytes-moved accounting)."""
+    """The CG inner-update chain as a LaunchGraph, ending in the residual
+    norm as a terminal reduction (also used by the fused benchmarks for
+    bytes-moved accounting): rr_prod never materializes in HBM."""
     return (
         LaunchGraph("cg_update")
         .add(_fma_body, {"x": "p", "y": "x", "a": "alpha"}, {"out": ncomp},
@@ -73,27 +92,30 @@ def cg_update_graph(ncomp: int) -> LaunchGraph:
              rename={"out": "r_new"})
         .add(_square_body, {"x": "r_new"}, {"out": ncomp},
              rename={"out": "rr_prod"})
+        .add_reduce("rr_prod", op="sum", name="rr")
     )
 
 
 def fused_cg_update(x: Field, r: Field, p: Field, ap: Field, alpha,
                     config: TargetConfig):
-    """The CG "Scalar Mult Add" chain as ONE fused launch:
+    """The CG "Scalar Mult Add" chain + residual norm as ONE fused launch:
 
-        x_new = x + alpha p,  r_new = r - alpha ap,  rr_prod = r_new * r_new
+        x_new = x + alpha p,  r_new = r - alpha ap,  rr = sum (r_new)^2
 
-    Unfused this is three kernels (p, ap, x, r and two intermediates round-
-    tripping HBM); fused, each operand streams in once and only the three
-    results stream out.  Returns (x_new, r_new, rr_prod) with x/r pytree
-    identity preserved."""
+    Unfused this is three kernels plus a reduction pass (p, ap, x, r and
+    three intermediates round-tripping HBM); fused, each operand streams in
+    once, only x_new/r_new stream out and the squared residual accumulates
+    on-chip.  Returns (x_new, r_new, rr) with x/r pytree identity preserved
+    and rr a per-component (ncomp,) partial sum (``rr.sum()`` is |r_new|^2).
+    """
     out = cg_update_graph(x.ncomp).launch(
         {"x": x, "r": r, "p": p, "ap": ap},
         scalars={"alpha": alpha, "neg_alpha": -alpha},
         config=config,
-        outputs=("x_new", "r_new", "rr_prod"),
-        out_layouts={"x_new": x.layout, "r_new": r.layout, "rr_prod": r.layout},
+        outputs=("x_new", "r_new", "rr"),
+        out_layouts={"x_new": x.layout, "r_new": r.layout},
     )
-    return x.with_data(out["x_new"].data), r.with_data(out["r_new"].data), out["rr_prod"]
+    return x.with_data(out["x_new"].data), r.with_data(out["r_new"].data), out["rr"]
 
 
 def dot(x: Field, y: Field, config: TargetConfig) -> jnp.ndarray:
@@ -119,6 +141,45 @@ def g5(psi: Field, config: TargetConfig) -> Field:
 
 
 # -- operator application -------------------------------------------------------
+
+def wilson_normal_graph(kappa: float) -> LaunchGraph:
+    """M^dag M p with <p, M^dag M p> as a terminal reduction, fused.
+
+    Both dslash applications run as width-1 *stencil* stages (the "Shift"
+    neighbour gathers read the VMEM-resident halo'd block — external inputs
+    p and u carry a ring-2 halo, consumed one ring per dslash), the xpay/g5
+    "Scalar Mult Add" stages run site-local on the same block, and the
+    <p, ap> inner product accumulates on-chip: the whole normal-operator
+    application is ONE pallas_call per CG iteration."""
+    return (
+        LaunchGraph("wilson_normal")
+        .add_stencil(dslash_stencil_body, {"psi": "p", "u": "u"}, {"d": 24},
+                     width=1, rename={"d": "d1"})
+        .add(_m_g5_body, {"psi": "p", "d": "d1"}, {"out": 24},
+             rename={"out": "t"}, params=dict(kappa=kappa))
+        .add_stencil(dslash_stencil_body, {"psi": "t", "u": "u"}, {"d": 24},
+                     width=1, rename={"d": "d2"})
+        .add(_m_g5_body, {"psi": "t", "d": "d2"}, {"out": 24},
+             rename={"out": "ap"}, params=dict(kappa=kappa))
+        .add(_mul_body, {"x": "p", "y": "ap"}, {"out": 24},
+             rename={"out": "pap_prod"})
+        .add_reduce("pap_prod", op="sum", name="pap")
+    )
+
+
+def make_fused_normal(u: Field, kappa: float, config: TargetConfig):
+    """Returns apply(p) -> (A p, <p, A p>) through the fused graph
+    (A = M^dag M); ap keeps p's pytree identity for the while_loop carry."""
+    graph = wilson_normal_graph(float(kappa))
+
+    def apply(p: Field):
+        out = graph.launch({"p": p, "u": u}, config=config,
+                           outputs=("ap", "pap"),
+                           out_layouts={"ap": p.layout})
+        return p.with_data(out["ap"].data), out["pap"].sum()
+
+    return apply
+
 
 def make_wilson_op(u: Field, kappa: float, config: TargetConfig,
                    dslash_fn: Optional[Callable] = None):
@@ -152,16 +213,23 @@ def cg(
     tol: float = 1e-8,
     max_iter: int = 500,
     psum_axes: Tuple[str, ...] = (),
+    apply_a_dot: Optional[Callable[[Field], Tuple[Field, jnp.ndarray]]] = None,
 ) -> CGResult:
     """Standard CG on a positive-definite operator, jax.lax.while_loop based
     so it jits and shards (dots are psum'd over ``psum_axes`` inside
-    shard_map)."""
+    shard_map).
 
-    def gdot(x: Field, y: Field):
-        d = dot(x, y, config)
+    apply_a_dot, when given, computes (A p, <p, A p>) in one fused launch
+    (see make_fused_normal) — the iteration then runs TWO pallas_calls:
+    operator+dot, and update-chain+residual-norm."""
+
+    def psum(d):
         for ax in psum_axes:
             d = jax.lax.psum(d, ax)
         return d
+
+    def gdot(x: Field, y: Field):
+        return psum(dot(x, y, config))
 
     b2 = gdot(b, b)
     x0 = b.with_canonical(jnp.zeros_like(b.canonical()))
@@ -174,15 +242,17 @@ def cg(
 
     def body(carry):
         x, r, p, rr, it = carry
-        ap = apply_a(p)
-        alpha = rr / gdot(p, ap)
-        # fused "Scalar Mult Add" chain: x/r updates + residual square in
-        # one launch; the residual reduction follows outside (it crosses
-        # sites, which site-local fusion cannot).
-        x, r, prod = fused_cg_update(x, r, p, ap, alpha, config)
-        rr_new = target_sum(prod, config).sum()
-        for ax in psum_axes:
-            rr_new = jax.lax.psum(rr_new, ax)
+        if apply_a_dot is not None:
+            # dslash + axpy chain + <p, ap> reduction: one fused launch
+            ap, pap = apply_a_dot(p)
+            alpha = rr / psum(pap)
+        else:
+            ap = apply_a(p)
+            alpha = rr / gdot(p, ap)
+        # fused "Scalar Mult Add" chain: x/r updates + residual square +
+        # its terminal sum in one launch — rr_prod never touches HBM.
+        x, r, rr_vec = fused_cg_update(x, r, p, ap, alpha, config)
+        rr_new = psum(rr_vec.sum())
         beta = rr_new / rr
         p = fused_xpay(r, beta, p, config)
         return (x, r, p, rr_new, it + 1)

@@ -11,19 +11,17 @@ MPI lives, §2.1.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import Field, Layout, SOA, TargetConfig
+from repro.core import Field, Layout, SOA, TargetConfig, compat
 from repro.core import halo as halo_mod
-from repro.kernels.wilson_dslash import dslash
 from repro.kernels.wilson_dslash.ops import dslash_halo
 from repro.lattice import Domain
 from . import fields
-from .cg import CGResult, cg, make_wilson_op
+from .cg import CGResult, cg, make_fused_normal, make_wilson_op
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,11 +46,16 @@ def init_problem(cfg: MilcConfig, seed: int = 0):
 
 
 def solve(cfg: MilcConfig, u: Field, b: Field) -> CGResult:
-    """Single-shard CG solve of M x = b via the normal equations."""
+    """Single-shard CG solve of M x = b via the normal equations.
+
+    The operator application runs through the fused dslash+axpy+dot graph
+    (one pallas_call), the update chain through the fused axpy+residual-norm
+    graph (one more): two launches per CG iteration."""
     apply_m, apply_mdag, apply_normal = make_wilson_op(u, cfg.kappa, cfg.target)
     rhs = apply_mdag(b)
     res = cg(apply_normal, rhs, config=cfg.target, tol=cfg.tol,
-             max_iter=cfg.max_iter)
+             max_iter=cfg.max_iter,
+             apply_a_dot=make_fused_normal(u, cfg.kappa, cfg.target))
     return res
 
 
@@ -109,7 +112,7 @@ def solve_sharded(cfg: MilcConfig, domain: Domain, u_nd: jax.Array, b_nd: jax.Ar
                  max_iter=cfg.max_iter, psum_axes=axes)
         return res.x.canonical_nd(), res.iterations, res.residual
 
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         local_solve,
         mesh=mesh,
         in_specs=(spec, spec),

@@ -7,7 +7,11 @@ Memory spaces          ->  core.memspace (targetMalloc / copyToTarget / ...)
 Reductions             ->  core.reduce   (targetDoubleSum ...)
 Stencils               ->  core.stencil
 Halo exchange (MPI)    ->  core.halo     (shard_map + ppermute)
-Kernel fusion          ->  core.fuse     (LaunchGraph: chain -> one pallas_call)
+Kernel fusion          ->  core.fuse     (LaunchGraph: site-local, stencil and
+                                          terminal-reduction stages -> one
+                                          pallas_call)
+Version gates          ->  core.compat   (shard_map / make_mesh across jax
+                                          releases)
 """
 
 from .layout import AOS, SOA, Layout, LayoutKind, aosoa, parse_layout  # noqa: F401
@@ -15,12 +19,14 @@ from .field import Field  # noqa: F401
 from .target import (  # noqa: F401
     TargetConfig,
     TargetKernel,
+    choose_slab,
     choose_vvl,
     kernel,
     launch,
     resolve_vvl,
 )
 from .fuse import LaunchGraph, fused_launch  # noqa: F401
+from . import compat  # noqa: F401
 from .memspace import (  # noqa: F401
     copy_const_to_target,
     copy_from_target,

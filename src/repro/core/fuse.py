@@ -1,4 +1,4 @@
-"""Launch graphs: fuse chains of site-local kernels into one device kernel.
+"""Launch graphs: fuse chains of kernels into one device kernel.
 
 The paper's kernels are memory-bandwidth bound (§4), so the dominant cost of
 a multi-kernel timestep is the HBM round-trip between ``__targetLaunch__``es:
@@ -6,41 +6,68 @@ every intermediate field is written to HBM by one kernel and re-read by the
 next.  A :class:`LaunchGraph` takes an ordered chain of
 :class:`~repro.core.target.TargetKernel` stages whose outputs feed later
 inputs, traces the composed body once, and lowers it to a **single**
-``pl.pallas_call`` over the site-block grid — intermediates stay as values in
-VMEM/VREGs and never touch HBM.  The jnp engine runs the same composed body
-over whole-lattice canonical arrays (and is the fusion oracle).
+``pl.pallas_call`` — intermediates stay as values in VMEM/VREGs and never
+touch HBM.  The jnp engine runs the same composed body over whole-lattice
+canonical arrays (and is the fusion oracle).
+
+Three stage kinds (paper §2.1.1 classifies kernels as site-local vs stencil;
+§3.2.3 adds reductions):
+
+``add``          site-local ("map") stage: the body sees canonical
+                 ``(ncomp, L)`` chunks, one value per site.
+``add_stencil``  stencil stage: the body additionally receives a
+                 ``gather(name, disp)`` closure returning the input window
+                 displaced by ``disp`` (``out(r) = in(r - disp)``,
+                 ``|disp| <= width`` per dim).  Neighbour reads resolve from
+                 VMEM-resident halo'd blocks, not a separate launch.
+``add_reduce``   terminal reduction stage (``target_sum``/``target_max``
+                 semantics): each program folds its block into a per-block
+                 partial and accumulates it into a single small buffer, so
+                 the reduction input never materializes in HBM.
+
+Site-local-only graphs lower over the flat 1-D site-block grid exactly as
+before.  Graphs containing a stencil stage lower over **x-slabs of the
+halo'd lattice**: every external input is halo-padded by the ring the
+backward width analysis (:meth:`LaunchGraph.halo_widths`) assigns it —
+periodic single-shard via ``core.stencil.halo_pad`` (``halo="periodic"``),
+or pre-exchanged by the caller through ``core.halo`` inside shard_map
+(``halo="pre"``) — and staged whole into VMEM (overlapping slab windows are
+not expressible as disjoint BlockSpec windows; see
+``target.build_halo_in_specs``).  Site-local stages are recomputed on halo
+sites so a downstream stencil stage can gather neighbours of an
+*intermediate* (e.g. LB collision fused into propagation's gather); each
+value carries a shrinking "valid ring" and a stencil stage consuming a
+ring-0 value raises a clear error.
 
 Launch cache
 ------------
-Each distinct (kernel chain, layouts, vvl, out_specs, input signature) is
-built and ``jax.jit``-compiled once; repeated launches reuse the compiled
-callable, so a timestep loop does not re-trace (a plain ``core.target.launch``
-builds a fresh ``pallas_call`` per invocation).  The cache key is purely
+Each distinct (kernel chain, layouts, vvl/slab, out_specs, input signature)
+is built and ``jax.jit``-compiled once; repeated launches reuse the compiled
+callable, so a timestep loop does not re-trace.  The cache key is purely
 structural — stage *params* must be static Python values.  Runtime scalars
-(e.g. CG's traced alpha/beta) are passed via ``scalars=``: they become
-``(1, 1)`` array arguments of the jitted callable (a VMEM block each program
-reads), not cache-key material.
+(e.g. CG's traced alpha/beta) are passed via ``scalars=``.
 
 Probes: :func:`stats` counts traces and ``pallas_call`` constructions (each
 fused pallas launch builds exactly one), so tests can assert both the
-single-kernel lowering and cache hits.  :func:`clear_cache` /
-:func:`reset_stats` give tests a clean slate.
+single-kernel lowering and cache hits.
 
-Example::
+Example (the CG residual loop, stencil + reduction)::
 
-    g = (LaunchGraph("chain")
-         .add(body_a, ins={"x": "x"}, out_specs={"t": 3})
-         .add(body_b, ins={"t": "t", "y": "y"}, out_specs={"out": 3}))
-    out = g.launch({"x": fx, "y": fy}, config=TargetConfig("pallas"))["out"]
-
-Stage ``ins`` maps body argument names to graph value names (external Field
-inputs or earlier stage outputs); ``rename=`` relabels a body output in the
-graph namespace so one body can appear in several stages.
+    g = (LaunchGraph("cg_op")
+         .add_stencil(dslash_body, {"psi": "p", "u": "u"}, {"d": 24}, width=1)
+         .add(xpay_body, ins={"x": "p", "d": "d"}, out_specs={"ap": 24})
+         .add(mul_body, ins={"x": "p", "y": "ap"}, out_specs={"prod": 24})
+         .add_reduce("prod", op="sum", name="pap"))
+    out = g.launch({"p": fp, "u": fu}, config=TargetConfig("pallas"),
+                   outputs=("ap", "pap"))
+    out["ap"]   # Field (interior lattice)
+    out["pap"]  # jnp array (ncomp,) — per-component sum, never in HBM
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import OrderedDict
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
@@ -50,11 +77,16 @@ from jax.experimental import pallas as pl
 
 from .field import Field
 from .layout import Layout
+from .stencil import halo_pad
 from .target import (
     TargetConfig,
     TargetKernel,
+    build_halo_in_specs,
     build_in_specs,
     build_out_specs,
+    build_reduce_specs,
+    build_slab_out_specs,
+    choose_slab,
     resolve_vvl,
 )
 
@@ -70,6 +102,20 @@ _CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
 _CACHE_CAP = 256
 
 _STATS = {"traces": 0, "pallas_calls": 0, "cache_hits": 0, "cache_misses": 0}
+
+# reduction monoids: combine, accumulator init, per-block fold (axis 1)
+_RED_OPS = {
+    "sum": (
+        lambda a, b: a + b,
+        lambda shape, dt: jnp.zeros(shape, dt),
+        lambda x: jnp.sum(x, axis=1),
+    ),
+    "max": (
+        jnp.maximum,
+        lambda shape, dt: jnp.full(shape, -jnp.inf, dt),
+        lambda x: jnp.max(x, axis=1),
+    ),
+}
 
 
 def stats() -> Dict[str, int]:
@@ -96,46 +142,59 @@ def _hashable(v) -> bool:
     return True
 
 
+def _crop_ring(arr: jax.Array, r_from: int, r_to: int) -> jax.Array:
+    """Shrink an (ncomp, *window) value from valid ring r_from to r_to."""
+    if r_from == r_to:
+        return arr
+    d = r_from - r_to
+    sl = (slice(None),) + tuple(slice(d, s - d) for s in arr.shape[1:])
+    return arr[sl]
+
+
 @dataclasses.dataclass(frozen=True)
 class _Stage:
-    kernel: TargetKernel
+    kernel: Optional[TargetKernel]
     ins: Tuple[Tuple[str, str], ...]              # (body arg, graph value name)
-    outs: Tuple[Tuple[str, str, int, object], ...]  # (body key, value, ncomp, dtype|None)
+    outs: Tuple[Tuple[str, str, Optional[int], object], ...]
     params: Tuple[Tuple[str, object], ...]
+    kind: str = "map"                             # "map" | "stencil" | "reduce"
+    width: int = 0                                # stencil halo reach
+    op: str = ""                                  # reduce monoid
 
     def signature(self):
         # keyed on the body *function*, not the TargetKernel wrapper, so
         # graphs rebuilt per call (e.g. per LudwigConfig) still hit the cache
-        return (self.kernel.body, self.kernel.name, self.ins, self.outs, self.params)
+        body = self.kernel.body if self.kernel is not None else None
+        name = self.kernel.name if self.kernel is not None else self.op
+        return (self.kind, self.width, self.op, body, name, self.ins,
+                self.outs, self.params)
 
 
 class LaunchGraph:
-    """An ordered chain of site-local kernel stages fused into one launch."""
+    """An ordered chain of kernel stages fused into one launch."""
 
     def __init__(self, name: str = "fused"):
         self.name = name
         self._stages: List[_Stage] = []
 
     def __repr__(self):  # pragma: no cover - cosmetic
-        return f"LaunchGraph({self.name}, stages={[s.kernel.name for s in self._stages]})"
+        names = [s.kernel.name if s.kernel else f"reduce:{s.op}"
+                 for s in self._stages]
+        return f"LaunchGraph({self.name}, stages={names})"
 
-    def add(
-        self,
-        kern: Union[TargetKernel, Callable],
-        ins: Mapping[str, str],
-        out_specs: Mapping[str, Union[int, Tuple[int, object]]],
-        *,
-        params: Optional[Mapping] = None,
-        rename: Optional[Mapping[str, str]] = None,
-    ) -> "LaunchGraph":
-        """Append a stage.  Returns self (chainable).
+    # -- construction ----------------------------------------------------------
 
-        ins        body argument name -> graph value name.
-        out_specs  body output key -> ncomp (or (ncomp, dtype)).
-        rename     body output key -> graph value name (default: the key).
-        params     static keyword arguments baked into the trace (and the
-                   cache key).  Traced values must go through launch scalars.
-        """
+    def _check_not_after_reduce(self, kind: str, name: str) -> None:
+        red = [s for s in self._stages if s.kind == "reduce"]
+        if red:
+            raise ValueError(
+                f"{kind} stage {name!r} cannot follow a reduction stage: a "
+                f"reduction changes the value shape (per-site lattice -> "
+                f"per-component), so only further terminal reductions may "
+                f"come after it"
+            )
+
+    def _prepare_stage(self, kern, ins, out_specs, params, rename):
         if not isinstance(kern, TargetKernel):
             kern = TargetKernel(kern)
         params = dict(params or {})
@@ -161,17 +220,95 @@ class LaunchGraph:
                 )
             produced.add(vname)
             outs.append((body_key, vname, int(ncomp), dtype))
+        return kern, tuple(sorted(ins.items())), tuple(outs), tuple(
+            sorted(params.items()))
+
+    def add(
+        self,
+        kern: Union[TargetKernel, Callable],
+        ins: Mapping[str, str],
+        out_specs: Mapping[str, Union[int, Tuple[int, object]]],
+        *,
+        params: Optional[Mapping] = None,
+        rename: Optional[Mapping[str, str]] = None,
+    ) -> "LaunchGraph":
+        """Append a site-local stage.  Returns self (chainable).
+
+        ins        body argument name -> graph value name.
+        out_specs  body output key -> ncomp (or (ncomp, dtype)).
+        rename     body output key -> graph value name (default: the key).
+        params     static keyword arguments baked into the trace (and the
+                   cache key).  Traced values must go through launch scalars.
+        """
+        kern, ins_t, outs, params_t = self._prepare_stage(
+            kern, ins, out_specs, params, rename)
+        self._check_not_after_reduce("site-local", kern.name)
+        self._stages.append(_Stage(kern, ins_t, outs, params_t))
+        return self
+
+    def add_stencil(
+        self,
+        kern: Union[TargetKernel, Callable],
+        ins: Mapping[str, str],
+        out_specs: Mapping[str, Union[int, Tuple[int, object]]],
+        *,
+        width: int = 1,
+        params: Optional[Mapping] = None,
+        rename: Optional[Mapping[str, str]] = None,
+    ) -> "LaunchGraph":
+        """Append a stencil stage reaching ``width`` sites per lattice dim.
+
+        The body signature gains a gather closure::
+
+            def body(v, gather, **params) -> dict
+
+        ``v[arg]`` is the centered (ncomp, *window) value; ``gather(arg, d)``
+        is the same window displaced by ``d`` (``out(r) = in(r - d)``,
+        ``|d_j| <= width``).  Bodies see nd windows, not flat chunks, because
+        displacement is geometric.  Inputs must be valid on a ring >= width:
+        external Fields are halo-padded automatically (periodic) or by the
+        caller (``halo="pre"``); intermediates are valid wherever earlier
+        stages computed them (site-local stages recompute on halo sites).
+        """
+        if width < 1:
+            raise ValueError(f"stencil stage needs width >= 1, got {width}")
+        kern, ins_t, outs, params_t = self._prepare_stage(
+            kern, ins, out_specs, params, rename)
+        self._check_not_after_reduce("stencil", kern.name)
         self._stages.append(
-            _Stage(
-                kern,
-                tuple(sorted(ins.items())),
-                tuple(outs),
-                tuple(sorted(params.items())),
-            )
-        )
+            _Stage(kern, ins_t, outs, params_t, kind="stencil",
+                   width=int(width)))
+        return self
+
+    def add_reduce(
+        self, value: str, op: str = "sum", *, name: Optional[str] = None
+    ) -> "LaunchGraph":
+        """Append a terminal reduction of graph value ``value`` over all
+        (interior) sites.  The result, named ``name`` (default
+        ``"{value}_{op}"``), is returned by launch() as a per-component
+        ``(ncomp,)`` jnp array — it is an accumulator, not a Field, and its
+        per-site input never touches HBM on the pallas engine."""
+        if op not in _RED_OPS:
+            raise ValueError(f"unknown reduction op {op!r}; have {list(_RED_OPS)}")
+        out_name = name or f"{value}_{op}"
+        reduced = {v for st in self._stages if st.kind == "reduce"
+                   for (_, v, _, _) in st.outs}
+        if value in reduced:
+            raise ValueError(
+                f"cannot reduce {value!r}: it is itself a reduction result")
+        produced = {v for st in self._stages for (_, v, _, _) in st.outs}
+        if out_name in produced:
+            raise ValueError(f"graph value {out_name!r} produced twice")
+        self._stages.append(
+            _Stage(None, (("x", value),), (("out", out_name, None, None),),
+                   (), kind="reduce", op=op))
         return self
 
     # -- graph structure -------------------------------------------------------
+
+    @property
+    def has_stencil(self) -> bool:
+        return any(st.kind == "stencil" for st in self._stages)
 
     def external_inputs(self) -> List[str]:
         """Value names consumed but never produced by an earlier stage, in
@@ -185,12 +322,44 @@ class LaunchGraph:
                 produced.add(vname)
         return ext
 
-    def _produced(self) -> Dict[str, Tuple[int, object]]:
+    def _produced(self) -> Dict[str, Tuple[Optional[int], object]]:
         return {
             vname: (ncomp, dtype)
             for st in self._stages
             for (_, vname, ncomp, dtype) in st.outs
         }
+
+    def _reduce_outputs(self) -> List[str]:
+        return [v for st in self._stages if st.kind == "reduce"
+                for (_, v, _, _) in st.outs]
+
+    def _required_rings(self, outputs: Sequence[str]) -> Dict[str, int]:
+        """Backward width analysis: minimum valid halo ring each graph value
+        needs so the requested outputs are exact on the interior."""
+        need: Dict[str, int] = {o: 0 for o in outputs}
+        for st in reversed(self._stages):
+            if st.kind == "reduce":
+                for _, v in st.ins:
+                    need[v] = max(need.get(v, 0), 0)
+                continue
+            r = max((need.get(v, 0) for (_, v, _, _) in st.outs), default=0)
+            w = st.width if st.kind == "stencil" else 0
+            for _, v in st.ins:
+                need[v] = max(need.get(v, 0), r + w)
+        return need
+
+    def halo_widths(
+        self, outputs: Optional[Sequence[str]] = None
+    ) -> Dict[str, int]:
+        """Halo ring each external input needs (0 for site-local-only graphs).
+
+        ``halo="periodic"`` pads inputs by exactly these widths via
+        ``stencil.halo_pad``; ``halo="pre"`` callers must supply Fields
+        already padded (and exchanged via ``core.halo``) by them."""
+        if outputs is None:
+            outputs = [v for (_, v, _, _) in self._stages[-1].outs]
+        need = self._required_rings(tuple(outputs))
+        return {n: need.get(n, 0) for n in self.external_inputs()}
 
     def bytes_moved(
         self,
@@ -203,12 +372,16 @@ class LaunchGraph:
         counting: reads + writes, itemsize bytes per element).
 
         unfused: every stage reads all its inputs from and writes all its
-        outputs to HBM.  fused: each distinct external input is read once and
-        only the requested graph outputs are written.  Scalars are ignored.
+        outputs to HBM — including the per-site reduction input a separate
+        ``target_sum`` pass would re-read.  fused: each distinct external
+        input is read once and only the requested non-reduction graph
+        outputs are written (reduction partials are O(ncomp), counted as 0).
+        Stencil halo re-reads are not modelled (halo/interior -> 0 with
+        lattice size).  Scalars are ignored.
         """
         ncomp = dict(ins_ncomp)
         for vname, (nc, _) in self._produced().items():
-            ncomp[vname] = nc
+            ncomp[vname] = 0 if nc is None else nc
         if outputs is None:
             outputs = [v for (_, v, _, _) in self._stages[-1].outs]
         unfused = 0
@@ -216,7 +389,7 @@ class LaunchGraph:
             for _, vname in st.ins:
                 unfused += ncomp.get(vname, 0)
             for _, vname, nc, _ in st.outs:
-                unfused += nc
+                unfused += 0 if nc is None else nc
         fused = sum(ncomp.get(n, 0) for n in self.external_inputs())
         fused += sum(ncomp[o] for o in outputs)
         return {
@@ -234,33 +407,37 @@ class LaunchGraph:
         outputs: Optional[Sequence[str]] = None,
         scalars: Optional[Mapping] = None,
         out_layouts: Optional[Mapping[str, Layout]] = None,
-    ) -> Dict[str, Field]:
+        halo: str = "periodic",
+    ) -> Dict[str, Union[Field, jax.Array]]:
         """Execute the fused chain (the multi-kernel __targetLaunch__).
 
-        ins         graph value name -> input Field (all sharing nsites).
-        outputs     graph value names to materialize as Fields (default: the
-                    last stage's outputs).  Intermediates not listed here
-                    never touch HBM on the pallas engine.
-        scalars     graph value name -> runtime scalar (traced values OK);
-                    bodies see them as (1, 1) arrays that broadcast.
+        ins         graph value name -> input Field (all sharing a lattice).
+        outputs     graph value names to materialize (default: the last
+                    stage's outputs).  Intermediates not listed here never
+                    touch HBM on the pallas engine.  Reduction outputs come
+                    back as (ncomp,) jnp arrays, everything else as Fields.
+        scalars     graph value name -> runtime scalar (traced values OK).
         out_layouts graph output name -> Layout (default: first input's).
+        halo        stencil graphs only: "periodic" pads external inputs by
+                    halo_widths() with periodic wrap (single shard);
+                    "pre" expects inputs already padded + exchanged by the
+                    caller (core.halo inside shard_map), so the launch
+                    composes with the MPI-layer decomposition.
         """
         if not self._stages:
             raise ValueError("LaunchGraph has no stages")
         if not ins:
             raise ValueError("fused launch needs at least one input Field")
+        if halo not in ("periodic", "pre"):
+            raise ValueError(f"halo must be 'periodic' or 'pre', got {halo!r}")
         config = config or TargetConfig()
         scalars = dict(scalars or {})
+        stencil = self.has_stencil
+        if halo == "pre" and not stencil:
+            raise ValueError(
+                "halo='pre' only applies to graphs with stencil stages")
 
         first = next(iter(ins.values()))
-        nsites = first.nsites
-        bad = {k: f.lattice for k, f in ins.items() if f.lattice != first.lattice}
-        if bad:
-            raise ValueError(
-                f"all Fields in a fused launch must share nsites and lattice "
-                f"shape: {first.name!r} has {first.lattice}, mismatched {bad}"
-            )
-
         double = sorted(set(ins) & set(scalars))
         if double:
             raise ValueError(
@@ -284,24 +461,71 @@ class LaunchGraph:
         unknown = [o for o in outputs if o not in prod]
         if unknown:
             raise ValueError(f"requested outputs {unknown} produced by no stage")
+        red_names = set(self._reduce_outputs())
+        field_outputs = tuple(o for o in outputs if o not in red_names)
+        red_outputs = tuple(o for o in outputs if o in red_names)
+
+        # halo rings per external Field input (0 unless a stencil needs it)
+        need = self._required_rings(outputs) if stencil else {}
+        in_rings = tuple(need.get(n, 0) for n in ordered_ins)
+
+        # interior lattice: what output Fields live on
+        if stencil and halo == "pre":
+            interiors = {
+                n: tuple(s - 2 * r for s in ins[n].lattice)
+                for n, r in zip(ordered_ins, in_rings)
+            }
+            lattice = interiors[ordered_ins[0]]
+            bad = {n: lat for n, lat in interiors.items() if lat != lattice}
+            if bad or any(s < 1 for s in lattice):
+                raise ValueError(
+                    f"pre-halo'd inputs disagree on the interior lattice "
+                    f"(lattice - 2*ring per input, rings {dict(zip(ordered_ins, in_rings))}): "
+                    f"{ {n: ins[n].lattice for n in ordered_ins} }"
+                )
+        else:
+            lattice = first.lattice
+            bad = {k: f.lattice for k, f in ins.items() if f.lattice != lattice}
+            if bad:
+                raise ValueError(
+                    f"all Fields in a fused launch must share nsites and "
+                    f"lattice shape: {first.name!r} has {lattice}, "
+                    f"mismatched {bad}"
+                )
+        nsites = int(math.prod(lattice))
 
         out_layouts = dict(out_layouts or {})
-        for o in outputs:
+        for o in field_outputs:
             out_layouts.setdefault(o, first.layout)
-        # resolve default dtypes now so they are part of the cache key
-        out_info = {
-            o: (prod[o][0], jnp.dtype(prod[o][1] or first.dtype)) for o in outputs
-        }
+        # resolve default dtypes (and reduce ncomp) now: part of the cache key
+        out_info = {}
+        for o in outputs:
+            nc, dt = prod[o]
+            if nc is None:  # reduction: ncomp of the reduced value
+                (src,) = [v for st in self._stages if st.kind == "reduce"
+                          for (_, v2, _, _) in st.outs if v2 == o
+                          for (_, v) in st.ins]
+                src_nc = prod.get(src, (None, None))[0]
+                if src_nc is None:
+                    src_nc = ins[src].ncomp
+                nc = src_nc
+            out_info[o] = (int(nc), jnp.dtype(dt or first.dtype))
 
         engine = config.engine
+        bx = 0
         if engine == "pallas":
-            vvl = resolve_vvl(
-                config,
-                nsites,
-                [ins[n].layout for n in ordered_ins]
-                + [out_layouts[o] for o in outputs],
-            )
             interpret = config.resolved_interpret()
+            if stencil:
+                vvl = 0
+                bx = choose_slab(
+                    lattice[0], int(math.prod(lattice[1:])), config.vvl)
+            else:
+                vvl = resolve_vvl(
+                    config,
+                    nsites,
+                    [ins[n].layout for n in ordered_ins]
+                    + [out_layouts[o] for o in field_outputs],
+                )
         elif engine == "jnp":
             vvl, interpret = 0, False
         else:
@@ -310,30 +534,39 @@ class LaunchGraph:
         key = (
             engine,
             vvl,
+            bx,
+            halo,
             interpret,
-            nsites,
+            lattice,
             tuple(st.signature() for st in self._stages),
             tuple(
-                (n, ins[n].ncomp, str(ins[n].dtype), ins[n].layout)
-                for n in ordered_ins
+                (n, ins[n].ncomp, str(ins[n].dtype), ins[n].layout,
+                 ins[n].lattice, r)
+                for n, r in zip(ordered_ins, in_rings)
             ),
             tuple(ordered_scalars),
             outputs,
-            tuple((o, out_layouts[o], str(out_info[o][1])) for o in outputs),
+            tuple((o, out_layouts.get(o), str(out_info[o][1])) for o in outputs),
         )
         fn = _CACHE.get(key)
         if fn is None:
             _STATS["cache_misses"] += 1
-            fn = self._build(
+            build = self._build_nd if stencil else self._build_flat
+            fn = build(
                 engine=engine,
                 ordered_ins=ordered_ins,
                 in_meta=[(ins[n].ncomp, ins[n].layout) for n in ordered_ins],
+                in_lats=[ins[n].lattice for n in ordered_ins],
+                in_rings=in_rings,
                 ordered_scalars=ordered_scalars,
-                outputs=outputs,
+                field_outputs=field_outputs,
+                red_outputs=red_outputs,
                 out_info=out_info,
                 out_layouts=out_layouts,
-                nsites=nsites,
+                lattice=lattice,
+                halo=halo,
                 vvl=vvl,
+                bx=bx,
                 interpret=interpret,
             )
             _CACHE[key] = fn
@@ -350,19 +583,31 @@ class LaunchGraph:
         )
         results = fn(datas, svals)
 
-        fields = {}
-        for o, phys in zip(outputs, results):
-            ncomp, _ = out_info[o]
-            fields[o] = Field(o, ncomp, first.lattice, out_layouts[o], phys)
-        return fields
+        out: Dict[str, Union[Field, jax.Array]] = {}
+        ordered_out = list(field_outputs) + list(red_outputs)
+        for o, val in zip(ordered_out, results):
+            if o in red_names:
+                out[o] = val
+            else:
+                ncomp, _ = out_info[o]
+                out[o] = Field(o, ncomp, lattice, out_layouts[o], val)
+        return out
 
-    # -- lowering ---------------------------------------------------------------
+    # -- composed bodies ---------------------------------------------------------
 
-    def _run_stages(self, values: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-        """Composed body: one pass over all stages, in either engine's trace.
+    def _run_stages(self, values: Dict[str, jax.Array]) -> Tuple[
+            Dict[str, jax.Array], Dict[str, jax.Array]]:
+        """Flat composed body (site-local graphs): one pass over all stages.
         ``values`` maps graph names to (ncomp, L) arrays (L = nsites for jnp,
-        vvl inside the pallas kernel) plus (1, 1) scalars."""
+        vvl inside the pallas kernel) plus (1, 1) scalars.  Returns (values,
+        partials) where partials holds per-block reduction folds."""
+        partials: Dict[str, jax.Array] = {}
         for st in self._stages:
+            if st.kind == "reduce":
+                ((_, vname),) = st.ins
+                _, _, fold = _RED_OPS[st.op]
+                partials[st.outs[0][1]] = fold(values[vname])
+                continue
             chunks = {arg: values[v] for arg, v in st.ins}
             outs = st.kernel.body(chunks, **dict(st.params))
             for body_key, vname, ncomp, _ in st.outs:
@@ -373,23 +618,139 @@ class LaunchGraph:
                         f"ncomp {arr.shape[0]}, declared {ncomp}"
                     )
                 values[vname] = arr
-        return values
+        return values, partials
 
-    def _build(
+    def _run_stages_nd(
+        self,
+        values: Dict[str, Tuple[jax.Array, Optional[int]]],
+        site_ndim: int,
+    ) -> Tuple[Dict[str, Tuple[jax.Array, Optional[int]]],
+               Dict[str, jax.Array]]:
+        """Stencil composed body: values are (array, ring) pairs where array
+        has shape (ncomp, *window) and ring counts valid halo sites around
+        the window's interior.  Site-local stages run (flattened) over the
+        whole window — recomputing on halo sites so later stencil stages can
+        gather from intermediates; stencil stages shrink the ring by their
+        width; reductions fold the ring-0 interior into per-block partials."""
+        partials: Dict[str, jax.Array] = {}
+        for st in self._stages:
+            if st.kind == "reduce":
+                ((_, vname),) = st.ins
+                arr, r = values[vname]
+                a0 = _crop_ring(arr, r, 0)
+                _, _, fold = _RED_OPS[st.op]
+                partials[st.outs[0][1]] = fold(a0.reshape(a0.shape[0], -1))
+                continue
+
+            stage_ins = [(arg, values[v]) for arg, v in st.ins]
+            rings = [r for _, (_, r) in stage_ins if r is not None]
+            if not rings:
+                raise ValueError(
+                    f"stage {st.kernel.name!r} has no Field inputs")
+            r_in = min(rings)
+
+            if st.kind == "stencil":
+                r_out = r_in - st.width
+                if r_out < 0:
+                    raise ValueError(
+                        f"stencil stage {st.kernel.name!r} (width {st.width})"
+                        f" consumes a value valid only on ring {r_in}; its "
+                        f"inputs need ring >= {st.width} — pad/exchange "
+                        f"external inputs by halo_widths(), and do not chain "
+                        f"it after a stage that already consumed the halo"
+                    )
+                by_arg = dict(stage_ins)
+                width = st.width
+
+                def gather(name, disp, _by_arg=by_arg, _r_out=r_out,
+                           _width=width):
+                    if name not in _by_arg:
+                        raise KeyError(
+                            f"gather({name!r}): not an input of this stage")
+                    arr, r = _by_arg[name]
+                    if r is None:
+                        raise ValueError(
+                            f"gather({name!r}): scalars have no geometry")
+                    disp = tuple(int(d) for d in disp)
+                    if len(disp) != site_ndim:
+                        raise ValueError(
+                            f"gather({name!r}): disp {disp} must have one "
+                            f"entry per lattice dim ({site_ndim})")
+                    if any(abs(d) > _width for d in disp):
+                        raise ValueError(
+                            f"gather({name!r}): |disp|={disp} exceeds stage "
+                            f"width {_width}")
+                    off = r - _r_out
+                    sl = (slice(None),) + tuple(
+                        slice(off - d, arr.shape[j + 1] - off - d)
+                        for j, d in enumerate(disp)
+                    )
+                    return arr[sl]
+
+                zeros = (0,) * site_ndim
+                chunks = {}
+                for arg, (arr, r) in stage_ins:
+                    if r is None:  # scalar: broadcast over the nd window
+                        chunks[arg] = arr.reshape((1,) * (1 + site_ndim))
+                    else:
+                        chunks[arg] = gather(arg, zeros)
+                outs = st.kernel.body(chunks, gather, **dict(st.params))
+                for body_key, vname, ncomp, _ in st.outs:
+                    arr = outs[body_key]
+                    if arr.shape[0] != ncomp:
+                        raise ValueError(
+                            f"stage {st.kernel.name!r} output {body_key!r} "
+                            f"has ncomp {arr.shape[0]}, declared {ncomp}"
+                        )
+                    values[vname] = (arr, r_out)
+                continue
+
+            # site-local: crop all inputs to the common ring, flatten, run
+            win_shape = None
+            chunks = {}
+            for arg, (arr, r) in stage_ins:
+                if r is None:
+                    chunks[arg] = arr  # (1, 1) broadcasts against (ncomp, L)
+                else:
+                    w = _crop_ring(arr, r, r_in)
+                    win_shape = w.shape[1:]
+                    chunks[arg] = w.reshape(w.shape[0], -1)
+            outs = st.kernel.body(chunks, **dict(st.params))
+            for body_key, vname, ncomp, _ in st.outs:
+                arr = outs[body_key]
+                if arr.shape[0] != ncomp:
+                    raise ValueError(
+                        f"stage {st.kernel.name!r} output {body_key!r} has "
+                        f"ncomp {arr.shape[0]}, declared {ncomp}"
+                    )
+                values[vname] = (arr.reshape((ncomp,) + win_shape), r_in)
+        return values, partials
+
+    # -- lowering: flat site-block grid (site-local graphs) ----------------------
+
+    def _build_flat(
         self,
         *,
         engine: str,
         ordered_ins: Sequence[str],
         in_meta: Sequence[Tuple[int, Layout]],
+        in_lats,
+        in_rings,
         ordered_scalars: Sequence[str],
-        outputs: Tuple[str, ...],
+        field_outputs: Tuple[str, ...],
+        red_outputs: Tuple[str, ...],
         out_info: Mapping[str, Tuple[int, object]],
         out_layouts: Mapping[str, Layout],
-        nsites: int,
+        lattice: Tuple[int, ...],
+        halo: str,
         vvl: int,
+        bx: int,
         interpret: bool,
     ) -> Callable:
         run_stages = self._run_stages
+        nsites = int(math.prod(lattice))
+        red_ops = {o: _RED_OPS[st.op] for st in self._stages
+                   if st.kind == "reduce" for (_, o, _, _) in st.outs}
 
         if engine == "jnp":
 
@@ -400,11 +761,14 @@ class LaunchGraph:
                     values[n] = lay.unpack(d)
                 for n, s in zip(ordered_scalars, svals):
                     values[n] = s
-                values = run_stages(values)
-                return tuple(
+                values, partials = run_stages(values)
+                res = [
                     out_layouts[o].pack(values[o].astype(out_info[o][1]))
-                    for o in outputs
-                )
+                    for o in field_outputs
+                ]
+                res += [partials[o].astype(out_info[o][1])
+                        for o in red_outputs]
+                return tuple(res)
 
             return jax.jit(fn)
 
@@ -415,25 +779,34 @@ class LaunchGraph:
             pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in range(nsc)
         ]
         out_shapes, out_block_specs = build_out_specs(
-            outputs, out_info, out_layouts, nsites, vvl
+            field_outputs, out_info, out_layouts, nsites, vvl
         )
+        red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
+        out_shapes += red_shapes
+        out_block_specs += red_specs
+        nfield = len(field_outputs)
         name = self.name
 
         def fused_kernel(*refs):
             in_refs = refs[:nin]
             sc_refs = refs[nin : nin + nsc]
-            out_refs = refs[nin + nsc :]
+            out_refs = refs[nin + nsc : nin + nsc + nfield]
+            acc_refs = refs[nin + nsc + nfield :]
             values = {}
             for n, (ncomp, lay), r in zip(ordered_ins, in_meta, in_refs):
                 values[n] = lay.block_to_canonical(r[...], ncomp, vvl)
             for n, r in zip(ordered_scalars, sc_refs):
                 values[n] = r[...]
-            values = run_stages(values)
-            for o, r in zip(outputs, out_refs):
+            values, partials = run_stages(values)
+            for o, r in zip(field_outputs, out_refs):
                 ncomp, dtype = out_info[o]
                 r[...] = out_layouts[o].canonical_to_block(
                     values[o].astype(dtype), ncomp, vvl
                 )
+            for o, r in zip(red_outputs, acc_refs):
+                combine, init, _ = red_ops[o]
+                _accumulate(r, combine, init,
+                            partials[o][:, None].astype(out_info[o][1]))
 
         def fn(datas, svals):
             _STATS["traces"] += 1
@@ -450,11 +823,172 @@ class LaunchGraph:
                 name=name,
             )
             res = call(*datas, *svals)
-            if len(outputs) == 1:
+            if len(out_shapes) == 1:
                 res = (res,)
-            return tuple(res)
+            # reduction accumulators (ncomp, 1) -> (ncomp,)
+            return tuple(
+                r[:, 0] if i >= nfield else r for i, r in enumerate(res)
+            )
 
         return jax.jit(fn)
+
+    # -- lowering: halo'd x-slab grid (stencil graphs) ---------------------------
+
+    def _build_nd(
+        self,
+        *,
+        engine: str,
+        ordered_ins: Sequence[str],
+        in_meta: Sequence[Tuple[int, Layout]],
+        in_lats: Sequence[Tuple[int, ...]],
+        in_rings: Sequence[int],
+        ordered_scalars: Sequence[str],
+        field_outputs: Tuple[str, ...],
+        red_outputs: Tuple[str, ...],
+        out_info: Mapping[str, Tuple[int, object]],
+        out_layouts: Mapping[str, Layout],
+        lattice: Tuple[int, ...],
+        halo: str,
+        vvl: int,
+        bx: int,
+        interpret: bool,
+    ) -> Callable:
+        run_nd = self._run_stages_nd
+        site_ndim = len(lattice)
+        site_dims = tuple(range(1, site_ndim + 1))
+        red_ops = {o: _RED_OPS[st.op] for st in self._stages
+                   if st.kind == "reduce" for (_, o, _, _) in st.outs}
+
+        def to_halo_nd(n, meta, lat, ring, d):
+            """Physical data -> canonical (ncomp, *padded_lattice)."""
+            ncomp, lay = meta
+            nd = lay.unpack(d).reshape((ncomp,) + tuple(lat))
+            if halo == "periodic" and ring > 0:
+                nd = halo_pad(nd, ring, site_dims)
+            return nd
+
+        if engine == "jnp":
+
+            def fn(datas, svals):
+                _STATS["traces"] += 1
+                values = {}
+                for n, meta, lat, ring, d in zip(
+                        ordered_ins, in_meta, in_lats, in_rings, datas):
+                    values[n] = (to_halo_nd(n, meta, lat, ring, d), ring)
+                for n, s in zip(ordered_scalars, svals):
+                    values[n] = (s, None)
+                values, partials = run_nd(values, site_ndim)
+                res = []
+                for o in field_outputs:
+                    arr, r = values[o]
+                    a0 = _crop_ring(arr, r, 0)
+                    ncomp, dtype = out_info[o]
+                    res.append(out_layouts[o].pack(
+                        a0.reshape(ncomp, -1).astype(dtype)))
+                res += [partials[o].astype(out_info[o][1])
+                        for o in red_outputs]
+                return tuple(res)
+
+            return jax.jit(fn)
+
+        # pallas: ONE pallas_call over x-slabs of the halo'd lattice.  The
+        # halo'd inputs are staged whole into VMEM (overlapping slab windows
+        # are not disjoint Blocked windows); each program dynamic-slices its
+        # halo'd window out, runs every stage on it, writes its interior
+        # slab, and accumulates reduction partials into the shared buffer.
+        grid = (lattice[0] // bx,)
+        nin, nsc = len(ordered_ins), len(ordered_scalars)
+        # in "pre" mode the caller's lattices already carry the halo
+        padded = [
+            (ncomp,) + tuple(
+                s + (2 * ring if halo == "periodic" else 0) for s in lat
+            )
+            for (ncomp, _), lat, ring in zip(in_meta, in_lats, in_rings)
+        ]
+        in_specs = build_halo_in_specs(padded) + [
+            pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in range(nsc)
+        ]
+        out_shapes, out_block_specs = build_slab_out_specs(
+            field_outputs, out_info, lattice, bx
+        )
+        red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
+        out_shapes += red_shapes
+        out_block_specs += red_specs
+        nfield = len(field_outputs)
+        name = self.name
+
+        def fused_kernel(*refs):
+            in_refs = refs[:nin]
+            sc_refs = refs[nin : nin + nsc]
+            out_refs = refs[nin + nsc : nin + nsc + nfield]
+            acc_refs = refs[nin + nsc + nfield :]
+            i = pl.program_id(0)
+            xs = i * bx
+            values = {}
+            for n, (ncomp, _), shp, ring, r in zip(
+                    ordered_ins, in_meta, padded, in_rings, in_refs):
+                arr = r[...]  # full halo'd stage (VMEM)
+                window = jax.lax.dynamic_slice(
+                    arr,
+                    (0, xs) + (0,) * (site_ndim - 1),
+                    (ncomp, bx + 2 * ring) + shp[2:],
+                )
+                values[n] = (window, ring)
+            for n, r in zip(ordered_scalars, sc_refs):
+                values[n] = (r[...], None)
+            values, partials = run_nd(values, site_ndim)
+            for o, r in zip(field_outputs, out_refs):
+                arr, ring = values[o]
+                r[...] = _crop_ring(arr, ring, 0).astype(out_info[o][1])
+            for o, r in zip(red_outputs, acc_refs):
+                combine, init, _ = red_ops[o]
+                _accumulate(r, combine, init,
+                            partials[o][:, None].astype(out_info[o][1]))
+
+        def fn(datas, svals):
+            _STATS["traces"] += 1
+            _STATS["pallas_calls"] += 1
+            nds = [
+                to_halo_nd(n, meta, lat, ring, d)
+                for n, meta, lat, ring, d in zip(
+                    ordered_ins, in_meta, in_lats, in_rings, datas)
+            ]
+            call = pl.pallas_call(
+                fused_kernel,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=(
+                    out_block_specs if len(out_block_specs) > 1 else out_block_specs[0]
+                ),
+                out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+                interpret=interpret,
+                name=name,
+            )
+            res = call(*nds, *svals)
+            if len(out_shapes) == 1:
+                res = (res,)
+            out = []
+            for idx, r in enumerate(res):
+                if idx >= nfield:  # reduction accumulator (ncomp, 1)
+                    out.append(r[:, 0])
+                else:  # canonical nd -> requested physical layout
+                    o = field_outputs[idx]
+                    ncomp, _ = out_info[o]
+                    out.append(out_layouts[o].pack(r.reshape(ncomp, -1)))
+            return tuple(out)
+
+        return jax.jit(fn)
+
+
+def _accumulate(ref, combine, init, partial):
+    """Grid-sequential accumulation into a constant-index-map buffer (the
+    fused analogue of core.reduce's partial-sum kernel)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        ref[...] = init(ref.shape, ref.dtype)
+
+    ref[...] = combine(ref[...], partial)
 
 
 def fused_launch(
@@ -466,11 +1000,12 @@ def fused_launch(
     scalars: Optional[Mapping] = None,
     out_layouts: Optional[Mapping[str, Layout]] = None,
     name: str = "fused",
-) -> Dict[str, Field]:
+) -> Dict[str, Union[Field, jax.Array]]:
     """One-shot form: each stage is (kernel, ins, out_specs[, params[, rename]]).
 
-    Equivalent to building a LaunchGraph and launching it; the launch cache
-    keys on the stage bodies, so rebuilt graphs still hit."""
+    Equivalent to building a LaunchGraph of site-local stages and launching
+    it; the launch cache keys on the stage bodies, so rebuilt graphs still
+    hit."""
     g = LaunchGraph(name)
     for st in stages:
         kern, st_ins, st_outs = st[0], st[1], st[2]

@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 __all__ = ["exchange_dim", "exchange", "axis_perms"]

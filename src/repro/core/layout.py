@@ -35,8 +35,6 @@ import dataclasses
 import enum
 from typing import Tuple
 
-import jax.numpy as jnp
-import numpy as np
 
 __all__ = ["LayoutKind", "Layout", "AOS", "SOA", "aosoa"]
 

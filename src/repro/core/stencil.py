@@ -9,7 +9,7 @@ stencil kernels in repro.kernels.
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

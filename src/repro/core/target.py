@@ -34,7 +34,6 @@ BlockSpec machinery below (``build_in_specs`` / ``build_out_specs`` /
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
@@ -51,6 +50,7 @@ __all__ = [
     "launch",
     "choose_vvl",
     "resolve_vvl",
+    "choose_slab",
     "TargetKernel",
 ]
 
@@ -114,6 +114,75 @@ def resolve_vvl(config: "TargetConfig", nsites: int,
     if nsites % vvl == 0 and vvl % align == 0:
         return vvl
     return choose_vvl(nsites, vvl, multiple_of=align)
+
+
+def choose_slab(x_dim: int, inner_sites: int, vvl: int) -> int:
+    """Sites-per-program for a stencil (x-slab) grid: the largest divisor
+    ``bx`` of the leading lattice dim whose slab (bx * inner_sites sites)
+    stays within the vvl budget.  The stencil analogue of choose_vvl — when
+    vvl does not divide the interior block (inner_sites ∤ vvl) the slab
+    shrinks to the best conforming divisor instead of raising, and a single
+    x-plane (bx=1) is always valid."""
+    budget = max(int(vvl), inner_sites)
+    best = 1
+    for bx in range(1, x_dim + 1):
+        if x_dim % bx == 0 and bx * inner_sites <= budget:
+            best = bx
+    return best
+
+
+def build_halo_in_specs(
+    shapes: Sequence[Tuple[int, ...]],
+) -> List[pl.BlockSpec]:
+    """BlockSpecs for halo'd stencil-graph inputs: overlapping x-slab windows
+    are not expressible as disjoint Blocked windows, so each halo'd array is
+    staged whole into VMEM (constant index map) and the kernel slices the
+    per-program halo'd window out with ``lax.dynamic_slice`` — displacement
+    becomes slice arithmetic on VMEM-resident data (see
+    kernels/lb_propagation for the single-kernel precedent)."""
+    specs = []
+    for shp in shapes:
+        zeros = (0,) * len(shp)
+        specs.append(pl.BlockSpec(shp, lambda i, _z=zeros: _z))
+    return specs
+
+
+def build_slab_out_specs(
+    out_names: Sequence[str],
+    out_specs: Mapping[str, Tuple[int, object]],
+    lattice: Tuple[int, ...],
+    bx: int,
+) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
+    """(out_shape, BlockSpec) per interior nd output of a stencil graph:
+    canonical (ncomp, X, *inner) arrays blocked into disjoint x-slabs."""
+    inner = tuple(lattice[1:])
+    shapes, specs = [], []
+    for k in out_names:
+        ncomp, dtype = out_specs[k]
+        shapes.append(
+            jax.ShapeDtypeStruct((ncomp,) + tuple(lattice), dtype)
+        )
+        block = (ncomp, bx) + inner
+        idx = lambda i: (0, i) + (0,) * len(inner)
+        specs.append(pl.BlockSpec(block, idx))
+    return shapes, specs
+
+
+def build_reduce_specs(
+    out_names: Sequence[str],
+    out_specs: Mapping[str, Tuple[int, object]],
+) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
+    """(out_shape, BlockSpec) per terminal-reduction accumulator: a single
+    (ncomp, 1) partial buffer with a constant index map, revisited by every
+    program (TPU pallas grids execute sequentially per core, so cross-block
+    read-modify-write accumulation is well defined — same idiom as
+    core.reduce)."""
+    shapes, specs = [], []
+    for k in out_names:
+        ncomp, dtype = out_specs[k]
+        shapes.append(jax.ShapeDtypeStruct((ncomp, 1), dtype))
+        specs.append(pl.BlockSpec((ncomp, 1), lambda i: (0, 0)))
+    return shapes, specs
 
 
 def build_in_specs(

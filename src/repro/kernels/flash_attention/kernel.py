@@ -24,7 +24,6 @@ Mask arithmetic uses broadcasted_iota (TPU needs >=2-D iota).
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -19,10 +19,8 @@ The body is ``ref.collide_chunk`` — the same source the jnp engine runs.
 
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.layout import Layout

@@ -2,9 +2,7 @@
 
 from __future__ import annotations
 
-import functools
 
-import jax
 
 from repro.core import Field, TargetConfig, TargetKernel, resolve_vvl
 from . import kernel, ref

@@ -17,7 +17,6 @@ requirement, and on TPU it keeps everything in VPU adds).
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.maths import d3q19
 

@@ -1,22 +1,23 @@
 """Public wrapper for LB propagation (engine dispatch) and the fused
 collision -> propagation LB step.
 
-Propagation is a stencil (site-neighbour gather), so it cannot be fused
-site-locally into one pallas program with the collision; the fusion here is
-at the launch level: both stages run inside one cached ``jax.jit`` callable,
-so the post-collision distributions flow straight into the streaming step
-without a host round-trip or re-trace per timestep (the collision itself
-goes through the bespoke pallas kernel / jnp oracle as configured)."""
+Propagation is a stencil (site-neighbour gather).  The fused step runs it
+as a *stencil stage* of a ``core.fuse.LaunchGraph``: collision (site-local)
+is recomputed on the halo ring of each VMEM-resident halo'd block, and the
+streaming step gathers the displaced post-collision values straight out of
+VMEM — one halo'd ``pallas_call`` per timestep, with no HBM round-trip for
+the post-collision distributions (the HBM traffic a separate propagation
+launch would mandate: one write + one read of the 19-component field).
+"""
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import Field, Layout, TargetConfig, stencil
+from repro.core import Field, LaunchGraph, TargetConfig, stencil
+from repro.kernels.lb_collision.ops import collide_kernel
+from repro.maths import d3q19
 from . import kernel, ref
 
 
@@ -36,33 +37,49 @@ def propagate(dist: Field, *, config: TargetConfig) -> Field:
     return dist.with_canonical(out.reshape(dist.ncomp, dist.nsites))
 
 
-@functools.lru_cache(maxsize=64)
-def _fused_step(lattice: Tuple[int, ...], ncomp: int, lay: Layout,
-                fncomp: int, flay: Layout, tau: float, config: TargetConfig):
-    """Build + jit one collide->propagate step per (lattice, ncomps, layouts,
-    tau, config); jax.jit handles dtype/shape retraces within an entry."""
-    from repro.kernels.lb_collision.ops import collide
+def propagate_body(v, gather):
+    """Propagation as a fused stencil-stage body: f'_i(r) = f_i(r - c_i),
+    each velocity's displaced window materialized as slice arithmetic on the
+    VMEM-resident halo'd block (no separate pallas_call)."""
+    return {
+        "dist": jnp.stack([
+            gather("dist", tuple(int(c) for c in d3q19.CV[i]))[i]
+            for i in range(d3q19.NVEL)
+        ])
+    }
 
-    def step(dist_data, force_data):
-        d = Field("dist", ncomp, lattice, lay, dist_data)
-        g = Field("force", fncomp, lattice, flay, force_data)
-        d1 = collide(d, g, tau=tau, config=config)
-        return propagate(d1, config=config).data
 
-    return jax.jit(step)
+def collide_propagate_graph(tau: float) -> LaunchGraph:
+    """BGK collision fused *into* propagation's gather: ONE halo'd kernel.
+
+    Collision is recomputed on halo sites (cheap, site-local) so the
+    streaming gather reads post-collision neighbours from VMEM; the launch
+    cache keys on (bodies, tau, layouts, lattice), so a timestep loop reuses
+    the compiled callable."""
+    return (
+        LaunchGraph("lb_collide_propagate")
+        .add(collide_kernel, {"dist": "dist", "force": "force"}, {"dist": 19},
+             rename={"dist": "dist1"}, params=dict(tau=tau))
+        .add_stencil(propagate_body, {"dist": "dist1"}, {"dist": 19},
+                     width=1, rename={"dist": "dist2"})
+    )
 
 
 def collide_propagate(
     dist: Field, force: Field, *, tau: float, config: TargetConfig
 ) -> Field:
-    """Fused LB step: BGK collision immediately followed by streaming,
-    compiled once per (layouts, lattice, tau, engine config) and cached.
+    """Fused LB step: BGK collision immediately followed by streaming, as a
+    single halo'd launch (one pallas_call on the pallas engine).
 
-    tau is static (baked into the compiled step, one cache entry per
-    value) — for a traced tau sweep call collide/propagate directly."""
-    fn = _fused_step(dist.lattice, dist.ncomp, dist.layout,
-                     force.ncomp, force.layout, float(tau), config)
-    return dist.with_data(fn(dist.data, force.data))
+    tau is static (baked into the launch-cache key, one entry per value) —
+    for a traced tau sweep call collide/propagate directly."""
+    out = collide_propagate_graph(float(tau)).launch(
+        {"dist": dist, "force": force},
+        config=config,
+        outputs=("dist2",),
+        out_layouts={"dist2": dist.layout},
+    )["dist2"]
+    return dist.with_data(out.data)
 
 
 def propagate_halo(dist_halo: jnp.ndarray, *, config: TargetConfig, width: int = 1):

@@ -2,9 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.target import _on_tpu

@@ -17,7 +17,6 @@ TPU-friendly numerically-safe variant).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ AoSoA/SoA (sites minor) is the right layout on TPU and AoS collapses
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.layout import Layout

@@ -1,4 +1,9 @@
-"""Public wrapper for the Wilson-Dirac operator (engine dispatch)."""
+"""Public wrapper for the Wilson-Dirac operator (engine dispatch), plus the
+stencil-stage body that lets dslash join fused launch graphs (core.fuse):
+the MILC "Shift" kernel becomes gather calls on a VMEM-resident halo'd
+block, feeding the site-local project/mult/reconstruct math in the same
+kernel — so D psi fuses with the CG axpy chain and the residual reduction
+(see apps/milc/cg.py)."""
 
 from __future__ import annotations
 
@@ -8,6 +13,32 @@ import jax.numpy as jnp
 
 from repro.core import Field, TargetConfig
 from . import kernel, ref
+
+
+def dslash_stencil_body(v, gather):
+    """Fused-graph stencil stage: v = {"psi": (24, *win), "u": (72, *win)}.
+
+    Gathers the 8 neighbour spinors and the backward gauge links from the
+    halo'd window (the "Shift" kernel, width 1), then runs the site-local
+    hopping term — returns {"d": D psi (24, *win_out)}."""
+    packs = []
+    for mu in range(4):
+        e = [0, 0, 0, 0]
+        e[mu] = 1
+        # psi(x + mu): out(r) = in(r - d) with d = -e
+        packs.append(gather("psi", tuple(-x for x in e)))
+        packs.append(gather("psi", tuple(e)))
+    nbrs = jnp.concatenate(packs, axis=0)                       # (192, *win)
+    u_fwd = v["u"]
+    u_bwd = jnp.concatenate(
+        [gather("u", (0,) * mu + (1,) + (0,) * (3 - mu))[mu * 18:(mu + 1) * 18]
+         for mu in range(4)],
+        axis=0,
+    )                                                           # (72, *win)
+    win = u_fwd.shape[1:]
+    flat = lambda a: a.reshape(a.shape[0], -1)
+    out = ref.dslash_site_chunk(flat(u_fwd), flat(u_bwd), flat(nbrs))
+    return {"d": out.reshape((ref.SPINOR_NCOMP,) + win)}
 
 
 def dslash(psi: Field, u: Field, *, config: TargetConfig) -> Field:

@@ -23,7 +23,6 @@ every architecture in Table 1 and still memory-bound against TPU v5e's
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -31,7 +31,6 @@ Usage:
 
 import argparse
 import dataclasses
-import functools
 import json
 import sys
 import time

@@ -7,15 +7,14 @@ init, and tests/benches must see the single real CPU device).
 
 from __future__ import annotations
 
-import jax
+
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:

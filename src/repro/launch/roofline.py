@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 PEAK_FLOPS_BF16 = 197e12
 HBM_BW = 819e9
@@ -145,6 +145,8 @@ class RooflineTerms:
 
 def terms_from(cost: Dict, coll: Dict, *, peak=PEAK_FLOPS_BF16,
                hbm=HBM_BW, link=ICI_LINK_BW) -> RooflineTerms:
+    if isinstance(cost, (list, tuple)):  # old jax: one dict per partition
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     cbytes = float(coll.get("total_bytes", 0.0))

@@ -9,7 +9,7 @@ the dry-run lowers exactly the production step functions.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

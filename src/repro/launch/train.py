@@ -34,7 +34,7 @@ from repro.train.data import DataConfig, TokenStream
 from repro.train.fault import LoopConfig, run_loop
 from repro.train.optimizer import OptConfig, init_opt, opt_kind_for
 from repro.train.sharding import param_specs, set_rules
-from repro.train.train_step import TrainConfig, build_train_step, init_ef_state
+from repro.train.train_step import TrainConfig, build_train_step
 
 
 def main():
@@ -62,8 +62,8 @@ def main():
         d = int(np.sqrt(n_dev))
         while n_dev % d:
             d -= 1
-        mesh = jax.make_mesh((n_dev // d, d), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core import compat
+        mesh = compat.make_mesh((n_dev // d, d), ("data", "model"))
         set_rules({"batch": ("data",), "seq": None, "seq_attn": None,
                    "embed": None, "heads": None, "kv_heads": None,
                    "head_dim": None, "mlp": "model", "vocab": "model",

@@ -12,7 +12,6 @@ notes).  Decode is the same update for a single step.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -2,9 +2,8 @@
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig

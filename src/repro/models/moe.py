@@ -15,7 +15,6 @@ gather/scatter across the token<->expert boundary is GSPMD-scheduled
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ Decode state per layer: (x_prev_att, x_prev_ffn, wkv state (H, dk, dv)).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

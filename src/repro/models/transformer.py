@@ -9,8 +9,7 @@ the scan as a scanned (L,) window array, keeping a single traced block.
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

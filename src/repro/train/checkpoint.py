@@ -22,14 +22,11 @@ Guarantees:
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os
 import re
 import shutil
-import tempfile
-import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, Optional, Tuple
 

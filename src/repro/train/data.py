@@ -9,7 +9,6 @@ the exact stream with no coordination.
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Iterator, Optional, Tuple
 
 import numpy as np

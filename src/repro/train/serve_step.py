@@ -8,7 +8,6 @@ or temperature sampling over a batch of requests).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,6 @@
 """core.fuse launch graphs: fused == unfused == oracle, single-pallas_call
-lowering, launch-cache hits, and chain validation errors."""
+lowering (site-local, stencil and terminal-reduction stages), launch-cache
+hits, halo-ring edge cases, and chain validation errors."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,7 @@ import pytest
 
 from repro.core import (
     AOS, SOA, Field, LaunchGraph, TargetConfig, aosoa, fused_launch, launch,
+    target_sum,
 )
 from repro.core import fuse
 
@@ -210,3 +212,270 @@ def test_bytes_moved_model():
     assert bm["unfused"] == 18 * 100 * 4
     assert bm["fused"] == 9 * 100 * 4
     assert bm["fused"] < bm["unfused"]
+
+
+def test_bytes_moved_counts_unfused_reduction_read():
+    g = (LaunchGraph("bmr")
+         .add(_s1, {"x": "x", "y": "y"}, {"t": 3}, params=dict(a=2.0))
+         .add_reduce("t", op="sum", name="tsum"))
+    bm = g.bytes_moved({"x": 3, "y": 3}, nsites=100, outputs=("tsum",))
+    # unfused: s1 reads x,y (6) writes t (3); the separate reduction pass
+    # re-reads t (3) -> 12 comps.  fused: x,y read once, tsum is O(ncomp).
+    assert bm["unfused"] == 12 * 100 * 4
+    assert bm["fused"] == 6 * 100 * 4
+
+
+# -- stencil stages + terminal reductions --------------------------------------
+
+def _scale_body(v, *, a):
+    return {"y": a * v["x"]}
+
+
+def _lap1d_body(v, gather, *, c):
+    """width-1 stencil along the leading lattice dim."""
+    return {"z": c * v["y"] + gather("y", (1, 0, 0)) + gather("y", (-1, 0, 0))}
+
+
+def _shift2_body(v, gather):
+    """width-2 stencil: y(r - 2 e_x) + y(r + 2 e_y)."""
+    return {"z": gather("y", (2, 0, 0)) + gather("y", (0, -2, 0))}
+
+
+def _lap_oracle(y, c):
+    return c * y + np.roll(y, 1, axis=1) + np.roll(y, -1, axis=1)
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_stencil_stage_after_map_matches_oracle(lay, engine, rng):
+    """Site-local -> stencil -> terminal reduction, one launch: the map
+    stage recomputes on halo sites so the stencil gathers its output."""
+    lat = (6, 4, 8)
+    x, fx = _mk("x", 3, lay, rng, lat=lat)
+    g = (LaunchGraph("map_stencil_sum")
+         .add(_scale_body, {"x": "x"}, {"y": 3}, params=dict(a=2.0))
+         .add_stencil(_lap1d_body, {"y": "y"}, {"z": 3}, width=1,
+                      params=dict(c=-2.0))
+         .add_reduce("z", op="sum", name="ztot"))
+    assert g.halo_widths(("z", "ztot")) == {"x": 1}
+    fuse.reset_stats()
+    out = g.launch({"x": fx}, config=TargetConfig(engine, vvl=64),
+                   outputs=("z", "ztot"))
+    want = _lap_oracle(2.0 * x, -2.0)
+    np.testing.assert_allclose(out["z"].to_numpy(), want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["ztot"]),
+                               want.reshape(3, -1).sum(1), atol=1e-4)
+    s = fuse.stats()
+    assert engine == "jnp" or s["pallas_calls"] == 1, s
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_stencil_halo_width_greater_than_one(engine, rng):
+    """width=2 stencil: periodic halo pads by 2 and gathers reach 2 deep."""
+    lat = (8, 6, 4)
+    x, fx = _mk("x", 2, SOA, rng, lat=lat)
+    g = (LaunchGraph("w2")
+         .add(_scale_body, {"x": "x"}, {"y": 2}, params=dict(a=1.0))
+         .add_stencil(_shift2_body, {"y": "y"}, {"z": 2}, width=2))
+    assert g.halo_widths(("z",)) == {"x": 2}
+    out = g.launch({"x": fx}, config=TargetConfig(engine, vvl=64))["z"]
+    want = np.roll(x, 2, axis=1) + np.roll(x, -2, axis=2)
+    np.testing.assert_allclose(out.to_numpy(), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_chained_stencils_consume_ring_per_stage(engine, rng):
+    """Two chained width-1 stencils need a ring-2 external halo, and the
+    intermediate's valid ring shrinks by one per stage."""
+    lat = (4, 4, 4)
+    x, fx = _mk("x", 1, SOA, rng, lat=lat)
+    g = (LaunchGraph("chain_stencil")
+         .add_stencil(_lap1d_body, {"y": "x"}, {"z": 1}, width=1,
+                      params=dict(c=0.0), rename={"z": "z1"})
+         .add_stencil(_lap1d_body, {"y": "z1"}, {"z": 1}, width=1,
+                      params=dict(c=0.0)))
+    assert g.halo_widths(("z",)) == {"x": 2}
+    out = g.launch({"x": fx}, config=TargetConfig(engine, vvl=16))["z"]
+    want = _lap_oracle(_lap_oracle(x, 0.0), 0.0)
+    np.testing.assert_allclose(out.to_numpy(), want, rtol=1e-5, atol=1e-5)
+
+
+def test_stencil_vvl_not_dividing_interior_block(rng):
+    """vvl smaller than / not dividing the inner-plane site count: the slab
+    chooser falls back to single x-planes instead of raising."""
+    lat = (5, 6, 7)   # X=5 prime, inner 42 sites; vvl=64 divides neither
+    x, fx = _mk("x", 3, SOA, rng, lat=lat)
+    g = (LaunchGraph("odd_slab")
+         .add(_scale_body, {"x": "x"}, {"y": 3}, params=dict(a=3.0))
+         .add_stencil(_lap1d_body, {"y": "y"}, {"z": 3}, width=1,
+                      params=dict(c=1.0)))
+    for vvl in (1, 64, 128, 4096):
+        out = g.launch({"x": fx}, config=TargetConfig("pallas", vvl=vvl))["z"]
+        np.testing.assert_allclose(out.to_numpy(), _lap_oracle(3.0 * x, 1.0),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_reduction_matches_target_sum_oracle(rng):
+    """Fused terminal reduction == the standalone target_sum API on the
+    materialized field == the fp64 numpy oracle (fp32 accumulation noise
+    bounded against the fp64 reference)."""
+    x, fx = _mk("x", 3, SOA, rng)
+    y, fy = _mk("y", 3, SOA, rng)
+    g = (LaunchGraph("red_oracle")
+         .add(_s1, {"x": "x", "y": "y"}, {"t": 3}, params=dict(a=2.0))
+         .add_reduce("t", op="sum", name="tsum")
+         .add_reduce("t", op="max", name="tmax"))
+    want64 = (2.0 * x.astype(np.float64) + y.astype(np.float64)).reshape(3, -1)
+    for engine in ENGINES:
+        cfg = TargetConfig(engine, vvl=64)
+        out = g.launch({"x": fx, "y": fy}, config=cfg,
+                       outputs=("t", "tsum", "tmax"))
+        oracle = target_sum(out["t"], cfg)
+        np.testing.assert_allclose(np.asarray(out["tsum"]), np.asarray(oracle),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out["tsum"]), want64.sum(1),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(out["tmax"]), want64.max(1),
+                                   rtol=1e-6)
+
+
+def test_stencil_after_reduce_raises():
+    """A reduction changes the value shape (per-site -> per-component), so
+    stencil (and site-local) stages cannot follow it."""
+    g = (LaunchGraph("bad")
+         .add(_s1, {"x": "x", "y": "y"}, {"t": 3}, params=dict(a=1.0))
+         .add_reduce("t", op="sum"))
+    with pytest.raises(ValueError, match="changes the value shape"):
+        g.add_stencil(_lap1d_body, {"y": "t"}, {"z": 3}, width=1,
+                      params=dict(c=0.0))
+    with pytest.raises(ValueError, match="changes the value shape"):
+        g.add(_s2, {"t": "t", "x": "x"}, {"u": 3})
+
+
+def test_reduce_of_reduce_raises():
+    g = (LaunchGraph("rr")
+         .add(_s1, {"x": "x", "y": "y"}, {"t": 3}, params=dict(a=1.0))
+         .add_reduce("t", op="sum"))
+    with pytest.raises(ValueError, match="itself a reduction result"):
+        g.add_reduce("t_sum", op="max")
+
+
+def test_pre_halo_insufficient_ring_raises(rng):
+    """halo='pre' with a Field too thin to carry the required ring (the
+    derived interior would be empty): clear error naming the rings."""
+    lat = (4, 4, 4)
+    _, fx = _mk("x", 1, SOA, rng, lat=lat)
+    g = (LaunchGraph("thin")
+         .add_stencil(_lap1d_body, {"y": "x"}, {"z": 1}, width=1,
+                      params=dict(c=0.0), rename={"z": "z1"})
+         .add_stencil(_lap1d_body, {"y": "z1"}, {"z": 1}, width=1,
+                      params=dict(c=0.0)))
+    # graph needs ring 2 -> a (4,4,4) Field would have a 0-site interior
+    with pytest.raises(ValueError, match="interior lattice"):
+        g.launch({"x": fx}, config=TargetConfig("jnp"), halo="pre",
+                 outputs=("z",))
+    # and pre-halo mode on a stencil-free graph is rejected outright
+    g2 = LaunchGraph("nostencil").add(_s1, {"x": "x", "y": "y"}, {"t": 3},
+                                      params=dict(a=1.0))
+    with pytest.raises(ValueError, match="stencil"):
+        g2.launch({"x": fx, "y": fx}, config=TargetConfig("jnp"), halo="pre")
+
+
+def test_gather_disp_exceeding_width_raises(rng):
+    lat = (4, 4, 4)
+    _, fx = _mk("x", 1, SOA, rng, lat=lat)
+
+    def bad_body(v, gather):
+        return {"z": gather("y", (2, 0, 0))}
+
+    g = LaunchGraph("wide").add_stencil(bad_body, {"y": "x"}, {"z": 1},
+                                        width=1)
+    with pytest.raises(ValueError, match="exceeds stage width"):
+        g.launch({"x": fx}, config=TargetConfig("jnp"))
+
+
+# -- application acceptance probes ---------------------------------------------
+
+def test_lb_collide_propagate_is_one_pallas_call(rng):
+    """Acceptance probe: the fused LB collide->propagate step lowers to
+    exactly ONE pallas_call and matches the unfused jnp oracle."""
+    from repro.kernels.lb_collision import ref as lbref
+    from repro.kernels.lb_propagation import ref as propref
+    from repro.kernels.lb_propagation.ops import collide_propagate
+
+    lat = (4, 4, 8)
+    f0 = (1.0 + 0.1 * rng.normal(size=(19, *lat))).astype(np.float32)
+    frc = (0.01 * rng.normal(size=(3, *lat))).astype(np.float32)
+    d = Field.from_numpy("dist", f0, lat, SOA)
+    g = Field.from_numpy("force", frc, lat, SOA)
+
+    fuse.clear_cache()
+    fuse.reset_stats()
+    got = collide_propagate(d, g, tau=0.8,
+                            config=TargetConfig("pallas", vvl=128)).to_numpy()
+    s = fuse.stats()
+    assert s["pallas_calls"] == 1, \
+        f"LB step lowered to {s['pallas_calls']} pallas_calls"
+    want = np.asarray(propref.propagate_ref(
+        lbref.collide_ref(jnp.asarray(f0.reshape(19, -1)),
+                          jnp.asarray(frc.reshape(3, -1)),
+                          0.8).reshape(19, *lat)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    # second step: launch-cache hit, still one pallas_call total
+    collide_propagate(d, g, tau=0.8, config=TargetConfig("pallas", vvl=128))
+    s = fuse.stats()
+    assert s["pallas_calls"] == 1 and s["cache_hits"] == 1, s
+
+
+def test_milc_normal_op_is_one_pallas_call(rng):
+    """Acceptance probe: dslash + axpy/g5 chain + <p, Ap> residual-norm-style
+    reduction lower to ONE pallas_call, fused == unfused == oracle."""
+    from repro.apps.milc import MilcConfig, init_problem
+    from repro.apps.milc.cg import dot, make_fused_normal, make_wilson_op
+
+    cfg = MilcConfig(lattice=(4, 4, 4, 4), kappa=0.1)
+    u, b = init_problem(cfg, seed=0)
+    jcfg = TargetConfig("jnp")
+    _, _, apply_normal = make_wilson_op(u, cfg.kappa, jcfg)
+    want_ap = apply_normal(b).to_numpy()
+    want_pap = float(dot(b, apply_normal(b), jcfg))
+
+    fuse.clear_cache()
+    fuse.reset_stats()
+    ap, pap = make_fused_normal(u, cfg.kappa,
+                                TargetConfig("pallas", vvl=256))(b)
+    s = fuse.stats()
+    assert s["pallas_calls"] == 1, \
+        f"normal op lowered to {s['pallas_calls']} pallas_calls"
+    np.testing.assert_allclose(ap.to_numpy(), want_ap, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(pap), want_pap, rtol=2e-4)
+
+    # jnp engine through the same graph is the fusion oracle
+    ap_j, pap_j = make_fused_normal(u, cfg.kappa, jcfg)(b)
+    np.testing.assert_allclose(ap_j.to_numpy(), want_ap, rtol=1e-5, atol=1e-6)
+
+
+def test_cg_update_with_fused_residual_norm_is_one_pallas_call(rng):
+    """Acceptance probe: the CG update chain ends in the residual-norm
+    reduction inside the same single pallas_call."""
+    from repro.apps.milc.cg import fused_cg_update
+
+    lat4 = (4, 4, 4, 4)
+    mk = lambda n: Field.from_numpy(
+        n, rng.normal(size=(24, *lat4)).astype(np.float32), lat4, SOA)
+    x, r, p, ap = mk("x"), mk("r"), mk("p"), mk("ap")
+
+    fuse.clear_cache()
+    fuse.reset_stats()
+    cfg = TargetConfig("pallas", vvl=256)
+    xn, rn, rr = fused_cg_update(x, r, p, ap, jnp.float32(0.3), cfg)
+    s = fuse.stats()
+    assert s["pallas_calls"] == 1, s
+    want_r = r.to_numpy() - 0.3 * ap.to_numpy()
+    np.testing.assert_allclose(xn.to_numpy(),
+                               x.to_numpy() + 0.3 * p.to_numpy(),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rn.to_numpy(), want_r, rtol=1e-5, atol=1e-6)
+    want_rr = (want_r.astype(np.float64) ** 2).sum()
+    np.testing.assert_allclose(float(jnp.sum(rr)), want_rr, rtol=1e-4)

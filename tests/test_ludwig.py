@@ -6,9 +6,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import SOA, Field, TargetConfig, aosoa
+from repro.core import Field, TargetConfig, aosoa
 from repro.apps.ludwig import LudwigConfig, LudwigState, init_state, step
 from repro.apps.ludwig.driver import diagnostics
 from repro.kernels.lb_collision import ref as lbref

@@ -17,7 +17,7 @@ from repro.configs import ARCH_IDS, get_arch
 from repro.models import decode_step, forward, init_cache, init_params
 from repro.models.encdec import encode, seed_encdec_cache
 from repro.train.optimizer import OptConfig, init_opt
-from repro.train.train_step import TrainConfig, build_train_step, init_ef_state
+from repro.train.train_step import TrainConfig, build_train_step
 
 B, S = 2, 32
 

@@ -8,8 +8,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Field, SOA, TargetConfig, aosoa, launch, target_sum
-from repro.core.layout import AOS, LayoutKind
+from repro.core import Field, SOA, TargetConfig, aosoa, target_sum
 from repro.kernels.lb_collision import collide
 from repro.kernels.rwkv6_scan import rwkv6
 from repro.models import moe as moe_mod

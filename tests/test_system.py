@@ -10,9 +10,8 @@ import pytest
 
 from repro.configs import get_arch
 from repro.models import init_params
-from repro.train.data import DataConfig, TokenStream
 from repro.train.optimizer import OptConfig, init_opt
-from repro.train.serve_step import build_serve_step, generate
+from repro.train.serve_step import generate
 from repro.train.train_step import TrainConfig, build_train_step
 
 

@@ -10,9 +10,7 @@ import pytest
 from repro.configs import get_arch
 from repro.models import init_params
 from repro.train.data import DataConfig, TokenStream, write_token_file
-from repro.train.optimizer import (
-    OptConfig, _dq8, _dq8v, _q8, _q8v, apply_updates, init_opt,
-)
+from repro.train.optimizer import OptConfig, _dq8, _dq8v, _q8, _q8v, init_opt
 from repro.train.train_step import TrainConfig, build_train_step, init_ef_state
 
 
