@@ -9,9 +9,16 @@ HLO "bytes accessed" — useful/HLO = the fraction of achievable bandwidth
 the compiled kernel can reach, assuming the memory system runs at STREAM
 rate on the rest.  OIs land in the paper's 0.4-2.2 F/B band, far below
 every Table-1 ridge point (C4).
+
+``--json PATH`` writes the rows plus structured per-kernel metrics in the
+same top-level schema as fig3 (``rows`` / ``metrics`` / ``gate``), so the
+``BENCH_*.json`` trajectory tooling covers the bandwidth sweep too.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -21,16 +28,29 @@ from repro.apps.ludwig import gradients as LG
 from repro.kernels.lb_collision import ref as lbref
 from repro.kernels.lb_propagation import ref as propref
 from repro.kernels.wilson_dslash import ref as wdref
-from .common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
+
+try:
+    from .common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
+except ImportError:  # run as a script: python benchmarks/fig4_bandwidth.py
+    from common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
 
 
 def _cost(fn, *args):
     c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):  # older jax: one dict per computation
+        c = c[0] if c else {}
+    c = c or {}
     return float(c.get("flops", 0)), float(c.get("bytes accessed", 0))
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows + per-kernel metrics to PATH "
+                         "(fig3-compatible schema)")
+    args = ap.parse_args(argv)
     rows = []
+    metrics = {}
     lat = (16, 16, 16)
     nsites = int(np.prod(lat))
     f19 = jax.ShapeDtypeStruct((19, *lat), jnp.float32)
@@ -56,12 +76,20 @@ def main():
     cases["wilson_dslash"] = (wdref.dslash_ref, (psi, u),
                               MILC_KERNELS["extract_and_mult"])
 
-    for name, (fn, args, (bps, fps)) in cases.items():
+    for name, (fn, fargs, (bps, fps)) in cases.items():
         n = nsites4 if name == "wilson_dslash" else nsites
-        flops, hbytes = _cost(fn, *args)
+        flops, hbytes = _cost(fn, *fargs)
         useful = n * bps
         oi = fps / bps if bps else 0.0
         frac = useful / max(hbytes, 1.0)
+        metrics[name] = {
+            "oi_fpb": oi,
+            "useful_bytes": useful,
+            "hlo_bytes": hbytes,
+            "hlo_flops": flops,
+            "achievable_bw_frac": frac,
+            "memory_bound_on_v5e": bool(oi < ridge_point("tpu-v5e")),
+        }
         rows.append(csv_row(
             f"fig4/{name}", 0.0,
             f"oi_fpb={oi:.2f};useful_bytes={useful};hlo_bytes={hbytes:.0f};"
@@ -69,6 +97,11 @@ def main():
             f"memory_bound_on_v5e={oi < ridge_point('tpu-v5e')}"))
     for r in rows:
         print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "metrics": metrics, "mode": "fig4",
+                       "gate": {"tolerance": None, "failures": []}},
+                      f, indent=2)
     return rows
 
 

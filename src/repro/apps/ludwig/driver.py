@@ -284,6 +284,48 @@ def step_timed(state: LudwigState, cfg: LudwigConfig) -> Tuple[LudwigState, Dict
     return LudwigState(dist=dist2, q=q_new), t
 
 
+# -- plan autotuning -----------------------------------------------------------
+
+def tune_step_graphs(cfg: LudwigConfig, state: LudwigState, **tune_kw):
+    """Autotune every launch graph a timestep runs (chem-stress chain, the
+    fused LB half-step, the LC update chain) and persist the winners, so a
+    subsequent run with ``cfg.target.plan_policy="tuned"`` — the same driver
+    code, zero application changes — picks the swept plans up from the
+    table (paper §3.2.2's per-architecture tuning as a layer, not an edit).
+
+    Returns {graph name: (plan, info)} from core.tune.autotune_graph; a
+    warm table short-circuits each sweep (info["cached"])."""
+    from repro.core import tune
+
+    q_nd = state.q.canonical_nd()
+    dq_nd, lapq_nd = stage_gradients(q_nd)
+    results = {}
+    g = chem_stress_graph(cfg)
+    results[g.name] = tune.autotune_graph(
+        g,
+        {"q": state.q, "lapq": _mkfield("lapq", lapq_nd, cfg),
+         "dq": _mkfield("dq", dq_nd, cfg)},
+        config=cfg.target, outputs=("h", "sigma"), **tune_kw)
+    h, force_nd = stage_chemical_stress(state.q, dq_nd, lapq_nd, cfg)
+    force = _mkfield("force", force_nd, cfg)
+    g = lb_step_graph(cfg)
+    results[g.name] = tune.autotune_graph(
+        g, {"dist": state.dist, "force": force},
+        config=cfg.target, outputs=("dist2", "u"), **tune_kw)
+    lb = g.launch({"dist": state.dist, "force": force},
+                  config=cfg.target, outputs=("dist2", "u"))
+    u_nd = lb["u"].canonical_nd()
+    w_nd = _w_tensor(u_nd)
+    adv_nd = stage_advection(q_nd, u_nd)
+    g = lc_update_graph(cfg)
+    results[g.name] = tune.autotune_graph(
+        g,
+        {"q": state.q, "h": h, "w": _mkfield("w", w_nd, cfg),
+         "adv": _mkfield("adv", adv_nd, cfg)},
+        config=cfg.target, outputs=("q_new",), **tune_kw)
+    return results
+
+
 # -- diagnostics ---------------------------------------------------------------
 
 def diagnostics(state: LudwigState, cfg: LudwigConfig) -> Dict[str, jnp.ndarray]:

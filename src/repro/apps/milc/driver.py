@@ -59,6 +59,29 @@ def solve(cfg: MilcConfig, u: Field, b: Field) -> CGResult:
     return res
 
 
+def tune_solve_graphs(cfg: MilcConfig, u: Field, b: Field, **tune_kw):
+    """Autotune the two launch graphs a CG iteration runs — the fused
+    normal-operator application (dslash+dslash+xpay/g5 + <p,Ap>) and the
+    fused update chain (+ residual norm) — persisting the winners so a
+    later ``cfg.target.plan_policy="tuned"`` solve loads them instead of
+    re-sweeping.  Returns {graph name: (plan, info)}."""
+    from repro.core import tune
+
+    from .cg import cg_update_graph, wilson_normal_graph
+
+    results = {}
+    g = wilson_normal_graph(float(cfg.kappa))
+    results[g.name] = tune.autotune_graph(
+        g, {"p": b, "u": u}, config=cfg.target, outputs=("ap", "pap"),
+        **tune_kw)
+    g = cg_update_graph(b.ncomp)
+    results[g.name] = tune.autotune_graph(
+        g, {"x": b, "r": b, "p": b, "ap": b},
+        scalars={"alpha": 0.3, "neg_alpha": -0.3},
+        config=cfg.target, outputs=("x_new", "r_new", "rr"), **tune_kw)
+    return results
+
+
 def residual_check(cfg: MilcConfig, u: Field, b: Field, x: Field) -> float:
     """|M x - b| / |b| — independent verification of the solve."""
     apply_m, _, _ = make_wilson_op(u, cfg.kappa, cfg.target)

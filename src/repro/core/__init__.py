@@ -10,12 +10,17 @@ Halo exchange (MPI)    ->  core.halo     (shard_map + ppermute)
 Kernel fusion          ->  core.fuse     (LaunchGraph: site-local, stencil and
                                           terminal-reduction stages -> one
                                           pallas_call)
+Lowering plans (VVL)   ->  core.plan     (LoweringPlan: vvl/slab/interpret/
+                                          halo/view decisions, candidates)
+Plan autotuner         ->  core.tune     (persisted per-(chain, layout,
+                                          backend) sweep table)
 Version gates          ->  core.compat   (shard_map / make_mesh across jax
                                           releases)
 """
 
 from .layout import AOS, SOA, Layout, LayoutKind, aosoa, parse_layout  # noqa: F401
 from .field import Field  # noqa: F401
+from .plan import LoweringPlan  # noqa: F401
 from .target import (  # noqa: F401
     TargetConfig,
     TargetKernel,
@@ -26,6 +31,7 @@ from .target import (  # noqa: F401
     resolve_vvl,
 )
 from .fuse import LaunchGraph, fused_launch  # noqa: F401
+from . import plan, tune  # noqa: F401
 from . import compat  # noqa: F401
 from .memspace import (  # noqa: F401
     copy_const_to_target,

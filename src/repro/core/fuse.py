@@ -41,11 +41,21 @@ ring-0 value raises a clear error.
 
 Launch cache
 ------------
-Each distinct (kernel chain, layouts, vvl/slab, out_specs, input signature)
-is built and ``jax.jit``-compiled once; repeated launches reuse the compiled
-callable, so a timestep loop does not re-trace.  The cache key is purely
-structural — stage *params* must be static Python values.  Runtime scalars
-(e.g. CG's traced alpha/beta) are passed via ``scalars=``.
+Each distinct (kernel chain, layouts, LoweringPlan, out_specs, input
+signature) is built and ``jax.jit``-compiled once; repeated launches reuse
+the compiled callable, so a timestep loop does not re-trace.  The cache key
+is purely structural — stage *params* must be static Python values.  Runtime
+scalars (e.g. CG's traced alpha/beta) are passed via ``scalars=``.
+
+Planning
+--------
+How a graph lowers (vvl for the flat site-block grid, the x-slab ``bx`` for
+the halo'd stencil grid, interpret fallback, halo strategy, canonical-view
+choice) is a :class:`~repro.core.plan.LoweringPlan`, resolved per launch
+from ``config.plan_policy`` ("default" heuristics / persisted "tuned" table
+via ``core.tune`` / explicit plan) or overridden with ``launch(...,
+plan=...)`` — which is how the autotuner times candidate plans through this
+very machinery.
 
 Probes: :func:`stats` counts traces and ``pallas_call`` constructions (each
 fused pallas launch builds exactly one), so tests can assert both the
@@ -75,8 +85,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import plan as plan_mod
 from .field import Field
 from .layout import Layout
+from .plan import LoweringPlan
 from .stencil import halo_pad
 from .target import (
     TargetConfig,
@@ -86,8 +98,6 @@ from .target import (
     build_out_specs,
     build_reduce_specs,
     build_slab_out_specs,
-    choose_slab,
-    resolve_vvl,
 )
 
 __all__ = [
@@ -361,6 +371,45 @@ class LaunchGraph:
         need = self._required_rings(tuple(outputs))
         return {n: need.get(n, 0) for n in self.external_inputs()}
 
+    def plan_signature(self):
+        """Process-stable structural signature for the autotune-table key:
+        kernel *names* plus chain structure, not function objects (which do
+        not survive a process boundary the persisted table must cross)."""
+        sig = []
+        for st in self._stages:
+            name = st.kernel.name if st.kernel is not None else st.op
+            sig.append((st.kind, name, st.width, st.op, st.ins, st.outs,
+                        tuple((k, repr(v)) for k, v in st.params)))
+        return (self.name, tuple(sig))
+
+    def plan_key(
+        self,
+        ins: Mapping[str, Field],
+        *,
+        config: Optional[TargetConfig] = None,
+        outputs: Optional[Sequence[str]] = None,
+        halo: str = "periodic",
+        lattice: Optional[Tuple[int, ...]] = None,
+    ) -> str:
+        """The persisted-autotuner key for launching this graph with these
+        inputs: (graph signature, input layouts/dtypes, lattice, engine,
+        halo, outputs, jax backend) — see core.plan.graph_plan_key."""
+        config = config or TargetConfig()
+        ext = self.external_inputs()
+        ordered_ins = [n for n in ext if n in ins]
+        if outputs is None:
+            outputs = [v for (_, v, _, _) in self._stages[-1].outs]
+        if lattice is None:
+            lattice = next(iter(ins.values())).lattice
+        inputs = tuple(
+            (n, ins[n].ncomp, str(ins[n].dtype), ins[n].layout.name,
+             tuple(ins[n].lattice))
+            for n in ordered_ins)
+        return plan_mod.graph_plan_key(
+            self.plan_signature(), engine=config.engine, halo=halo,
+            outputs=tuple(outputs), inputs=inputs, lattice=tuple(lattice),
+            backend=jax.default_backend())
+
     def bytes_moved(
         self,
         ins_ncomp: Mapping[str, int],
@@ -408,6 +457,7 @@ class LaunchGraph:
         scalars: Optional[Mapping] = None,
         out_layouts: Optional[Mapping[str, Layout]] = None,
         halo: str = "periodic",
+        plan: Optional[LoweringPlan] = None,
     ) -> Dict[str, Union[Field, jax.Array]]:
         """Execute the fused chain (the multi-kernel __targetLaunch__).
 
@@ -423,6 +473,8 @@ class LaunchGraph:
                     "pre" expects inputs already padded + exchanged by the
                     caller (core.halo inside shard_map), so the launch
                     composes with the MPI-layer decomposition.
+        plan        explicit LoweringPlan for this launch (overrides
+                    config.plan_policy — the autotuner's sweep hook).
         """
         if not self._stages:
             raise ValueError("LaunchGraph has no stages")
@@ -511,32 +563,35 @@ class LaunchGraph:
                 nc = src_nc
             out_info[o] = (int(nc), jnp.dtype(dt or first.dtype))
 
-        engine = config.engine
-        bx = 0
-        if engine == "pallas":
-            interpret = config.resolved_interpret()
-            if stencil:
-                vvl = 0
-                bx = choose_slab(
-                    lattice[0], int(math.prod(lattice[1:])), config.vvl)
-            else:
-                vvl = resolve_vvl(
-                    config,
-                    nsites,
-                    [ins[n].layout for n in ordered_ins]
-                    + [out_layouts[o] for o in field_outputs],
-                )
-        elif engine == "jnp":
-            vvl, interpret = 0, False
+        # -- planning: every lowering decision comes from a LoweringPlan ----
+        all_layouts = ([ins[n].layout for n in ordered_ins]
+                       + [out_layouts[o] for o in field_outputs])
+        if plan is None:
+            policy = getattr(config, "plan_policy", "default")
+            if isinstance(policy, LoweringPlan):
+                plan = policy
+            elif policy == "tuned":
+                from . import tune
+                plan = tune.lookup(self.plan_key(
+                    ins, config=config, outputs=outputs, halo=halo,
+                    lattice=lattice))
+            elif policy != "default":
+                raise ValueError(
+                    f"unknown plan_policy {policy!r}; use 'default', "
+                    f"'tuned' or an explicit LoweringPlan")
+        if plan is None:  # default policy, or tuned-table miss
+            plan = plan_mod.default_plan(
+                config, nsites=nsites, layouts=all_layouts,
+                stencil=stencil, lattice=lattice, halo=halo)
         else:
-            raise ValueError(f"unknown engine {engine!r}")
+            plan = plan_mod.adapt_plan(plan, stencil=stencil, halo=halo)
+            plan.validate(nsites=nsites, lattice=lattice,
+                          layouts=all_layouts, stencil=stencil)
+        engine, interpret = plan.engine, plan.interpret
+        vvl, bx = plan.vvl, plan.bx
 
         key = (
-            engine,
-            vvl,
-            bx,
-            halo,
-            interpret,
+            plan,
             lattice,
             tuple(st.signature() for st in self._stages),
             tuple(

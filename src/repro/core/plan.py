@@ -1,0 +1,389 @@
+"""LoweringPlan: every launch decision in one hashable place (paper §3.2.2).
+
+The paper tunes the Virtual Vector Length *per architecture by hand* and
+reports that the optimum differs across CPU, Xeon Phi and GPU; the targetDP
+report (Gray & Stratford 2014) frames VVL and friends as per-target
+compile-time constants behind a single abstraction.  Before this module the
+JAX port scattered those decisions across three call sites — the
+single-kernel pallas path, the site-local fused path and the halo'd-stencil
+fused path — each re-deriving vvl/slab/interpret inline.  Now every launch
+routes through a :class:`LoweringPlan`:
+
+  engine      "jnp" (host C / OpenMP analogue) or "pallas" (device analogue)
+  vvl         sites per pallas program (site-local lowering; 0 otherwise)
+  bx          x-slab planes per program (halo'd stencil lowering; 0 otherwise)
+  interpret   pallas interpret-mode fallback (True automatically off-TPU)
+  halo        stencil halo strategy: "periodic" pad vs caller-"pre"-exchanged
+  view        canonical-view strategy: "block" (layout pack/unpack inside the
+              kernel via BlockSpec) or "staged-nd" (canonical SoA-nd views
+              packed/unpacked as XLA ops around the single halo'd kernel —
+              native AoSoA stencil blocks are the roadmap follow-on)
+
+``choose_vvl`` / ``choose_slab`` live here as plan *candidate generators*:
+they enumerate the divisors of the lattice extent (memoized — the previous
+linear scan was O(nsites) per uncached launch for prime-ish lattices) and
+``default_plan`` picks the largest conforming one, reproducing the
+pre-plan heuristics bit-for-bit.  ``candidate_plans`` enumerates the whole
+conforming set for the autotuner (core.tune), which persists per-(chain,
+layout, backend) winners so applications get architecture-specific tuning
+without touching kernel or driver code — the paper's central claim, made a
+layer instead of a hand edit.
+
+Policy (``TargetConfig.plan_policy``):
+
+  "default"        the heuristic plan (bit-identical to the pre-plan code)
+  "tuned"          look up the persisted autotuner table (core.tune) by the
+                   launch's plan key; fall back to "default" on a miss
+  LoweringPlan     use exactly this plan (validated against the launch)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import math
+from typing import Optional, Sequence, Tuple
+
+from .layout import Layout, LayoutKind
+
+__all__ = [
+    "LoweringPlan",
+    "divisors",
+    "choose_vvl",
+    "choose_slab",
+    "resolve_vvl",
+    "sal_alignment",
+    "default_plan",
+    "plan_for_launch",
+    "candidate_plans",
+    "graph_plan_key",
+]
+
+VIEW_BLOCK = "block"
+VIEW_STAGED_ND = "staged-nd"
+
+
+# -- divisor enumeration (memoized candidate generators) -----------------------
+
+@functools.lru_cache(maxsize=4096)
+def divisors(n: int) -> Tuple[int, ...]:
+    """All divisors of n, ascending.  O(sqrt n) once, then memoized — called
+    on every uncached launch, so the old per-launch linear scan mattered for
+    prime-ish lattice extents."""
+    if n < 1:
+        raise ValueError(f"divisors of n >= 1 only, got {n}")
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return tuple(small + large[::-1])
+
+
+@functools.lru_cache(maxsize=4096)
+def choose_vvl(nsites: int, preferred: int = 128, multiple_of: int = 1) -> int:
+    """Largest divisor of nsites that is <= preferred and a multiple of
+    ``multiple_of`` (the lcm of the AoSoA SALs in play, so every VMEM block
+    is a whole number of short arrays).  When no such divisor <= preferred
+    exists, falls back to ``multiple_of`` itself — correctness (SAL-aligned
+    blocks) wins over the preferred block size — and raises only when even
+    that cannot divide the lattice."""
+    best = 0
+    for v in divisors(nsites):
+        if v > preferred:
+            break
+        if v % multiple_of == 0:
+            best = v
+    if best:
+        return best
+    if multiple_of <= nsites and nsites % multiple_of == 0:
+        return multiple_of
+    raise ValueError(
+        f"no vvl <= {preferred} divides nsites={nsites} and is a multiple "
+        f"of sal alignment {multiple_of}"
+    )
+
+
+@functools.lru_cache(maxsize=4096)
+def choose_slab(x_dim: int, inner_sites: int, vvl: int) -> int:
+    """Sites-per-program for a stencil (x-slab) grid: the largest divisor
+    ``bx`` of the leading lattice dim whose slab (bx * inner_sites sites)
+    stays within the vvl budget.  The stencil analogue of choose_vvl — when
+    vvl does not divide the interior block (inner_sites ∤ vvl) the slab
+    shrinks to the best conforming divisor instead of raising, and a single
+    x-plane (bx=1) is always valid."""
+    budget = max(int(vvl), inner_sites)
+    best = 1
+    for bx in divisors(x_dim):
+        if bx * inner_sites <= budget:
+            best = bx
+    return best
+
+
+def sal_alignment(layouts: Sequence[Layout]) -> int:
+    """lcm of the AoSoA short-array lengths touched by a launch."""
+    align = 1
+    for lay in layouts:
+        if lay.kind is LayoutKind.AOSOA:
+            align = align * lay.sal // math.gcd(align, lay.sal)
+    return align
+
+
+def resolve_vvl(config, nsites: int, layouts: Sequence[Layout]) -> int:
+    """config.vvl when it fits, else the best choose_vvl fallback.
+
+    'Fits' means vvl | nsites and sal | vvl for every AoSoA layout touched by
+    the launch; otherwise the largest conforming divisor is substituted, so
+    odd lattice sizes launch instead of raising (auto-vvl)."""
+    align = sal_alignment(layouts)
+    vvl = config.vvl
+    if nsites % vvl == 0 and vvl % align == 0:
+        return vvl
+    return choose_vvl(nsites, vvl, multiple_of=align)
+
+
+# -- the plan itself -----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LoweringPlan:
+    """One launch's worth of lowering decisions, hashable (it is the launch
+    cache key's planning component) and JSON-serializable (it is what the
+    autotuner persists)."""
+
+    engine: str = "jnp"
+    vvl: int = 0
+    bx: int = 0
+    interpret: bool = False
+    halo: str = "periodic"
+    view: str = VIEW_BLOCK
+
+    # -- serialization (core.tune persists plans as JSON) ----------------------
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LoweringPlan":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def describe(self) -> str:
+        """Short human/table label: the knob that distinguishes candidates."""
+        if self.engine != "pallas":
+            return self.engine
+        knob = f"bx={self.bx}" if self.bx else f"vvl={self.vvl}"
+        return f"pallas/{knob}" + ("/interpret" if self.interpret else "")
+
+    # -- validation -------------------------------------------------------------
+
+    def validate(
+        self,
+        *,
+        nsites: Optional[int] = None,
+        lattice: Optional[Tuple[int, ...]] = None,
+        layouts: Sequence[Layout] = (),
+        stencil: bool = False,
+    ) -> "LoweringPlan":
+        """Check this plan against a concrete launch; raises ValueError with
+        the violated invariant.  Returns self (chainable)."""
+        if self.engine not in ("jnp", "pallas"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.halo not in ("periodic", "pre"):
+            raise ValueError(
+                f"halo must be 'periodic' or 'pre', got {self.halo!r}")
+        if self.view not in (VIEW_BLOCK, VIEW_STAGED_ND):
+            raise ValueError(f"unknown canonical-view strategy {self.view!r}")
+        if self.engine == "jnp":
+            return self
+        if stencil:
+            if self.bx < 1:
+                raise ValueError(
+                    f"stencil lowering needs an x-slab bx >= 1, got plan "
+                    f"{self.describe()}")
+            if lattice is not None and lattice[0] % self.bx:
+                raise ValueError(
+                    f"bx={self.bx} must divide the leading lattice dim "
+                    f"{lattice[0]}")
+            if self.view != VIEW_STAGED_ND:
+                raise ValueError(
+                    "stencil graphs lower on canonical staged-nd views "
+                    "(view='staged-nd'); native AoSoA stencil blocks are a "
+                    "roadmap follow-on")
+        else:
+            if self.vvl < 1:
+                raise ValueError(
+                    f"site-local lowering needs vvl >= 1, got plan "
+                    f"{self.describe()}")
+            if self.bx:
+                raise ValueError(
+                    f"site-local lowering takes no x-slab (bx={self.bx})")
+            if nsites is not None and nsites % self.vvl:
+                raise ValueError(
+                    f"vvl={self.vvl} must divide nsites={nsites} "
+                    f"(use a conforming candidate from candidate_plans)")
+            for lay in layouts:
+                if lay.kind is LayoutKind.AOSOA and self.vvl % lay.sal:
+                    raise ValueError(
+                        f"vvl={self.vvl} must be a multiple of AoSoA "
+                        f"sal={lay.sal}")
+            if self.view != VIEW_BLOCK:
+                raise ValueError(
+                    "site-local lowering packs/unpacks per-block inside the "
+                    "kernel (view='block')")
+        return self
+
+
+def adapt_plan(plan: LoweringPlan, *, stencil: bool, halo: str) -> LoweringPlan:
+    """Fit an externally supplied plan (explicit policy or tuned-table entry)
+    to a concrete launch: the call-site halo strategy is authoritative (the
+    sharded drivers pass halo='pre'), and the view follows the lowering shape
+    (only one strategy per shape exists today)."""
+    return dataclasses.replace(
+        plan, halo=halo, view=VIEW_STAGED_ND if stencil else VIEW_BLOCK)
+
+
+# -- planners ------------------------------------------------------------------
+
+def default_plan(
+    config,
+    *,
+    nsites: int,
+    layouts: Sequence[Layout],
+    stencil: bool = False,
+    lattice: Optional[Tuple[int, ...]] = None,
+    halo: str = "periodic",
+) -> LoweringPlan:
+    """The heuristic plan — bit-identical to the pre-plan inline decisions:
+    jnp lowers whole-lattice; pallas site-local takes the largest conforming
+    vvl divisor; pallas stencil takes the largest conforming x-slab within
+    the config.vvl budget; interpret falls back automatically off-TPU."""
+    engine = config.engine
+    if engine == "jnp":
+        return LoweringPlan(
+            "jnp", halo=halo,
+            view=VIEW_STAGED_ND if stencil else VIEW_BLOCK)
+    if engine != "pallas":
+        raise ValueError(f"unknown engine {engine!r}")
+    interpret = config.resolved_interpret()
+    if stencil:
+        if lattice is None:
+            raise ValueError("stencil plans need the lattice shape")
+        bx = choose_slab(lattice[0], int(math.prod(lattice[1:])), config.vvl)
+        return LoweringPlan("pallas", vvl=0, bx=bx, interpret=interpret,
+                            halo=halo, view=VIEW_STAGED_ND)
+    vvl = resolve_vvl(config, nsites, layouts)
+    return LoweringPlan("pallas", vvl=vvl, bx=0, interpret=interpret,
+                        halo=halo, view=VIEW_BLOCK)
+
+
+def plan_for_launch(config, nsites: int, layouts: Sequence[Layout]) -> LoweringPlan:
+    """Plan a single-kernel site-local launch (core.target.launch and the
+    bespoke kernel ops wrappers).  Honors an explicit-plan policy; the
+    "tuned" policy falls back to the default heuristics here because single
+    launches carry no graph signature to key the table on (wrap the kernel
+    in a LaunchGraph to tune it)."""
+    policy = getattr(config, "plan_policy", "default")
+    if isinstance(policy, LoweringPlan):
+        return policy.validate(nsites=nsites, layouts=layouts, stencil=False)
+    if policy not in ("default", "tuned"):
+        raise ValueError(
+            f"unknown plan_policy {policy!r}; use 'default', 'tuned' or an "
+            f"explicit LoweringPlan")
+    return default_plan(config, nsites=nsites, layouts=layouts, stencil=False)
+
+
+def interpret_for(config) -> bool:
+    """The interpret decision alone, for bespoke pallas kernels whose
+    tiling is internal (no vvl/slab planning surface): an explicit-plan
+    policy's interpret wins, else the config's off-TPU fallback."""
+    policy = getattr(config, "plan_policy", "default")
+    if isinstance(policy, LoweringPlan) and policy.engine == "pallas":
+        return policy.interpret
+    return config.resolved_interpret()
+
+
+def _spread(values, k: int):
+    """Deterministic evenly-spaced subset of size <= k (keeps both ends)."""
+    if len(values) <= k:
+        return list(values)
+    if k <= 1:
+        return [values[-1]]
+    idx = {round(i * (len(values) - 1) / (k - 1)) for i in range(k)}
+    return [values[i] for i in sorted(idx)]
+
+
+def candidate_plans(
+    config,
+    *,
+    nsites: int,
+    layouts: Sequence[Layout],
+    stencil: bool = False,
+    lattice: Optional[Tuple[int, ...]] = None,
+    halo: str = "periodic",
+    max_candidates: int = 8,
+) -> Tuple[LoweringPlan, ...]:
+    """Enumerate valid plans for the autotuner sweep, deterministically.
+
+    Site-local: vvl over the SAL-conforming divisors of nsites (evenly
+    spread when more than ``max_candidates``).  Stencil: bx over the
+    divisors of the leading lattice dim.  Exploration is bounded to 8x the
+    heuristic budget (preferred vvl / slab budget) so the sweep never
+    proposes whole-lattice blocks that cannot fit VMEM on a real device;
+    the tuner additionally skips (and records) any candidate whose
+    lowering fails.  The default (heuristic) plan is always included
+    first; every candidate passes :meth:`LoweringPlan.validate` — the
+    property tests (tests/test_plan.py, tests/test_property.py) assert
+    this for arbitrary nsites/sal/x_dim."""
+    default = default_plan(config, nsites=nsites, layouts=layouts,
+                           stencil=stencil, lattice=lattice, halo=halo)
+    if default.engine != "pallas":
+        return (default,)
+    if stencil:
+        inner = int(math.prod(lattice[1:]))
+        budget = max(int(config.vvl), inner)
+        bxs = [bx for bx in divisors(lattice[0])
+               if bx * inner <= 8 * budget] or [default.bx]
+        cands = [dataclasses.replace(default, bx=bx)
+                 for bx in _spread(bxs, max_candidates)]
+    else:
+        align = sal_alignment(layouts)
+        cap = 8 * max(int(config.vvl), 128)
+        vs = [v for v in divisors(nsites)
+              if v % align == 0 and v <= cap] or [default.vvl]
+        cands = [dataclasses.replace(default, vvl=v)
+                 for v in _spread(vs, max_candidates)]
+    out = [default]
+    for c in cands:
+        if c not in out:
+            out.append(c)
+    for c in out:
+        c.validate(nsites=nsites, lattice=lattice, layouts=layouts,
+                   stencil=stencil)
+    return tuple(out[:max_candidates + 1])
+
+
+# -- tuner keys ----------------------------------------------------------------
+
+def graph_plan_key(
+    signature,
+    *,
+    engine: str,
+    halo: str,
+    outputs: Sequence[str],
+    inputs,
+    lattice: Tuple[int, ...],
+    backend: str,
+) -> str:
+    """Stable string key for the persisted tune table: one entry per
+    (graph signature, input layouts/dtypes, lattice shape, engine, halo,
+    outputs, backend).  The signature must be process-stable (kernel *names*
+    and structure, not function objects — see LaunchGraph.plan_signature)."""
+    blob = repr((signature, engine, halo, tuple(outputs), tuple(inputs),
+                 tuple(lattice), backend))
+    digest = hashlib.sha256(blob.encode()).hexdigest()[:16]
+    name = signature[0] if isinstance(signature, tuple) and signature else "g"
+    return f"{name}|{backend}|{engine}|{digest}"

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .field import Field
+from .plan import plan_for_launch
 from .target import TargetConfig
 
 __all__ = ["target_sum", "target_max"]
@@ -36,13 +37,14 @@ _MONOIDS = {
 def _reduce(field: Field, config: Optional[TargetConfig], op: str) -> jax.Array:
     config = config or TargetConfig()
     combine, init, fold = _MONOIDS[op]
-    if config.engine == "jnp":
+    # lowering decisions (vvl conformance, interpret fallback, plan policy)
+    # come from the planning layer, like every other launch
+    plan = plan_for_launch(config, field.nsites, [field.layout])
+    if plan.engine == "jnp":
         return fold(field.canonical(), axis=1)
 
-    vvl = config.vvl
+    vvl = plan.vvl
     nsites, ncomp = field.nsites, field.ncomp
-    if nsites % vvl:
-        raise ValueError(f"vvl={vvl} must divide nsites={nsites}")
     grid = (nsites // vvl,)
     layout = field.layout
 
@@ -60,7 +62,7 @@ def _reduce(field: Field, config: Optional[TargetConfig], op: str) -> jax.Array:
         in_specs=[pl.BlockSpec(layout.block_shape(ncomp, vvl), layout.block_index_map())],
         out_specs=pl.BlockSpec((ncomp, vvl), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((ncomp, vvl), field.dtype),
-        interpret=config.resolved_interpret(),
+        interpret=plan.interpret,
         name=f"target_{op}",
     )(field.data)
     return fold(partial, axis=1)

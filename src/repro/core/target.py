@@ -25,16 +25,23 @@ remain available for them through their ops.py wrappers.
 Chains of site-local launches whose outputs feed later inputs can be fused
 into a *single* device kernel (intermediates never round-trip through HBM)
 with ``core.fuse.LaunchGraph`` / ``core.fuse.fused_launch``, which shares the
-BlockSpec machinery below (``build_in_specs`` / ``build_out_specs`` /
-``resolve_vvl``) and adds a ``jax.jit``-backed launch cache.  A single
-``launch`` remains un-cached by design: its params may be traced values
-(e.g. CG's alpha under ``lax.while_loop``), which must not enter a cache key.
+BlockSpec machinery below (``build_in_specs`` / ``build_out_specs``) and adds
+a ``jax.jit``-backed launch cache.  A single ``launch`` remains un-cached by
+design: its params may be traced values (e.g. CG's alpha under
+``lax.while_loop``), which must not enter a cache key.
+
+Every lowering decision (vvl, stencil slab, interpret fallback, halo
+strategy, canonical-view choice) is planned in ``core.plan`` — this module
+only *executes* a :class:`~repro.core.plan.LoweringPlan`.  ``choose_vvl`` /
+``choose_slab`` / ``resolve_vvl`` are re-exported from there for backwards
+compatibility; ``TargetConfig.plan_policy`` selects how plans are made
+("default" heuristics, the persisted "tuned" table of ``core.tune``, or an
+explicit plan).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -42,7 +49,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .field import Field
-from .layout import Layout, LayoutKind
+from .layout import Layout
+from .plan import (  # noqa: F401  (re-exported: the planning layer owns them)
+    LoweringPlan,
+    choose_slab,
+    choose_vvl,
+    plan_for_launch,
+    resolve_vvl,
+)
 
 __all__ = [
     "TargetConfig",
@@ -51,6 +65,7 @@ __all__ = [
     "choose_vvl",
     "resolve_vvl",
     "choose_slab",
+    "LoweringPlan",
     "TargetKernel",
 ]
 
@@ -66,69 +81,26 @@ def _on_tpu() -> bool:
 class TargetConfig:
     """Compile-time configuration (the paper's build options).
 
-    engine     "jnp" (host C / OpenMP analogue) or "pallas" (device analogue)
-    vvl        Virtual Vector Length: lattice sites per pallas program.
-    interpret  run pallas in interpret mode (True automatically off-TPU).
+    engine       "jnp" (host C / OpenMP analogue) or "pallas" (device analogue)
+    vvl          Virtual Vector Length: lattice sites per pallas program.
+    interpret    run pallas in interpret mode (True automatically off-TPU).
+    plan_policy  how lowering decisions are made (core.plan):
+                 "default" — the heuristic plan (largest conforming vvl/slab);
+                 "tuned"   — look up the persisted autotune table (core.tune)
+                             by the launch's plan key, falling back to the
+                             default heuristics on a miss;
+                 a LoweringPlan — use exactly this plan (validated per launch).
     """
 
     engine: str = "jnp"
     vvl: int = 128
     interpret: Optional[bool] = None
+    plan_policy: Union[str, LoweringPlan] = "default"
 
     def resolved_interpret(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return not _on_tpu()
-
-
-def choose_vvl(nsites: int, preferred: int = 128, multiple_of: int = 1) -> int:
-    """Largest divisor of nsites that is <= preferred and a multiple of
-    ``multiple_of`` (the lcm of the AoSoA SALs in play, so every VMEM block
-    is a whole number of short arrays).  When no such divisor <= preferred
-    exists, falls back to ``multiple_of`` itself — correctness (SAL-aligned
-    blocks) wins over the preferred block size — and raises only when even
-    that cannot divide the lattice."""
-    for v in range(min(preferred, nsites), 0, -1):
-        if nsites % v == 0 and v % multiple_of == 0:
-            return v
-    if multiple_of <= nsites and nsites % multiple_of == 0:
-        return multiple_of
-    raise ValueError(
-        f"no vvl <= {preferred} divides nsites={nsites} and is a multiple "
-        f"of sal alignment {multiple_of}"
-    )
-
-
-def resolve_vvl(config: "TargetConfig", nsites: int,
-                layouts: Sequence[Layout]) -> int:
-    """config.vvl when it fits, else the best choose_vvl fallback.
-
-    'Fits' means vvl | nsites and sal | vvl for every AoSoA layout touched by
-    the launch; otherwise the largest conforming divisor is substituted, so
-    odd lattice sizes launch instead of raising (auto-vvl)."""
-    align = 1
-    for lay in layouts:
-        if lay.kind is LayoutKind.AOSOA:
-            align = align * lay.sal // math.gcd(align, lay.sal)
-    vvl = config.vvl
-    if nsites % vvl == 0 and vvl % align == 0:
-        return vvl
-    return choose_vvl(nsites, vvl, multiple_of=align)
-
-
-def choose_slab(x_dim: int, inner_sites: int, vvl: int) -> int:
-    """Sites-per-program for a stencil (x-slab) grid: the largest divisor
-    ``bx`` of the leading lattice dim whose slab (bx * inner_sites sites)
-    stays within the vvl budget.  The stencil analogue of choose_vvl — when
-    vvl does not divide the interior block (inner_sites ∤ vvl) the slab
-    shrinks to the best conforming divisor instead of raising, and a single
-    x-plane (bx=1) is always valid."""
-    budget = max(int(vvl), inner_sites)
-    best = 1
-    for bx in range(1, x_dim + 1):
-        if x_dim % bx == 0 and bx * inner_sites <= budget:
-            best = bx
-    return best
 
 
 def build_halo_in_specs(
@@ -234,8 +206,7 @@ class TargetKernel:
         ins: Dict[str, Field],
         out_specs: Mapping[str, Tuple[int, object]],
         params: Mapping,
-        vvl: int,
-        interpret: bool,
+        plan: LoweringPlan,
         out_layouts: Mapping[str, Layout],
     ) -> Dict[str, jax.Array]:
         names = list(ins)
@@ -243,10 +214,11 @@ class TargetKernel:
         for f in ins.values():
             if f.nsites != nsites:
                 raise ValueError("all fields in one launch must share nsites")
+        vvl, interpret = plan.vvl, plan.interpret
         if nsites % vvl:
             raise ValueError(
                 f"vvl={vvl} must divide nsites={nsites} "
-                f"(use choose_vvl or pad the lattice)"
+                f"(use a conforming plan or pad the lattice)"
             )
         grid = (nsites // vvl,)
 
@@ -344,26 +316,19 @@ def launch(
     for k in out_specs:
         out_layouts.setdefault(k, first.layout)
 
-    if config.engine == "jnp":
+    # every lowering decision (auto-vvl, interpret fallback, policy) is made
+    # by the planning layer; this function only executes the plan
+    plan = plan_for_launch(
+        config,
+        first.nsites,
+        [f.layout for f in ins.values()] + [out_layouts[k] for k in out_specs],
+    )
+    if plan.engine == "jnp":
         outs = kern._run_jnp(ins, params)
-    elif config.engine == "pallas":
-        # auto-vvl: fall back to the largest conforming divisor when
-        # config.vvl does not divide nsites (or violates an AoSoA SAL).
-        vvl = resolve_vvl(
-            config,
-            first.nsites,
-            [f.layout for f in ins.values()] + [out_layouts[k] for k in out_specs],
-        )
+    else:  # "pallas" (plan_for_launch validated the engine)
         outs = kern._run_pallas(
-            ins,
-            out_specs,
-            params,
-            vvl=vvl,
-            interpret=config.resolved_interpret(),
-            out_layouts=out_layouts,
+            ins, out_specs, params, plan=plan, out_layouts=out_layouts
         )
-    else:
-        raise ValueError(f"unknown engine {config.engine!r}")
 
     fields = {}
     for k, (ncomp, dtype) in out_specs.items():

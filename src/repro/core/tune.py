@@ -1,0 +1,308 @@
+"""Persisted per-(chain, layout, backend) plan autotuner (paper §3.2.2).
+
+The paper tunes VVL per architecture by hand; this module does the sweep
+the paper's authors did manually and *persists* the winners, so later
+sessions (and `plan_policy="tuned"` launches) load the table instead of
+re-sweeping.  One entry per plan key — (graph signature, input layouts and
+dtypes, lattice shape, engine, halo strategy, requested outputs, jax
+backend) — holding the winning :class:`~repro.core.plan.LoweringPlan` plus
+the sweep timings for audit.
+
+Table location: ``.targetdp_tune.json`` in the working directory, or the
+``TARGETDP_TUNE_PATH`` environment variable.  The in-memory table is cached
+per path; :func:`clear_table_cache` drops it (tests use this to simulate a
+fresh process — the acceptance probe is *zero sweep launches* on a second
+run that hits the persisted table).
+
+Usage::
+
+    from repro.core import tune
+    plan, info = tune.autotune_graph(graph, ins, config=cfg,
+                                     outputs=("dist2", "u"))
+    # later processes: TargetConfig(..., plan_policy="tuned") makes every
+    # LaunchGraph.launch look its plan up in the persisted table.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from . import plan as plan_mod
+from .plan import LoweringPlan
+
+__all__ = [
+    "DEFAULT_PATH",
+    "ENV_VAR",
+    "tune_path",
+    "load_table",
+    "save_table",
+    "clear_table_cache",
+    "lookup",
+    "record",
+    "autotune_graph",
+    "stats",
+    "reset_stats",
+]
+
+DEFAULT_PATH = ".targetdp_tune.json"
+ENV_VAR = "TARGETDP_TUNE_PATH"
+TABLE_VERSION = 1
+
+_TABLE: Optional[Dict[str, dict]] = None
+_TABLE_PATH: Optional[str] = None
+
+# sweep_launches counts timed candidate launches (incl. warmup): the
+# "no re-sweep on a warm table" probe.  lookups/hits instrument the
+# plan_policy="tuned" path.
+_STATS = {"sweep_launches": 0, "lookups": 0, "hits": 0, "tunes": 0}
+
+
+def stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+# -- the persisted table -------------------------------------------------------
+
+def tune_path() -> str:
+    """Where the table lives: $TARGETDP_TUNE_PATH or ./.targetdp_tune.json."""
+    return os.environ.get(ENV_VAR) or DEFAULT_PATH
+
+
+def load_table(path: Optional[str] = None) -> Dict[str, dict]:
+    """The in-memory table for ``path`` (lazy-loaded from disk, cached per
+    path).  A missing or corrupt file yields an empty table — tuning must
+    never break a launch."""
+    global _TABLE, _TABLE_PATH
+    path = path or tune_path()
+    if _TABLE is None or _TABLE_PATH != path:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            entries = raw.get("entries", {})
+            _TABLE = dict(entries) if isinstance(entries, dict) else {}
+        except (FileNotFoundError, json.JSONDecodeError, OSError):
+            _TABLE = {}
+        _TABLE_PATH = path
+    return _TABLE
+
+
+def clear_table_cache() -> None:
+    """Drop the in-memory table so the next access re-reads disk (what a
+    fresh process would see)."""
+    global _TABLE, _TABLE_PATH
+    _TABLE, _TABLE_PATH = None, None
+
+
+def save_table(path: Optional[str] = None) -> str:
+    """Write the in-memory table to disk (atomic replace).  Returns path."""
+    path = path or tune_path()
+    table = load_table(path)
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": TABLE_VERSION, "entries": table}, f,
+                  indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def lookup(key: str, path: Optional[str] = None) -> Optional[LoweringPlan]:
+    """The persisted winner for ``key``, or None (plan_policy="tuned" falls
+    back to the default heuristics on a miss).  A structurally malformed
+    entry (hand-edited table, truncated write, schema drift) is treated as
+    a miss — tuning must never break a launch."""
+    _STATS["lookups"] += 1
+    entry = load_table(path).get(key)
+    if entry is None:
+        return None
+    try:
+        plan = LoweringPlan.from_json(dict(entry["plan"]))
+        # structural sanity only (launch re-validates against the lattice);
+        # stencil entries carry bx>0, so validate in the matching shape
+        plan.validate(stencil=plan.bx > 0)
+    except (KeyError, TypeError, ValueError):
+        return None
+    _STATS["hits"] += 1
+    return plan
+
+
+def record(
+    key: str,
+    plan: LoweringPlan,
+    *,
+    timings_us: Optional[Mapping[str, float]] = None,
+    default: Optional[LoweringPlan] = None,
+    meta: Optional[Mapping] = None,
+    save: bool = True,
+    path: Optional[str] = None,
+) -> None:
+    """Store ``plan`` as the winner for ``key`` (and persist by default)."""
+    entry = {"plan": plan.to_json()}
+    if timings_us:
+        entry["timings_us"] = {k: round(float(v), 3)
+                               for k, v in timings_us.items()}
+    if default is not None:
+        entry["default_plan"] = default.to_json()
+    entry["meta"] = dict(meta or {})
+    entry["meta"].setdefault("created", time.time())
+    load_table(path)[key] = entry
+    if save:
+        save_table(path)
+
+
+# -- the sweep -----------------------------------------------------------------
+
+def _sweep(graph, ins, launch_kw, cands, iters: int, warmup: int):
+    """Time every candidate: one warmup pass (compile) per candidate, then
+    ``iters`` timed *round-robin* rounds — interleaving the candidates so
+    machine drift biases them equally — taking the per-candidate min (the
+    noise-robust estimator for ranking).  A candidate that raises (e.g. a
+    slab over the VMEM budget on a real TPU) is recorded as failed and
+    skipped, never aborting the sweep.  Every launch, warmup included,
+    counts in the sweep_launches probe.
+
+    Returns (times, failed): candidate -> best seconds / candidate ->
+    error repr."""
+    def run(plan):
+        out = graph.launch(ins, plan=plan, **launch_kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        _STATS["sweep_launches"] += 1
+
+    times: Dict[LoweringPlan, float] = {}
+    failed: Dict[LoweringPlan, str] = {}
+    for cand in cands:
+        try:
+            for _ in range(warmup):
+                run(cand)
+        except Exception as e:  # noqa: BLE001 - any lowering failure
+            failed[cand] = repr(e)
+    for _ in range(max(1, iters)):
+        for cand in cands:
+            if cand in failed:
+                continue
+            try:
+                t0 = time.perf_counter()
+                run(cand)
+                dt = time.perf_counter() - t0
+            except Exception as e:  # noqa: BLE001
+                failed[cand] = repr(e)
+                times.pop(cand, None)
+                continue
+            times[cand] = min(times.get(cand, dt), dt)
+    return times, failed
+
+
+def _interior_lattice(graph, ins, outputs, halo) -> Tuple[int, ...]:
+    """The lattice launch plans are made for: the first input's lattice,
+    minus its halo ring when the caller pre-exchanged (halo='pre') — the
+    same derivation LaunchGraph.launch performs, so autotune keys and
+    tuned-policy lookup keys agree."""
+    first_name = next(iter(ins))
+    lattice = tuple(ins[first_name].lattice)
+    if graph.has_stencil and halo == "pre":
+        ring = graph.halo_widths(outputs).get(first_name, 0)
+        lattice = tuple(s - 2 * ring for s in lattice)
+    return lattice
+
+
+def plan_candidates_for(
+    graph,
+    ins,
+    *,
+    config,
+    outputs: Optional[Sequence[str]] = None,
+    halo: str = "periodic",
+    max_candidates: int = 8,
+) -> Tuple[LoweringPlan, ...]:
+    """Candidate plans for launching ``graph`` with ``ins`` (first entry is
+    always the default heuristic plan) — the sweep set of autotune_graph,
+    also what benchmarks use to time default-vs-tuned."""
+    lattice = _interior_lattice(graph, ins, outputs, halo)
+    nsites = 1
+    for s in lattice:
+        nsites *= s
+    layouts = [f.layout for f in ins.values()]
+    return plan_mod.candidate_plans(
+        config, nsites=nsites, layouts=layouts, stencil=graph.has_stencil,
+        lattice=lattice, halo=halo, max_candidates=max_candidates)
+
+
+def autotune_graph(
+    graph,
+    ins,
+    *,
+    config,
+    outputs: Optional[Sequence[str]] = None,
+    scalars: Optional[Mapping] = None,
+    out_layouts: Optional[Mapping] = None,
+    halo: str = "periodic",
+    iters: int = 3,
+    warmup: int = 1,
+    max_candidates: int = 8,
+    min_gain: float = 0.05,
+    force: bool = False,
+    save: bool = True,
+    path: Optional[str] = None,
+) -> Tuple[LoweringPlan, dict]:
+    """Sweep candidate plans for one LaunchGraph launch and persist the
+    winner.  Returns ``(plan, info)`` where info holds the key, whether the
+    table already had it (``cached``), the per-candidate timings, and any
+    failed candidates.
+
+    A warm table short-circuits the sweep entirely (``info["cached"] is
+    True``, zero sweep launches) unless ``force=True``.  Candidates come
+    from :func:`repro.core.plan.candidate_plans`; each is timed with the
+    ordinary launch machinery (same cache, same probes) in round-robin
+    rounds.  ``min_gain`` is hysteresis toward the default heuristic plan:
+    a candidate only dethrones it by beating it by more than that relative
+    margin, so timing noise cannot persist a plan that is merely noisily
+    fast.  Candidates whose lowering fails (e.g. over the VMEM budget) are
+    skipped and recorded — logged in ``info["failed"]`` and the table
+    entry, not silently dropped."""
+    lattice = _interior_lattice(graph, ins, outputs, halo)
+    key = graph.plan_key(ins, config=config, outputs=outputs, halo=halo,
+                         lattice=lattice)
+    if not force:
+        hit = lookup(key, path)
+        if hit is not None:
+            return hit, {"key": key, "cached": True}
+
+    cands = plan_candidates_for(
+        graph, ins, config=config, outputs=outputs, halo=halo,
+        max_candidates=max_candidates)
+    default = cands[0]
+
+    launch_kw = dict(config=config, outputs=outputs, scalars=scalars,
+                     out_layouts=out_layouts, halo=halo)
+    _STATS["tunes"] += 1
+    times, failed = _sweep(graph, ins, launch_kw, cands, iters, warmup)
+    if not times:
+        raise RuntimeError(
+            f"every candidate plan failed for {getattr(graph, 'name', '?')}: "
+            f"{ {c.describe(): e for c, e in failed.items()} }")
+    best = min(times, key=lambda c: (times[c], c.describe()))
+    # hysteresis: keep the deterministic default unless the winner is
+    # *measurably* better — noise must not persist an unproven plan
+    if default in times and times[best] > times[default] * (1.0 - min_gain):
+        best = default
+
+    timings_us = {c.describe(): t * 1e6 for c, t in times.items()}
+    failed_desc = {c.describe(): e for c, e in failed.items()}
+    record(key, best, timings_us=timings_us, default=default,
+           meta={"graph": getattr(graph, "name", "?"),
+                 "backend": jax.default_backend(),
+                 "lattice": list(lattice),
+                 "failed": failed_desc},
+           save=save, path=path)
+    return best, {"key": key, "cached": False, "timings_us": timings_us,
+                  "failed": failed_desc, "default": default,
+                  "best_us": times[best] * 1e6}

@@ -4,7 +4,8 @@ from __future__ import annotations
 
 
 
-from repro.core import Field, TargetConfig, TargetKernel, resolve_vvl
+from repro.core import Field, TargetConfig, TargetKernel
+from repro.core.plan import plan_for_launch
 from . import kernel, ref
 
 
@@ -26,15 +27,17 @@ def collide(
         out = ref.collide_ref(dist.canonical(), force.canonical(), tau)
         return dist.with_canonical(out)
     if config.engine == "pallas":
+        # vvl/interpret through the planning layer (auto-vvl, plan policy)
+        plan = plan_for_launch(config, dist.nsites, [dist.layout, force.layout])
         phys = kernel.collide_pallas(
             dist.data,
             force.data,
             tau=tau,
             layout=dist.layout,
             force_layout=force.layout,
-            vvl=resolve_vvl(config, dist.nsites, [dist.layout, force.layout]),
+            vvl=plan.vvl,
             nsites=dist.nsites,
-            interpret=config.resolved_interpret(),
+            interpret=plan.interpret,
         )
         return dist.with_data(phys)
     raise ValueError(f"unknown engine {config.engine!r}")

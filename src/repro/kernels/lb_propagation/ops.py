@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import Field, LaunchGraph, TargetConfig, stencil
+from repro.core.plan import interpret_for
 from repro.kernels.lb_collision.ops import collide_kernel
 from repro.maths import d3q19
 from . import kernel, ref
@@ -30,8 +31,7 @@ def propagate(dist: Field, *, config: TargetConfig) -> Field:
     elif config.engine == "pallas":
         f_halo = stencil.halo_pad(f_nd, 1, (1, 2, 3))
         out = kernel.propagate_pallas(
-            f_halo, width=1, interpret=config.resolved_interpret()
-        )
+            f_halo, width=1, interpret=interpret_for(config))
     else:
         raise ValueError(f"unknown engine {config.engine!r}")
     return dist.with_canonical(out.reshape(dist.ncomp, dist.nsites))
@@ -88,6 +88,6 @@ def propagate_halo(dist_halo: jnp.ndarray, *, config: TargetConfig, width: int =
         return ref.propagate_halo_ref(dist_halo, width)
     if config.engine == "pallas":
         return kernel.propagate_pallas(
-            dist_halo, width=width, interpret=config.resolved_interpret()
+            dist_halo, width=width, interpret=interpret_for(config)
         )
     raise ValueError(f"unknown engine {config.engine!r}")

@@ -12,6 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import Field, TargetConfig
+from repro.core.plan import plan_for_launch
 from . import kernel, ref
 
 
@@ -53,14 +54,17 @@ def dslash(psi: Field, u: Field, *, config: TargetConfig) -> Field:
         u_bwd = ref.gather_gauge_bwd_periodic(u_nd)
         flat = lambda a: a.reshape(a.shape[0], -1)
         lay = psi.layout
+        # vvl/interpret through the planning layer (auto-vvl: the seed
+        # passed config.vvl raw and raised on non-dividing lattices)
+        plan = plan_for_launch(config, psi.nsites, [lay])
         out_phys = kernel.dslash_site_pallas(
             lay.pack(flat(u_nd)),
             lay.pack(flat(u_bwd)),
             lay.pack(flat(nbrs)),
             layout=lay,
-            vvl=config.vvl,
+            vvl=plan.vvl,
             nsites=psi.nsites,
-            interpret=config.resolved_interpret(),
+            interpret=plan.interpret,
         )
         return psi.with_data(out_phys)
     raise ValueError(f"unknown engine {config.engine!r}")
@@ -93,10 +97,11 @@ def dslash_halo(
         from repro.core.layout import SOA
 
         nsites = int(np.prod(lat))
+        plan = plan_for_launch(config, nsites, [SOA])
         out_phys = kernel.dslash_site_pallas(
             flat(u_fwd), flat(u_bwd), flat(nbrs),
-            layout=SOA, vvl=config.vvl, nsites=nsites,
-            interpret=config.resolved_interpret(),
+            layout=SOA, vvl=plan.vvl, nsites=nsites,
+            interpret=plan.interpret,
         )
         out = out_phys
     else:

@@ -1,0 +1,248 @@
+"""core.plan: LoweringPlan validity, candidate-generator equivalence with
+the seed's linear-scan heuristics, plan-invariance of the production
+graphs, and the no-direct-heuristic-callers layering guarantee.
+
+(The hypothesis property-test forms of the candidate-validity invariants
+live in tests/test_property.py with the other hypothesis suites; the
+sweeps here are deterministic so they run without hypothesis installed.)"""
+
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AOS, SOA, Field, LoweringPlan, TargetConfig, aosoa,
+)
+from repro.core import plan as plan_mod
+
+
+# -- candidate generators ------------------------------------------------------
+
+def test_divisors():
+    assert plan_mod.divisors(1) == (1,)
+    assert plan_mod.divisors(12) == (1, 2, 3, 4, 6, 12)
+    assert plan_mod.divisors(97) == (1, 97)  # prime
+    with pytest.raises(ValueError):
+        plan_mod.divisors(0)
+
+
+@pytest.mark.parametrize("n", [2, 6, 30, 36, 97, 100, 128, 540, 4096])
+def test_divisors_complete_and_sorted(n):
+    ds = plan_mod.divisors(n)
+    assert list(ds) == sorted(ds)
+    assert all(n % d == 0 for d in ds)
+    assert all((n % k != 0) or (k in ds) for k in range(1, n + 1))
+
+
+def _legacy_choose_vvl(nsites, preferred, multiple_of):
+    """The seed's O(nsites) linear scan (verbatim semantics)."""
+    for v in range(min(preferred, nsites), 0, -1):
+        if nsites % v == 0 and v % multiple_of == 0:
+            return v
+    if multiple_of <= nsites and nsites % multiple_of == 0:
+        return multiple_of
+    return None
+
+
+def test_choose_vvl_matches_legacy_scan():
+    """The divisor-enumeration choose_vvl is semantically identical to the
+    seed's linear scan, across a broad deterministic sweep."""
+    for nsites in [1, 2, 7, 12, 60, 97, 100, 128, 127, 512, 1000, 3600]:
+        for preferred in [1, 3, 64, 128, 500]:
+            for mult in [1, 2, 4, 8]:
+                want = _legacy_choose_vvl(nsites, preferred, mult)
+                if want is None:
+                    with pytest.raises(ValueError):
+                        plan_mod.choose_vvl(nsites, preferred,
+                                            multiple_of=mult)
+                else:
+                    got = plan_mod.choose_vvl(nsites, preferred,
+                                              multiple_of=mult)
+                    assert got == want, (nsites, preferred, mult)
+
+
+def test_choose_slab_matches_legacy_scan():
+    for x_dim in [1, 2, 5, 8, 12, 30, 64, 97]:
+        for inner in [1, 16, 42, 128, 500]:
+            for vvl in [1, 64, 128, 4096]:
+                budget = max(vvl, inner)
+                want = 1
+                for bx in range(1, x_dim + 1):
+                    if x_dim % bx == 0 and bx * inner <= budget:
+                        want = bx
+                assert plan_mod.choose_slab(x_dim, inner, vvl) == want
+
+
+def test_choose_vvl_memoized_on_prime_lattices():
+    """The seed scanned O(nsites) per call; divisor enumeration + lru_cache
+    makes repeated launches on prime-ish lattices O(1) after the first."""
+    n = 49999  # prime
+    assert plan_mod.choose_vvl(n, 4096) == 1
+    info = plan_mod.choose_vvl.cache_info()
+    plan_mod.choose_vvl(n, 4096)
+    assert plan_mod.choose_vvl.cache_info().hits > info.hits
+
+
+# -- candidate plans are always valid ------------------------------------------
+
+@pytest.mark.parametrize("sal", [1, 2, 4, 8])
+@pytest.mark.parametrize("nblk", [1, 3, 16, 63])
+@pytest.mark.parametrize("preferred", [1, 32, 4096])
+def test_site_local_candidates_valid(sal, nblk, preferred):
+    """Every generated site-local candidate satisfies vvl | nsites and
+    sal | vvl, for arbitrary (nsites, sal)."""
+    nsites = sal * nblk
+    layouts = [aosoa(sal), SOA]
+    cfg = TargetConfig("pallas", vvl=preferred)
+    cands = plan_mod.candidate_plans(cfg, nsites=nsites, layouts=layouts)
+    assert cands, "at least the default plan"
+    for c in cands:
+        assert c.engine == "pallas" and c.bx == 0
+        assert nsites % c.vvl == 0
+        assert c.vvl % sal == 0
+        c.validate(nsites=nsites, layouts=layouts, stencil=False)
+    # the default heuristic plan comes first
+    assert cands[0].vvl == plan_mod.resolve_vvl(cfg, nsites, layouts)
+
+
+@pytest.mark.parametrize("x_dim", [1, 4, 7, 12, 64])
+@pytest.mark.parametrize("inner", [(1, 1), (4, 8), (7, 3)])
+@pytest.mark.parametrize("preferred", [1, 128, 4096])
+def test_stencil_candidates_valid(x_dim, inner, preferred):
+    """Every generated stencil candidate satisfies bx | x_dim."""
+    lattice = (x_dim, *inner)
+    nsites = x_dim * inner[0] * inner[1]
+    cfg = TargetConfig("pallas", vvl=preferred)
+    cands = plan_mod.candidate_plans(
+        cfg, nsites=nsites, layouts=[SOA], stencil=True, lattice=lattice)
+    for c in cands:
+        assert c.vvl == 0 and c.bx >= 1
+        assert x_dim % c.bx == 0
+        c.validate(nsites=nsites, lattice=lattice, layouts=[SOA], stencil=True)
+    assert cands[0].bx == plan_mod.choose_slab(
+        x_dim, inner[0] * inner[1], preferred)
+
+
+def test_jnp_engine_single_candidate():
+    cands = plan_mod.candidate_plans(
+        TargetConfig("jnp"), nsites=64, layouts=[SOA])
+    assert cands == (LoweringPlan("jnp"),)
+
+
+# -- plan validation / serialization -------------------------------------------
+
+def test_plan_validation_errors():
+    with pytest.raises(ValueError, match="unknown engine"):
+        LoweringPlan("cuda").validate()
+    with pytest.raises(ValueError, match="must divide nsites"):
+        LoweringPlan("pallas", vvl=7).validate(nsites=64)
+    with pytest.raises(ValueError, match="multiple of AoSoA"):
+        LoweringPlan("pallas", vvl=4).validate(nsites=64, layouts=[aosoa(8)])
+    with pytest.raises(ValueError, match="no x-slab"):
+        LoweringPlan("pallas", vvl=8, bx=2).validate(nsites=64)
+    with pytest.raises(ValueError, match="bx=3 must divide"):
+        LoweringPlan("pallas", bx=3, view="staged-nd").validate(
+            lattice=(8, 4, 4), stencil=True)
+    with pytest.raises(ValueError, match="staged-nd"):
+        LoweringPlan("pallas", bx=2, view="block").validate(
+            lattice=(8, 4, 4), stencil=True)
+    # jnp plans carry no pallas constraints
+    LoweringPlan("jnp").validate(nsites=7, layouts=[aosoa(8)])
+
+
+def test_plan_json_roundtrip():
+    p = LoweringPlan("pallas", vvl=256, interpret=True, halo="pre",
+                     view="block")
+    assert LoweringPlan.from_json(p.to_json()) == p
+    # unknown keys from a future table version are ignored
+    d = dict(p.to_json(), future_knob=3)
+    assert LoweringPlan.from_json(d) == p
+
+
+def test_unknown_plan_policy_raises(rng):
+    lat = (4, 4, 8)
+    fx = Field.from_numpy(
+        "x", rng.normal(size=(3, *lat)).astype(np.float32), lat, SOA)
+    from repro.core import LaunchGraph
+    g = LaunchGraph("pp").add(lambda v: {"o": v["x"]}, {"x": "x"}, {"o": 3})
+    with pytest.raises(ValueError, match="plan_policy"):
+        g.launch({"x": fx},
+                 config=TargetConfig("jnp", plan_policy="fastest"))
+
+
+# -- default-policy bit-identity + explicit plans on production graphs ---------
+
+@pytest.mark.parametrize("lay", [SOA, AOS, aosoa(32)], ids=lambda l: l.name)
+def test_all_candidate_plans_match_default_lb_step(lay, rng):
+    """Every candidate plan of the fused LB step (stencil graph) produces
+    the exact same field outputs as the default plan — plan choice is a
+    performance knob, never a semantics knob."""
+    from repro.kernels.lb_propagation.ops import collide_propagate_graph
+    from repro.core import tune
+
+    lat = (4, 4, 8)
+    f0 = (1.0 + 0.1 * rng.normal(size=(19, *lat))).astype(np.float32)
+    frc = (0.01 * rng.normal(size=(3, *lat))).astype(np.float32)
+    d = Field.from_numpy("dist", f0, lat, lay)
+    frcF = Field.from_numpy("force", frc, lat, lay)
+    cfg = TargetConfig("pallas", vvl=128)
+    g = collide_propagate_graph(0.8)
+    ins = {"dist": d, "force": frcF}
+    cands = tune.plan_candidates_for(g, ins, config=cfg, outputs=("dist2",),
+                                     max_candidates=3)
+    base = g.launch(ins, config=cfg, outputs=("dist2",),
+                    plan=cands[0])["dist2"].to_numpy()
+    for cand in cands[1:]:
+        got = g.launch(ins, config=cfg, outputs=("dist2",),
+                       plan=cand)["dist2"].to_numpy()
+        np.testing.assert_array_equal(got, base, err_msg=cand.describe())
+
+
+def test_all_candidate_plans_match_default_wilson_normal(rng):
+    """Candidate plans on the fused MILC normal operator: field output is
+    bit-identical across plans; the on-chip <p, Ap> reduction may differ by
+    accumulation order only (fp tolerance against the default plan)."""
+    from repro.apps.milc import MilcConfig, init_problem
+    from repro.apps.milc.cg import wilson_normal_graph
+    from repro.core import tune
+
+    cfg = MilcConfig(lattice=(4, 4, 4, 4), kappa=0.1)
+    u, b = init_problem(cfg, seed=0)
+    tgt = TargetConfig("pallas", vvl=256)
+    g = wilson_normal_graph(cfg.kappa)
+    ins = {"p": b, "u": u}
+    cands = tune.plan_candidates_for(g, ins, config=tgt,
+                                     outputs=("ap", "pap"), max_candidates=3)
+    assert len(cands) > 1, "stencil sweep should offer multiple slabs"
+    out0 = g.launch(ins, config=tgt, outputs=("ap", "pap"), plan=cands[0])
+    base_ap = out0["ap"].to_numpy()
+    base_pap = float(np.asarray(out0["pap"]).sum())
+    for cand in cands[1:]:
+        out = g.launch(ins, config=tgt, outputs=("ap", "pap"), plan=cand)
+        np.testing.assert_array_equal(out["ap"].to_numpy(), base_ap,
+                                      err_msg=cand.describe())
+        np.testing.assert_allclose(float(np.asarray(out["pap"]).sum()),
+                                   base_pap, rtol=1e-4)
+
+
+# -- layering: the planning layer owns the heuristics (satellite cleanup) ------
+
+def test_no_direct_heuristic_callers_outside_plan():
+    """After the refactor every vvl/slab decision routes through
+    core.plan: no module under src/repro other than plan.py may *invoke*
+    choose_vvl/choose_slab (re-exports don't call)."""
+    root = Path(__file__).resolve().parents[1] / "src" / "repro"
+    assert root.is_dir()
+    offenders = []
+    for path in sorted(root.rglob("*.py")):
+        if path.name == "plan.py":
+            continue
+        text = path.read_text()
+        for m in re.finditer(r"\b(choose_vvl|choose_slab)\s*\(", text):
+            line = text[: m.start()].count("\n") + 1
+            offenders.append(f"{path.relative_to(root)}:{line}")
+    assert not offenders, (
+        f"direct choose_vvl/choose_slab calls outside core/plan.py: "
+        f"{offenders}")

@@ -9,6 +9,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Field, SOA, TargetConfig, aosoa, target_sum
+from repro.core import plan as plan_mod
 from repro.kernels.lb_collision import collide
 from repro.kernels.rwkv6_scan import rwkv6
 from repro.models import moe as moe_mod
@@ -90,6 +91,66 @@ def test_moe_gates_normalized_and_capacity_respected(seed, topk):
     assert np.isfinite(np.asarray(y)).all()
     assert 0.0 <= float(aux["drop_frac"]) <= 1.0
     assert float(aux["lb_loss"]) > 0.0
+
+
+@given(
+    sal=st.sampled_from([1, 2, 4, 8, 16]),
+    nblk=st.integers(1, 200),
+    preferred=st.integers(1, 4096),
+)
+def test_candidate_plans_site_local_valid_property(sal, nblk, preferred):
+    """Plan-layer invariant (paper §3.2.2 tuning knobs): for arbitrary
+    (nsites, sal, preferred vvl), EVERY candidate LoweringPlan the
+    autotuner may sweep satisfies vvl | nsites and sal | vvl."""
+    nsites = sal * nblk
+    layouts = [aosoa(sal)]
+    cfg = TargetConfig("pallas", vvl=preferred)
+    for c in plan_mod.candidate_plans(cfg, nsites=nsites, layouts=layouts):
+        assert nsites % c.vvl == 0
+        assert c.vvl % sal == 0
+        c.validate(nsites=nsites, layouts=layouts, stencil=False)
+
+
+@given(
+    x_dim=st.integers(1, 128),
+    ny=st.integers(1, 12),
+    nz=st.integers(1, 12),
+    preferred=st.integers(1, 4096),
+)
+def test_candidate_plans_stencil_valid_property(x_dim, ny, nz, preferred):
+    """For arbitrary lattice extents, every stencil candidate's x-slab
+    divides the leading dim (bx | x_dim)."""
+    lattice = (x_dim, ny, nz)
+    cfg = TargetConfig("pallas", vvl=preferred)
+    for c in plan_mod.candidate_plans(
+            cfg, nsites=x_dim * ny * nz, layouts=[SOA], stencil=True,
+            lattice=lattice):
+        assert x_dim % c.bx == 0
+        c.validate(nsites=x_dim * ny * nz, lattice=lattice, layouts=[SOA],
+                   stencil=True)
+
+
+@given(
+    nsites=st.integers(1, 100000),
+    preferred=st.integers(1, 4096),
+    mult=st.sampled_from([1, 2, 4, 8]),
+)
+def test_choose_vvl_divisor_property(nsites, preferred, mult):
+    """choose_vvl either returns a SAL-aligned divisor (the largest one not
+    exceeding preferred, unless only the multiple_of fallback fits) or
+    raises — never an invalid vvl."""
+    try:
+        v = plan_mod.choose_vvl(nsites, preferred, multiple_of=mult)
+    except ValueError:
+        assert nsites % mult != 0 or mult > nsites
+        return
+    assert nsites % v == 0 and v % mult == 0
+    if v <= preferred:
+        # maximality among conforming divisors <= preferred
+        assert not any(nsites % w == 0 and w % mult == 0
+                       for w in range(v + 1, preferred + 1))
+    else:
+        assert v == mult  # the alignment-wins fallback
 
 
 @given(seed=st.integers(0, 30))
