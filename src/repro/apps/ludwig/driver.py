@@ -23,11 +23,18 @@ post-collision distributions never round-trip through HBM.
 
 The sharded form (`make_sharded_step`) wraps the same stage functions in
 jax.shard_map on a Domain: per step it halo-exchanges Q (width 2), the
-post-collision distributions (width 1) and the velocity field (width 1),
+pre-collision distributions (width 1) and the velocity field (width 1),
 then applies the identical periodic-roll stencils on the halo'd local
 arrays and crops — the dimension-by-dimension exchange makes the wrapped
 reads land in valid halo, the standard MPI decomposition of both papers'
-codes.
+codes.  The fused LB half-step can run under three halo schedules:
+``halo="pre"`` (exchange, then one launch — the legacy behavior, default),
+``halo="overlap"`` (core.overlap: the exchange is started, the interior
+sub-launch runs on locally-owned data with no dependence on it, and thin
+boundary slabs run once the halos land — comms hidden behind compute), or
+``halo=None`` (the planning layer — ``plan_policy``/tuned table — picks).
+`run_steps` drives the step through core.schedule.StepPipeline (donated
+double-buffers, pipelined dispatch) for multi-timestep runs.
 """
 
 from __future__ import annotations
@@ -347,14 +354,23 @@ def diagnostics(state: LudwigState, cfg: LudwigConfig) -> Dict[str, jnp.ndarray]
 
 # -- sharded driver ------------------------------------------------------------
 
-def make_sharded_step(cfg: LudwigConfig, domain: Domain):
+def make_sharded_step(cfg: LudwigConfig, domain: Domain, halo: str = "pre"):
     """Build a jitted shard_map step over canonical-nd global arrays.
 
     Takes/returns (dist_nd (19, X, Y, Z), q_nd (5, X, Y, Z)) sharded per
     ``domain.spec()``.  Inside: halo exchanges + the identical periodic
     stencils applied to halo'd local arrays (wrap reads land in valid halo
     because exchanges are dimension-ordered), then crops.
+
+    ``halo`` schedules the fused LB half-step's exchange: "pre" (exchange
+    then launch, the legacy schedule), "overlap" (interior/boundary split
+    launches via core.overlap — the dist/force exchange overlaps the
+    interior collision+streaming compute), or None (planned: the tuned
+    table may pick overlap per lattice/backend).  All three are
+    bit-identical on the jnp engine (asserted in tests/test_distributed).
     """
+    if halo not in (None, "pre", "overlap"):
+        raise ValueError(f"halo must be None, 'pre' or 'overlap', got {halo!r}")
     mesh = domain.mesh
     spec = domain.spec()
     WQ = 2  # q halo: grad/lap (1) + stress divergence (1)
@@ -392,17 +408,30 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain):
         force_nd = crop(force_h, WQ)  # interior: ring-1 div reads ring-2
         # gradients, which wrap locally — so exchange the true force halo
 
-        # ---- fused LB half-step on pre-exchanged halos (halo="pre"): the
+        # ---- fused LB half-step on pre-exchanged halos: the
         # *pre-collision* dist (and the force) is exchanged instead of the
         # seed's post-collision dist, then moments + collision + streaming
         # run as ONE launch — collision recomputed on the neighbour ring
-        # from true neighbour dist/force values.
-        d_h = exchange_w(pad(dist_nd, 1), 1)
-        f_h = exchange_w(pad(force_nd, 1), 1)
-        lb = lb_step_graph(cfg).launch(
-            {"dist": mk("dist", d_h), "force": mk("force", f_h)},
-            config=tgt, outputs=("dist2", "u"), halo="pre",
-        )
+        # from true neighbour dist/force values.  halo="pre" exchanges
+        # before the launch; halo="overlap"/None routes through the
+        # overlap scheduler (interior sub-launch independent of the
+        # exchange, boundary slabs after it — core.overlap).
+        if halo == "pre":
+            d_h = exchange_w(pad(dist_nd, 1), 1)
+            f_h = exchange_w(pad(force_nd, 1), 1)
+            lb = lb_step_graph(cfg).launch(
+                {"dist": mk("dist", d_h), "force": mk("force", f_h)},
+                config=tgt, outputs=("dist2", "u"), halo="pre",
+            )
+        else:
+            from repro.core import overlap_launch
+            lb = overlap_launch(
+                lb_step_graph(cfg),
+                {"dist": mk("dist", pad(dist_nd, 1)),
+                 "force": mk("force", pad(force_nd, 1))},
+                decomposed=dec, config=tgt, outputs=("dist2", "u"),
+                halo=halo,
+            )
         dist2_nd = lb["dist2"].canonical_nd()
 
         # ---- hydrodynamics from the pre-collision distributions
@@ -428,3 +457,31 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain):
         local_step, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
     )
     return jax.jit(sharded)
+
+
+def run_steps(
+    cfg: LudwigConfig,
+    domain: Domain,
+    dist_nd: jax.Array,
+    q_nd: jax.Array,
+    steps: int,
+    *,
+    halo: str = "pre",
+    donate=None,
+    block: bool = True,
+):
+    """Multi-timestep sharded pipeline: one jitted sharded step driven by
+    core.schedule.StepPipeline — (dist, q) ping-pong between two donated
+    device buffers, dispatch stays ahead of the device, and the per-step
+    halo exchange runs under the chosen ``halo`` schedule ("overlap" hides
+    it behind the interior compute).  Returns (dist_nd, q_nd) after
+    ``steps`` steps.
+
+    With donation enabled (non-CPU backends by default) the caller's input
+    arrays are consumed — keep a copy if they are needed again.
+    """
+    from repro.core.schedule import StepPipeline
+
+    pipe = StepPipeline(make_sharded_step(cfg, domain, halo=halo),
+                        donate=donate)
+    return pipe.run((dist_nd, q_nd), steps, block=block)

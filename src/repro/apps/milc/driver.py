@@ -6,22 +6,36 @@ domain-decomposes the 4-D lattice over mesh axes; each dslash exchanges
 the spinor halo (ppermute), the gauge halo is exchanged once per solve —
 exactly the MPI structure of the original (the "Shift" kernel is where
 MPI lives, §2.1.2).
+
+``solve_sharded`` supports three per-iteration schedules:
+
+* ``halo=None`` — the legacy path: one spinor exchange per dslash, the
+  operator unfused (two launches + linear algebra per application).
+* ``halo="pre"`` — the fused path: one width-2 spinor exchange, then the
+  whole M^dag M application as ONE halo'd launch (wilson_normal_graph).
+* ``halo="overlap"`` — the fused path under the comms/compute overlap
+  scheduler (core.overlap): the spinor exchange is started, the interior
+  of the fused operator runs on locally-owned data with no dependence on
+  it, and thin boundary slabs run once the halos land.  Bit-identical to
+  ``halo="pre"`` (the CG inner products are computed from the assembled
+  Fields through the same producer-independent reduction in both modes),
+  asserted under the 8-fake-device harness in tests/test_distributed.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Field, Layout, SOA, TargetConfig, compat
+from repro.core import Field, Layout, SOA, TargetConfig, compat, overlap_launch
 from repro.core import halo as halo_mod
 from repro.kernels.wilson_dslash.ops import dslash_halo
 from repro.lattice import Domain
 from . import fields
-from .cg import CGResult, cg, make_fused_normal, make_wilson_op
+from .cg import CGResult, cg, dot, make_fused_normal, make_wilson_op, wilson_normal_graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,24 +111,35 @@ def make_domain(cfg: MilcConfig, mesh, dim_axes) -> Domain:
     return Domain(global_shape=cfg.lattice, mesh=mesh, dim_axes=dim_axes, halo=1)
 
 
-def solve_sharded(cfg: MilcConfig, domain: Domain, u_nd: jax.Array, b_nd: jax.Array):
-    """CG under shard_map.  u_nd (72, X,Y,Z,T) and b_nd (24, ...) are global
-    canonical-nd arrays (sharded or to-be-sharded per domain.spec()).
-    Returns (x_nd, iterations, residual)."""
+def make_sharded_solver(
+    cfg: MilcConfig, domain: Domain, halo: Optional[str] = None
+):
+    """Build the jitted sharded CG solver: ``solver(u_nd, b_nd) ->
+    (x_nd, iterations, residual)`` over global canonical-nd arrays
+    (sharded or to-be-sharded per ``domain.spec()``).
+
+    ``halo`` selects the per-iteration schedule (see the module docstring):
+    None (legacy per-dslash exchange, unfused), "pre" (fused normal
+    operator on one width-2 pre-exchange) or "overlap" (fused operator
+    under the interior/boundary split of core.overlap, hiding the spinor
+    exchange behind the interior compute)."""
+    if halo not in (None, "pre", "overlap"):
+        raise ValueError(f"halo must be None, 'pre' or 'overlap', got {halo!r}")
     mesh = domain.mesh
     spec = domain.spec()
     dec = domain.decomposed
     axes = tuple(ax for _, ax, _ in dec)
     tgt = cfg.target
+    WN = 2  # fused normal-operator ring: two width-1 dslash stages
 
-    def pad(x):
+    def pad(x, w=1):
         # wrap-pad all site dims (local periodic); exchange overwrites the
         # decomposed dims' halos with true neighbour data.
-        pads = [(0, 0)] + [(1, 1)] * (x.ndim - 1)
+        pads = [(0, 0)] + [(w, w)] * (x.ndim - 1)
         return jnp.pad(x, pads, mode="wrap")
 
-    def exchange(x):
-        return halo_mod.exchange(x, dec, width=1)
+    def exchange(x, w=1):
+        return halo_mod.exchange(x, dec, width=w)
 
     def local_solve(u_loc, b_loc):
         lat_loc = u_loc.shape[1:]
@@ -130,9 +155,44 @@ def solve_sharded(cfg: MilcConfig, domain: Domain, u_nd: jax.Array, b_nd: jax.Ar
         apply_m, apply_mdag, apply_normal = make_wilson_op(
             uF, cfg.kappa, tgt, dslash_fn=dslash_fn
         )
-        rhs = apply_mdag(b_loc_field := bF)
+        rhs = apply_mdag(bF)
+
+        apply_a_dot = None
+        if halo is not None:
+            # fused M^dag M: dslash+dslash+xpay/g5 as one halo'd graph per
+            # iteration.  The gauge halo (ring 2) is exchanged once here.
+            graph = wilson_normal_graph(float(cfg.kappa))
+            u_h2 = exchange(pad(u_loc, WN), WN)
+            uF_h = Field.from_canonical(
+                "u", u_h2, tuple(u_h2.shape[1:]), cfg.layout)
+
+            def apply_a_dot(p: Field):
+                p_p = pad(p.canonical_nd(), WN)
+                if halo == "pre":
+                    p_h = exchange(p_p, WN)
+                    pF = Field.from_canonical(
+                        "p", p_h, tuple(p_h.shape[1:]), cfg.layout)
+                    out = graph.launch(
+                        {"p": pF, "u": uF_h}, config=tgt, outputs=("ap",),
+                        halo="pre", out_layouts={"ap": p.layout})
+                else:
+                    pF = Field.from_canonical(
+                        "p", p_p, tuple(p_p.shape[1:]), cfg.layout)
+                    out = overlap_launch(
+                        graph, {"p": pF, "u": uF_h}, decomposed=dec,
+                        config=tgt, outputs=("ap",), halo="overlap",
+                        exchanged=("u",), out_layouts={"ap": p.layout})
+                ap = p.with_data(out["ap"].data)
+                # <p, Ap> from the assembled Fields (elementwise product +
+                # fold), NOT the graph's fused on-chip reduction: its value
+                # is independent of how ap was produced (one launch vs
+                # interior/boundary slabs), so the CG trajectory is
+                # bit-identical across the "pre" and "overlap" schedules.
+                return ap, dot(p, ap, tgt)
+
         res = cg(apply_normal, rhs, config=tgt, tol=cfg.tol,
-                 max_iter=cfg.max_iter, psum_axes=axes)
+                 max_iter=cfg.max_iter, psum_axes=axes,
+                 apply_a_dot=apply_a_dot)
         return res.x.canonical_nd(), res.iterations, res.residual
 
     sharded = compat.shard_map(
@@ -141,4 +201,16 @@ def solve_sharded(cfg: MilcConfig, domain: Domain, u_nd: jax.Array, b_nd: jax.Ar
         in_specs=(spec, spec),
         out_specs=(spec, jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
     )
-    return jax.jit(sharded)(u_nd, b_nd)
+    return jax.jit(sharded)
+
+
+def solve_sharded(
+    cfg: MilcConfig,
+    domain: Domain,
+    u_nd: jax.Array,
+    b_nd: jax.Array,
+    halo: Optional[str] = None,
+):
+    """One-shot form of :func:`make_sharded_solver` (builds, jits and runs
+    the solver; loops should build the solver once instead)."""
+    return make_sharded_solver(cfg, domain, halo)(u_nd, b_nd)

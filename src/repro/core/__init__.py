@@ -14,6 +14,10 @@ Lowering plans (VVL)   ->  core.plan     (LoweringPlan: vvl/slab/interpret/
                                           halo/view decisions, candidates)
 Plan autotuner         ->  core.tune     (persisted per-(chain, layout,
                                           backend) sweep table)
+Comms/compute overlap  ->  core.overlap  (interior/boundary split launches
+                                          hiding the halo exchange)
+Multi-step pipelines   ->  core.schedule (StepPipeline: donated
+                                          double-buffers, async dispatch)
 Version gates          ->  core.compat   (shard_map / make_mesh across jax
                                           releases)
 """
@@ -33,6 +37,9 @@ from .target import (  # noqa: F401
 from .fuse import LaunchGraph, fused_launch  # noqa: F401
 from . import plan, tune  # noqa: F401
 from . import compat  # noqa: F401
+from . import overlap  # noqa: F401
+from .overlap import overlap_launch  # noqa: F401
+from .schedule import StepPipeline  # noqa: F401
 from .memspace import (  # noqa: F401
     copy_const_to_target,
     copy_from_target,

@@ -103,6 +103,7 @@ from .target import (
 __all__ = [
     "LaunchGraph",
     "fused_launch",
+    "reduce_combine",
     "stats",
     "reset_stats",
     "clear_cache",
@@ -142,6 +143,15 @@ def reset_stats() -> None:
 
 def clear_cache() -> None:
     _CACHE.clear()
+
+
+def reduce_combine(op: str) -> Callable:
+    """The combine function of a reduction monoid (``"sum"``/``"max"``) —
+    how per-region partials merge, e.g. across the interior/boundary
+    sub-launches of the overlap scheduler (core.overlap)."""
+    if op not in _RED_OPS:
+        raise ValueError(f"unknown reduction op {op!r}; have {list(_RED_OPS)}")
+    return _RED_OPS[op][0]
 
 
 def _hashable(v) -> bool:
@@ -343,6 +353,16 @@ class LaunchGraph:
         return [v for st in self._stages if st.kind == "reduce"
                 for (_, v, _, _) in st.outs]
 
+    def reduce_info(self) -> Dict[str, Tuple[str, str]]:
+        """reduce output name -> (source graph value, monoid op) — what the
+        overlap scheduler needs to combine per-slab partials."""
+        return {
+            out: (vname, st.op)
+            for st in self._stages if st.kind == "reduce"
+            for (_, out, _, _) in st.outs
+            for (_, vname) in st.ins
+        }
+
     def _required_rings(self, outputs: Sequence[str]) -> Dict[str, int]:
         """Backward width analysis: minimum valid halo ring each graph value
         needs so the requested outputs are exact on the interior."""
@@ -405,8 +425,12 @@ class LaunchGraph:
             (n, ins[n].ncomp, str(ins[n].dtype), ins[n].layout.name,
              tuple(ins[n].lattice))
             for n in ordered_ins)
+        # 'pre' and 'overlap' share the input contract (pre-exchanged
+        # halos), so they share table entries: the strategy choice lives in
+        # the persisted plan's halo field, not the key
+        halo_key = "pre" if halo == "overlap" else halo
         return plan_mod.graph_plan_key(
-            self.plan_signature(), engine=config.engine, halo=halo,
+            self.plan_signature(), engine=config.engine, halo=halo_key,
             outputs=tuple(outputs), inputs=inputs, lattice=tuple(lattice),
             backend=jax.default_backend())
 
@@ -472,7 +496,11 @@ class LaunchGraph:
                     halo_widths() with periodic wrap (single shard);
                     "pre" expects inputs already padded + exchanged by the
                     caller (core.halo inside shard_map), so the launch
-                    composes with the MPI-layer decomposition.
+                    composes with the MPI-layer decomposition; "overlap"
+                    takes the same pre-exchanged inputs but executes as
+                    interior/boundary split sub-launches (core.overlap —
+                    a plan with halo="overlap", e.g. a persisted tuner
+                    winner, upgrades a "pre" call the same way).
         plan        explicit LoweringPlan for this launch (overrides
                     config.plan_policy — the autotuner's sweep hook).
         """
@@ -480,14 +508,15 @@ class LaunchGraph:
             raise ValueError("LaunchGraph has no stages")
         if not ins:
             raise ValueError("fused launch needs at least one input Field")
-        if halo not in ("periodic", "pre"):
-            raise ValueError(f"halo must be 'periodic' or 'pre', got {halo!r}")
+        if halo not in ("periodic", "pre", "overlap"):
+            raise ValueError(
+                f"halo must be 'periodic', 'pre' or 'overlap', got {halo!r}")
         config = config or TargetConfig()
         scalars = dict(scalars or {})
         stencil = self.has_stencil
-        if halo == "pre" and not stencil:
+        if halo in ("pre", "overlap") and not stencil:
             raise ValueError(
-                "halo='pre' only applies to graphs with stencil stages")
+                f"halo={halo!r} only applies to graphs with stencil stages")
 
         first = next(iter(ins.values()))
         double = sorted(set(ins) & set(scalars))
@@ -522,7 +551,7 @@ class LaunchGraph:
         in_rings = tuple(need.get(n, 0) for n in ordered_ins)
 
         # interior lattice: what output Fields live on
-        if stencil and halo == "pre":
+        if stencil and halo in ("pre", "overlap"):
             interiors = {
                 n: tuple(s - 2 * r for s in ins[n].lattice)
                 for n, r in zip(ordered_ins, in_rings)
@@ -587,6 +616,15 @@ class LaunchGraph:
             plan = plan_mod.adapt_plan(plan, stencil=stencil, halo=halo)
             plan.validate(nsites=nsites, lattice=lattice,
                           layouts=all_layouts, stencil=stencil)
+
+        if stencil and plan.halo == "overlap":
+            # split schedule: interior + boundary sub-launches (each a
+            # plain halo="pre" launch through this very machinery)
+            from . import overlap as overlap_mod
+            return overlap_mod.execute_split(
+                self, ins, config=config, outputs=outputs, scalars=scalars,
+                out_layouts=out_layouts, plan=plan)
+
         engine, interpret = plan.engine, plan.interpret
         vvl, bx = plan.vvl, plan.bx
 

@@ -14,12 +14,21 @@ halo slots at both ends of every decomposed dimension.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence, Tuple
 
 import jax
 from jax import lax
 
-__all__ = ["exchange_dim", "exchange", "axis_perms"]
+__all__ = [
+    "exchange_dim",
+    "exchange",
+    "exchange_boundary",
+    "start_exchange",
+    "finish_exchange",
+    "PendingExchange",
+    "axis_perms",
+]
 
 
 def axis_perms(n: int):
@@ -53,6 +62,15 @@ def exchange_dim(
     n = axis_size
     fwd, bwd = axis_perms(n)
     L = x.shape[dim]
+    if L < 3 * width:
+        # the interior (L - 2*width) is thinner than the halo: the "interior"
+        # slabs below would overlap the halo slots and silently exchange
+        # corrupt data — refuse instead (thicken the local extent by using
+        # fewer ranks along this dim, or shrink the stencil ring)
+        raise ValueError(
+            f"halo exchange of dim {dim}: local halo'd extent {L} is too "
+            f"thin for width {width} (interior {L - 2 * width} < width; "
+            f"need extent >= {3 * width})")
     lo_interior = _take(x, dim, width, 2 * width)
     hi_interior = _take(x, dim, L - 2 * width, L - width)
     # my high interior -> right neighbour's low halo
@@ -82,3 +100,59 @@ def exchange(
             x, axis_name=axis_name, axis_size=axis_size, dim=dim, width=width
         )
     return x
+
+
+def exchange_boundary(
+    x: jax.Array,
+    decomposed: Sequence[Tuple[int, str, int]],
+    *,
+    width: int,
+    dims: Sequence[int] = None,
+) -> jax.Array:
+    """Slab-granular exchange: fill only the halos of the listed lattice
+    dims (array dims), in decomposition order.  ``dims=None`` exchanges
+    everything (== :func:`exchange`).  The overlap scheduler
+    (core.overlap) uses this to exchange exactly the boundary slabs its
+    thin sub-launches consume."""
+    wanted = None if dims is None else set(dims)
+    for dim, axis_name, axis_size in decomposed:
+        if wanted is not None and dim not in wanted:
+            continue
+        x = exchange_dim(
+            x, axis_name=axis_name, axis_size=axis_size, dim=dim, width=width
+        )
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingExchange:
+    """Handle returned by :func:`start_exchange`.
+
+    The ppermutes are already part of the traced program, but nothing
+    forces them to complete before unrelated compute: an interior
+    sub-launch built between ``start_exchange`` and ``finish_exchange``
+    has no data dependence on the exchanged array, so XLA's scheduler (and
+    the TPU's async collectives) may run the two concurrently — the
+    comms/compute overlap of core.overlap.  ``finish_exchange`` (or
+    ``.array``) yields the fully exchanged array for the boundary
+    sub-launches."""
+
+    array: jax.Array
+
+
+def start_exchange(
+    x: jax.Array,
+    decomposed: Sequence[Tuple[int, str, int]],
+    *,
+    width: int,
+) -> PendingExchange:
+    """Begin the dimension-ordered halo exchange of ``x`` and return a
+    :class:`PendingExchange`; consume it with :func:`finish_exchange` only
+    where the exchanged halos are actually read (the boundary slabs), so
+    interior compute issued in between stays dependence-free."""
+    return PendingExchange(exchange(x, decomposed, width=width))
+
+
+def finish_exchange(pending: PendingExchange) -> jax.Array:
+    """The exchanged array of a :func:`start_exchange` handle."""
+    return pending.array

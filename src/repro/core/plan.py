@@ -13,7 +13,9 @@ routes through a :class:`LoweringPlan`:
   vvl         sites per pallas program (site-local lowering; 0 otherwise)
   bx          x-slab planes per program (halo'd stencil lowering; 0 otherwise)
   interpret   pallas interpret-mode fallback (True automatically off-TPU)
-  halo        stencil halo strategy: "periodic" pad vs caller-"pre"-exchanged
+  halo        stencil halo strategy: "periodic" pad, caller-"pre"-exchanged,
+              or "overlap" (interior/boundary split launches overlapping the
+              halo exchange with interior compute — core.overlap)
   view        canonical-view strategy: "block" (layout pack/unpack inside the
               kernel via BlockSpec) or "staged-nd" (canonical SoA-nd views
               packed/unpacked as XLA ops around the single halo'd kernel —
@@ -56,6 +58,7 @@ __all__ = [
     "sal_alignment",
     "default_plan",
     "plan_for_launch",
+    "sub_lattice_plan",
     "candidate_plans",
     "graph_plan_key",
 ]
@@ -173,10 +176,12 @@ class LoweringPlan:
 
     def describe(self) -> str:
         """Short human/table label: the knob that distinguishes candidates."""
+        suffix = "/overlap" if self.halo == "overlap" else ""
         if self.engine != "pallas":
-            return self.engine
+            return self.engine + suffix
         knob = f"bx={self.bx}" if self.bx else f"vvl={self.vvl}"
-        return f"pallas/{knob}" + ("/interpret" if self.interpret else "")
+        return (f"pallas/{knob}" + ("/interpret" if self.interpret else "")
+                + suffix)
 
     # -- validation -------------------------------------------------------------
 
@@ -192,11 +197,17 @@ class LoweringPlan:
         the violated invariant.  Returns self (chainable)."""
         if self.engine not in ("jnp", "pallas"):
             raise ValueError(f"unknown engine {self.engine!r}")
-        if self.halo not in ("periodic", "pre"):
+        if self.halo not in ("periodic", "pre", "overlap"):
             raise ValueError(
-                f"halo must be 'periodic' or 'pre', got {self.halo!r}")
+                f"halo must be 'periodic', 'pre' or 'overlap', "
+                f"got {self.halo!r}")
         if self.view not in (VIEW_BLOCK, VIEW_STAGED_ND):
             raise ValueError(f"unknown canonical-view strategy {self.view!r}")
+        if self.halo == "overlap" and not stencil:
+            raise ValueError(
+                "halo='overlap' applies only to stencil graphs: a "
+                "site-local graph has no halo exchange to overlap "
+                "(add a stencil stage or use the default halo)")
         if self.engine == "jnp":
             return self
         if stencil:
@@ -241,9 +252,16 @@ def adapt_plan(plan: LoweringPlan, *, stencil: bool, halo: str) -> LoweringPlan:
     """Fit an externally supplied plan (explicit policy or tuned-table entry)
     to a concrete launch: the call-site halo strategy is authoritative (the
     sharded drivers pass halo='pre'), and the view follows the lowering shape
-    (only one strategy per shape exists today)."""
+    (only one strategy per shape exists today).  One exception: 'pre' and
+    'overlap' are interchangeable strategies for pre-exchanged stencil
+    launches (same input contract, different schedule), so a plan that
+    chose 'overlap' — e.g. a persisted autotuner winner — upgrades a
+    call-site 'pre' launch to the split schedule."""
+    eff = halo
+    if halo == "pre" and plan.halo == "overlap" and stencil:
+        eff = "overlap"
     return dataclasses.replace(
-        plan, halo=halo, view=VIEW_STAGED_ND if stencil else VIEW_BLOCK)
+        plan, halo=eff, view=VIEW_STAGED_ND if stencil else VIEW_BLOCK)
 
 
 # -- planners ------------------------------------------------------------------
@@ -306,6 +324,24 @@ def interpret_for(config) -> bool:
     return config.resolved_interpret()
 
 
+def sub_lattice_plan(
+    plan: LoweringPlan, config, lattice: Tuple[int, ...], *, halo: str = "pre"
+) -> LoweringPlan:
+    """Fit a stencil plan to a sub-lattice — how the overlap scheduler
+    (core.overlap) plans its interior/boundary slab sub-launches: keep the
+    outer plan's engine/interpret/view, keep its x-slab ``bx`` when it
+    divides the slab's leading extent, otherwise re-choose the largest
+    conforming slab for the (thin) sub-lattice."""
+    if plan.engine != "pallas":
+        return dataclasses.replace(plan, halo=halo)
+    if plan.bx >= 1 and lattice[0] % plan.bx == 0:
+        return dataclasses.replace(plan, halo=halo)
+    bx = choose_slab(
+        lattice[0], int(math.prod(lattice[1:])),
+        max(int(getattr(config, "vvl", 128)), 1))
+    return dataclasses.replace(plan, halo=halo, bx=bx)
+
+
 def _spread(values, k: int):
     """Deterministic evenly-spaced subset of size <= k (keeps both ends)."""
     if len(values) <= k:
@@ -325,6 +361,7 @@ def candidate_plans(
     lattice: Optional[Tuple[int, ...]] = None,
     halo: str = "periodic",
     max_candidates: int = 8,
+    devices: Optional[int] = None,
 ) -> Tuple[LoweringPlan, ...]:
     """Enumerate valid plans for the autotuner sweep, deterministically.
 
@@ -337,7 +374,19 @@ def candidate_plans(
     lowering fails.  The default (heuristic) plan is always included
     first; every candidate passes :meth:`LoweringPlan.validate` — the
     property tests (tests/test_plan.py, tests/test_property.py) assert
-    this for arbitrary nsites/sal/x_dim."""
+    this for arbitrary nsites/sal/x_dim.
+
+    Sharded stencil launches (``halo="pre"`` and more than one device —
+    ``devices`` defaults to ``jax.device_count()``) additionally get two
+    ``halo="overlap"`` twins (the default slab and the widest swept one),
+    so the tuner can rank the comms/compute-overlap schedule
+    (core.overlap) per lattice/backend without sacrificing bx sweep
+    resolution.  In-process sweeps time the split *overhead* only (there
+    is no live exchange to hide), so the min_gain hysteresis keeps "pre"
+    unless overlap wins decisively — a sharded timing harness (or an
+    explicitly recorded winner) is what flips launches to the split
+    schedule.  On a single device there is no exchange at all and the
+    twins are skipped."""
     default = default_plan(config, nsites=nsites, layouts=layouts,
                            stencil=stencil, lattice=lattice, halo=halo)
     if default.engine != "pallas":
@@ -347,8 +396,17 @@ def candidate_plans(
         budget = max(int(config.vvl), inner)
         bxs = [bx for bx in divisors(lattice[0])
                if bx * inner <= 8 * budget] or [default.bx]
+        if devices is None:
+            import jax
+            devices = jax.device_count()
+        with_overlap = halo == "pre" and devices > 1
+        k = max(1, max_candidates - 2) if with_overlap else max_candidates
         cands = [dataclasses.replace(default, bx=bx)
-                 for bx in _spread(bxs, max_candidates)]
+                 for bx in _spread(bxs, k)]
+        if with_overlap:
+            twin_bxs = sorted({default.bx, cands[-1].bx})[:2]
+            cands += [dataclasses.replace(default, bx=bx, halo="overlap")
+                      for bx in twin_bxs]
     else:
         align = sal_alignment(layouts)
         cap = 8 * max(int(config.vvl), 128)

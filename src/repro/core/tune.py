@@ -14,6 +14,11 @@ per path; :func:`clear_table_cache` drops it (tests use this to simulate a
 fresh process — the acceptance probe is *zero sweep launches* on a second
 run that hits the persisted table).
 
+The file is stamped with a ``schema_version``; a table whose version is
+missing or unknown (e.g. written by an older build whose plans lacked the
+``overlap`` halo strategy) degrades to an empty table — every lookup
+misses and the tuner re-sweeps, rather than mis-decoding stale entries.
+
 Usage::
 
     from repro.core import tune
@@ -51,7 +56,9 @@ __all__ = [
 
 DEFAULT_PATH = ".targetdp_tune.json"
 ENV_VAR = "TARGETDP_TUNE_PATH"
-TABLE_VERSION = 1
+# bumped to 2 when plans gained the "overlap" halo strategy: older tables
+# (version 1 wrote a "version" key, no "schema_version") load as empty
+SCHEMA_VERSION = 2
 
 _TABLE: Optional[Dict[str, dict]] = None
 _TABLE_PATH: Optional[str] = None
@@ -80,7 +87,10 @@ def tune_path() -> str:
 
 def load_table(path: Optional[str] = None) -> Dict[str, dict]:
     """The in-memory table for ``path`` (lazy-loaded from disk, cached per
-    path).  A missing or corrupt file yields an empty table — tuning must
+    path).  A missing or corrupt file — or one stamped with an unknown or
+    missing ``schema_version`` (pre-overlap tables wrote no stamp) —
+    yields an empty table: every lookup misses, so a schema change can
+    trigger a re-sweep but never a mis-decoded plan, and tuning must
     never break a launch."""
     global _TABLE, _TABLE_PATH
     path = path or tune_path()
@@ -89,6 +99,8 @@ def load_table(path: Optional[str] = None) -> Dict[str, dict]:
             with open(path) as f:
                 raw = json.load(f)
             entries = raw.get("entries", {})
+            if raw.get("schema_version") != SCHEMA_VERSION:
+                entries = {}
             _TABLE = dict(entries) if isinstance(entries, dict) else {}
         except (FileNotFoundError, json.JSONDecodeError, OSError):
             _TABLE = {}
@@ -109,7 +121,7 @@ def save_table(path: Optional[str] = None) -> str:
     table = load_table(path)
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:
-        json.dump({"version": TABLE_VERSION, "entries": table}, f,
+        json.dump({"schema_version": SCHEMA_VERSION, "entries": table}, f,
                   indent=2, sort_keys=True)
     os.replace(tmp, path)
     return path
@@ -127,8 +139,9 @@ def lookup(key: str, path: Optional[str] = None) -> Optional[LoweringPlan]:
     try:
         plan = LoweringPlan.from_json(dict(entry["plan"]))
         # structural sanity only (launch re-validates against the lattice);
-        # stencil entries carry bx>0, so validate in the matching shape
-        plan.validate(stencil=plan.bx > 0)
+        # stencil entries carry bx>0 or the overlap strategy, so validate
+        # in the matching shape
+        plan.validate(stencil=plan.bx > 0 or plan.halo == "overlap")
     except (KeyError, TypeError, ValueError):
         return None
     _STATS["hits"] += 1
@@ -208,7 +221,7 @@ def _interior_lattice(graph, ins, outputs, halo) -> Tuple[int, ...]:
     tuned-policy lookup keys agree."""
     first_name = next(iter(ins))
     lattice = tuple(ins[first_name].lattice)
-    if graph.has_stencil and halo == "pre":
+    if graph.has_stencil and halo in ("pre", "overlap"):
         ring = graph.halo_widths(outputs).get(first_name, 0)
         lattice = tuple(s - 2 * ring for s in lattice)
     return lattice

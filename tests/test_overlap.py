@@ -1,0 +1,353 @@
+"""core.overlap + core.schedule: the comms/compute overlap scheduler.
+
+Single-process coverage: the interior/boundary decomposition, split-launch
+equality with the halo='pre' path on both engines (field outputs bitwise,
+reductions per-slab-combined within fp tolerance), the failure modes the
+issue names (no-stencil rejection, thin-interior fallback logged not
+fatal, 1-device tuner sweeps skipping overlap candidates), the planning
+integration (candidate twins, tuned-table upgrade, adapt_plan), the
+slab-granular halo helpers (incl. the thin-extent ValueError), and the
+StepPipeline multi-step runner.  The sharded bit-identity harness lives in
+tests/test_distributed.py (8 fake devices, slow)."""
+
+import logging
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    Field, LaunchGraph, LoweringPlan, SOA, TargetConfig, fuse, halo,
+    overlap, tune,
+)
+from repro.core import plan as plan_mod
+from repro.core.schedule import StepPipeline
+from repro.core.stencil import halo_pad
+
+LAT = (8, 6, 4)
+SITE_DIMS = (1, 2, 3)
+
+
+def _lap_body(v, gather):
+    return {"z": gather("y", (1, 0, 0)) + gather("y", (-1, 0, 0)) + v["y"]}
+
+
+def _sq_body(v):
+    return {"out": v["x"] * v["x"]}
+
+
+def _stencil_graph():
+    return LaunchGraph("ov_stencil").add_stencil(
+        _lap_body, {"y": "x"}, {"z": 3}, width=1)
+
+
+def _reduce_graph():
+    return (
+        LaunchGraph("ov_reduce")
+        .add_stencil(_lap_body, {"y": "x"}, {"z": 3}, width=1)
+        .add(_sq_body, {"x": "z"}, {"out": 3}, rename={"out": "zz"})
+        .add_reduce("zz", op="sum", name="nrm")
+    )
+
+
+def _padded_field(rng, lat=LAT, ncomp=3, width=1, name="x"):
+    arr = rng.normal(size=(ncomp, *lat)).astype(np.float32)
+    h = halo_pad(jnp.asarray(arr), width, SITE_DIMS)
+    return Field.from_canonical(name, h, tuple(h.shape[1:]), SOA)
+
+
+# -- split_boxes geometry ------------------------------------------------------
+
+def test_split_boxes_disjoint_cover():
+    """Interior + boundary slabs partition the lattice exactly (every site
+    computed once) for 1-, 2- and 3-dim splits."""
+    for dims in [(0,), (0, 1), (0, 1, 2), (1,), ()]:
+        interior, boundary = overlap.split_boxes(LAT, 1, dims)
+        seen = np.zeros(LAT, np.int32)
+        for box in ([interior] if interior else []) + list(boundary):
+            sl = tuple(slice(s, e) for (s, e) in box)
+            seen[sl] += 1
+        assert (seen == 1).all(), (dims, seen.min(), seen.max())
+        assert len(boundary) == 2 * len(dims)
+
+
+def test_split_boxes_thin_interior_is_none():
+    assert overlap.split_boxes((2, 8), 1, (0,)) == (None, [])
+    assert overlap.split_boxes((4, 8), 2, (0,)) == (None, [])
+    # exactly one interior plane is still a valid split
+    interior, boundary = overlap.split_boxes((3, 8), 1, (0,))
+    assert interior == ((1, 2), (0, 8)) and len(boundary) == 2
+
+
+def test_split_boxes_bad_dim_raises():
+    with pytest.raises(ValueError, match="out of range"):
+        overlap.split_boxes(LAT, 1, (5,))
+
+
+# -- split execution == pre execution ------------------------------------------
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+def test_overlap_launch_matches_pre_bitwise(engine, rng):
+    """halo='overlap' on pre-exchanged inputs: interior + boundary
+    sub-launches assemble to the bit-identical field output of the single
+    halo='pre' launch (the production LB graph)."""
+    from repro.kernels.lb_propagation.ops import collide_propagate_graph
+
+    f0 = (1.0 + 0.1 * rng.normal(size=(19, *LAT))).astype(np.float32)
+    frc = (0.01 * rng.normal(size=(3, *LAT))).astype(np.float32)
+    dh = halo_pad(jnp.asarray(f0), 1, SITE_DIMS)
+    fh = halo_pad(jnp.asarray(frc), 1, SITE_DIMS)
+    dF = Field.from_canonical("dist", dh, tuple(dh.shape[1:]), SOA)
+    fF = Field.from_canonical("force", fh, tuple(fh.shape[1:]), SOA)
+    g = collide_propagate_graph(0.8)
+    cfg = TargetConfig(engine, vvl=64)
+    ins = {"dist": dF, "force": fF}
+    pre = g.launch(ins, config=cfg, outputs=("dist2",), halo="pre")["dist2"]
+    fuse.reset_stats()
+    ov = g.launch(ins, config=cfg, outputs=("dist2",), halo="overlap")["dist2"]
+    assert ov.lattice == LAT
+    np.testing.assert_array_equal(pre.to_numpy(), ov.to_numpy())
+    if engine == "pallas":
+        # one pallas_call per distinct sub-launch shape: the split really
+        # lowered as multiple coordinated kernels, not one
+        assert fuse.stats()["pallas_calls"] > 1
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+def test_overlap_reductions_combine_per_slab(engine, rng):
+    """Terminal reductions under the split: field outputs stay bitwise,
+    the reduction combines per-slab partials (deterministic slab order, fp
+    reassociation within tolerance of the single-launch fold)."""
+    g = _reduce_graph()
+    fx = _padded_field(rng)
+    cfg = TargetConfig(engine, vvl=64)
+    pre = g.launch({"x": fx}, config=cfg, outputs=("z", "nrm"), halo="pre")
+    ov = g.launch({"x": fx}, config=cfg, outputs=("z", "nrm"), halo="overlap")
+    np.testing.assert_array_equal(pre["z"].to_numpy(), ov["z"].to_numpy())
+    np.testing.assert_allclose(np.asarray(pre["nrm"]), np.asarray(ov["nrm"]),
+                               rtol=1e-5)
+
+
+def test_overlap_launch_entry_with_no_decomposition(rng):
+    """overlap_launch with an empty decomposition (single rank, nothing to
+    exchange) degenerates to the plain pre launch."""
+    g = _stencil_graph()
+    fx = _padded_field(rng)
+    cfg = TargetConfig("jnp")
+    want = g.launch({"x": fx}, config=cfg, halo="pre")["z"]
+    got = overlap.overlap_launch(
+        g, {"x": fx}, decomposed=(), config=cfg, halo="overlap")["z"]
+    np.testing.assert_array_equal(want.to_numpy(), got.to_numpy())
+
+
+# -- failure modes (issue satellite) -------------------------------------------
+
+def test_no_stencil_graph_rejects_overlap(rng):
+    g = LaunchGraph("site_only").add(_sq_body, {"x": "x"}, {"out": 3})
+    fx = Field.from_numpy(
+        "x", rng.normal(size=(3, *LAT)).astype(np.float32), LAT, SOA)
+    with pytest.raises(ValueError, match="stencil"):
+        g.launch({"x": fx}, config=TargetConfig("jnp"), halo="overlap")
+    with pytest.raises(ValueError, match="stencil"):
+        overlap.overlap_launch(g, {"x": fx}, decomposed=(),
+                               config=TargetConfig("jnp"))
+    # and the plan layer itself rejects the strategy for site-local shapes
+    with pytest.raises(ValueError, match="overlap"):
+        LoweringPlan("pallas", vvl=64, halo="overlap").validate(
+            nsites=192, layouts=[SOA], stencil=False)
+
+
+def test_thin_interior_falls_back_to_pre_logged(rng, caplog):
+    """An interior smaller than one slab falls back to halo='pre' — logged,
+    not fatal, and still bit-identical."""
+    thin = (2, 2, 2)
+    arr = rng.normal(size=(3, *thin)).astype(np.float32)
+    h = halo_pad(jnp.asarray(arr), 1, SITE_DIMS)
+    fx = Field.from_canonical("x", h, tuple(h.shape[1:]), SOA)
+    g = _stencil_graph()
+    cfg = TargetConfig("jnp")
+    want = g.launch({"x": fx}, config=cfg, halo="pre")["z"]
+    with caplog.at_level(logging.WARNING, logger="repro.core.overlap"):
+        got = g.launch({"x": fx}, config=cfg, halo="overlap")["z"]
+    assert any("falling back" in r.message for r in caplog.records)
+    np.testing.assert_array_equal(want.to_numpy(), got.to_numpy())
+
+
+def test_single_device_sweeps_skip_overlap_candidates(rng, tmp_path, monkeypatch):
+    """Tuner sweeps on 1 device must not propose overlap candidates (no
+    exchange to hide); with devices forced > 1 the twins appear, capped and
+    distinctly labelled."""
+    cfg = TargetConfig("pallas", vvl=64)
+    one = plan_mod.candidate_plans(
+        cfg, nsites=192, layouts=[SOA], stencil=True, lattice=LAT,
+        halo="pre", devices=1)
+    assert all(c.halo == "pre" for c in one)
+    many = plan_mod.candidate_plans(
+        cfg, nsites=192, layouts=[SOA], stencil=True, lattice=LAT,
+        halo="pre", devices=8)
+    halos = {c.halo for c in many}
+    assert halos == {"pre", "overlap"}
+    assert many[0].halo == "pre"  # the default plan stays the pre schedule
+    assert sum(c.halo == "overlap" for c in many) <= 2  # twins, not a fork
+    # the twins cost at most two slots of bx sweep resolution
+    assert sum(c.halo == "pre" for c in many) >= len(one) - 2
+    labels = [c.describe() for c in many]
+    assert len(labels) == len(set(labels))  # pre/overlap twins distinguishable
+    # periodic (single-shard) stencil launches never get overlap twins
+    per = plan_mod.candidate_plans(
+        cfg, nsites=192, layouts=[SOA], stencil=True, lattice=LAT,
+        halo="periodic", devices=8)
+    assert all(c.halo == "periodic" for c in per)
+    # and a real 1-device autotune over a pre-halo'd stencil graph runs
+    # clean end to end (this container has exactly one device)
+    monkeypatch.setenv(tune.ENV_VAR, str(tmp_path / "t.json"))
+    tune.clear_table_cache()
+    g = _stencil_graph()
+    fx = _padded_field(rng)
+    plan, info = tune.autotune_graph(
+        g, {"x": fx}, config=cfg, halo="pre", iters=1, warmup=0,
+        max_candidates=3)
+    assert plan.halo == "pre" and not info["failed"]
+    tune.clear_table_cache()
+
+
+# -- planning integration ------------------------------------------------------
+
+def test_adapt_plan_pre_overlap_interchange():
+    ov = LoweringPlan("pallas", bx=2, halo="overlap", view="staged-nd")
+    # a tuned overlap winner upgrades a call-site 'pre' launch
+    assert plan_mod.adapt_plan(ov, stencil=True, halo="pre").halo == "overlap"
+    # periodic call sites are authoritative (single shard: nothing to hide)
+    assert plan_mod.adapt_plan(ov, stencil=True, halo="periodic").halo == "periodic"
+    pre = LoweringPlan("pallas", bx=2, halo="pre", view="staged-nd")
+    assert plan_mod.adapt_plan(pre, stencil=True, halo="overlap").halo == "overlap"
+
+
+def test_tuned_overlap_plan_upgrades_pre_launch(rng, tmp_path, monkeypatch):
+    """A persisted overlap winner makes plan_policy='tuned' halo='pre'
+    launches execute the split schedule — overlap as an autotuned strategy,
+    not a driver rewrite — with unchanged field numerics."""
+    monkeypatch.setenv(tune.ENV_VAR, str(tmp_path / "t.json"))
+    tune.clear_table_cache()
+    g = _stencil_graph()
+    fx = _padded_field(rng)
+    cfg = TargetConfig("pallas", vvl=64)
+    want = g.launch({"x": fx}, config=cfg, halo="pre")["z"]
+    # key on the interior lattice, as the tuner and the launch both do
+    key = g.plan_key({"x": fx}, config=cfg, halo="pre", lattice=LAT)
+    # overlap launches key identically (shared table entries per contract)
+    assert g.plan_key({"x": fx}, config=cfg, halo="overlap", lattice=LAT) == key
+    winner = LoweringPlan("pallas", bx=2, interpret=True, halo="overlap",
+                          view="staged-nd")
+    tune.record(key, winner)
+    tune.clear_table_cache()
+    fuse.clear_cache()
+    fuse.reset_stats()
+    tuned_cfg = TargetConfig("pallas", vvl=64, plan_policy="tuned")
+    got = g.launch({"x": fx}, config=tuned_cfg, halo="pre")["z"]
+    np.testing.assert_array_equal(want.to_numpy(), got.to_numpy())
+    # the upgrade really ran the split: multiple sub-launch pallas_calls
+    assert fuse.stats()["pallas_calls"] > 1
+    tune.clear_table_cache()
+
+
+def test_default_policy_keeps_pre_schedule(rng):
+    """Bit-compat guard: the default plan policy never upgrades a 'pre'
+    call site to the split schedule (one pallas_call, as before this PR)."""
+    g = _stencil_graph()
+    fx = _padded_field(rng)
+    fuse.clear_cache()
+    fuse.reset_stats()
+    g.launch({"x": fx}, config=TargetConfig("pallas", vvl=64), halo="pre")
+    assert fuse.stats()["pallas_calls"] == 1
+
+
+# -- slab-granular halo helpers ------------------------------------------------
+
+def test_exchange_dim_thin_extent_raises():
+    """2*width of halo + an interior thinner than width would exchange
+    overlapping (corrupt) slices — a clear ValueError instead."""
+    x = jnp.zeros((3, 5, 8))
+    with pytest.raises(ValueError, match=r"dim 1.*extent 5.*width 2"):
+        halo.exchange_dim(x, axis_name="ax", axis_size=2, dim=1, width=2)
+    with pytest.raises(ValueError, match="too thin"):
+        halo.exchange(x, [(1, "ax", 2)], width=2)
+
+
+def test_exchange_boundary_dim_subset(monkeypatch):
+    """exchange_boundary touches only the requested dims (probed by
+    counting exchange_dim calls; no mesh needed)."""
+    calls = []
+
+    def fake_exchange_dim(x, *, axis_name, axis_size, dim, width):
+        calls.append(dim)
+        return x
+
+    monkeypatch.setattr(halo, "exchange_dim", fake_exchange_dim)
+    x = jnp.zeros((3, 8, 8, 8))
+    dec = [(1, "a", 2), (2, "b", 2), (3, "c", 2)]
+    halo.exchange_boundary(x, dec, width=1, dims=(2,))
+    assert calls == [2]
+    calls.clear()
+    halo.exchange_boundary(x, dec, width=1)
+    assert calls == [1, 2, 3]
+
+
+def test_start_finish_exchange_roundtrip(monkeypatch):
+    """start_exchange/finish_exchange bracket the full dimension-ordered
+    exchange (the handle is the seam the overlap schedule documents)."""
+    monkeypatch.setattr(
+        halo, "exchange", lambda x, dec, width: x + 1.0)
+    x = jnp.ones((3, 4))
+    pending = halo.start_exchange(x, [(1, "a", 2)], width=1)
+    assert isinstance(pending, halo.PendingExchange)
+    np.testing.assert_array_equal(
+        np.asarray(halo.finish_exchange(pending)), np.asarray(x) + 1.0)
+
+
+# -- StepPipeline --------------------------------------------------------------
+
+def test_step_pipeline_matches_loop():
+    def step(a, b):
+        return a + b, b * 1.5
+
+    pipe = StepPipeline(step, donate=False)
+    a0, b0 = jnp.arange(4.0), jnp.ones(4)
+    a, b = a0, b0
+    for _ in range(5):
+        a, b = step(a, b)
+    ga, gb = pipe.run((a0, b0), 5)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(a), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(b), rtol=1e-6)
+    # zero steps is the identity; single-array state is wrapped
+    (same,) = StepPipeline(lambda x: x * 2, donate=False).run(a0, 0)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(a0))
+    with pytest.raises(ValueError, match="steps"):
+        pipe.run((a0, b0), -1)
+
+
+def test_step_pipeline_donation_modes():
+    """donate=None auto-disables on CPU (jax cannot alias there); forcing
+    donation still computes correctly (jax falls back with a warning);
+    on_step observes every intermediate state."""
+    pipe = StepPipeline(lambda x: x + 1.0)
+    assert pipe._resolved_donate() is False  # cpu container
+    seen = []
+    forced = StepPipeline(lambda x: x + 1.0, donate=True)
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # cpu: "donated buffers not usable"
+        (out,) = forced.run(jnp.zeros(3), 4,
+                            on_step=lambda i, s: seen.append(i))
+    np.testing.assert_array_equal(np.asarray(out), np.full(3, 4.0))
+    assert seen == [0, 1, 2, 3]
+
+
+def test_step_pipeline_run_timed():
+    pipe = StepPipeline(lambda x: x * 1.01, donate=False)
+    (out,), per_step = pipe.run_timed(jnp.ones(8), 3, warmup=1)
+    np.testing.assert_allclose(np.asarray(out), 1.01 ** 4 * np.ones(8),
+                               rtol=1e-5)
+    assert per_step > 0

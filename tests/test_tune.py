@@ -175,6 +175,54 @@ def test_corrupt_table_yields_empty(tune_env):
     assert tune.lookup("nope") is None
 
 
+def test_table_is_schema_version_stamped(tune_env, rng):
+    """Every persisted table carries the current schema_version (so future
+    schema changes can invalidate it) and round-trips through a fresh
+    load."""
+    fx = _field(rng)
+    plan, info = tune.autotune_graph(
+        _graph(), {"x": fx}, config=TargetConfig("pallas", vvl=64),
+        iters=1, warmup=0, max_candidates=2)
+    raw = json.loads(tune_env.read_text())
+    assert raw["schema_version"] == tune.SCHEMA_VERSION
+    tune.clear_table_cache()
+    assert tune.lookup(info["key"]) == plan
+
+
+def test_unknown_schema_version_degrades_to_misses(tune_env, rng):
+    """A table with a missing or unknown schema_version (e.g. a PR-3-era
+    file, which wrote a 'version' key before plans gained the overlap halo
+    strategy) must behave like an empty table: lookups miss, tuned-policy
+    launches fall back to the default heuristics, and a re-tune sweeps
+    and re-stamps — stale entries are never mis-decoded."""
+    fx = _field(rng)
+    cfg = TargetConfig("pallas", vvl=64)
+    g = _graph()
+    key = g.plan_key({"x": fx}, config=cfg)
+    good_entry = {"plan": LoweringPlan("pallas", vvl=64).to_json()}
+    for stale in (
+        {"version": 1, "entries": {key: good_entry}},          # PR-3 table
+        {"schema_version": 99, "entries": {key: good_entry}},  # future table
+        {"entries": {key: good_entry}},                        # unstamped
+    ):
+        tune_env.write_text(json.dumps(stale))
+        tune.clear_table_cache()
+        assert tune.load_table() == {}
+        assert tune.lookup(key) is None
+    # tuned policy still launches (default-heuristics fallback)...
+    out = _graph().launch(
+        {"x": fx},
+        config=TargetConfig("pallas", vvl=64, plan_policy="tuned"))["t"]
+    np.testing.assert_allclose(out.to_numpy(), 2.0 * fx.to_numpy(), rtol=1e-6)
+    # ...and a re-tune re-sweeps (the stale table is not a warm hit) and
+    # re-stamps the file with the current version
+    tune.reset_stats()
+    plan, info = tune.autotune_graph(
+        g, {"x": fx}, config=cfg, iters=1, warmup=0, max_candidates=2)
+    assert not info["cached"] and tune.stats()["sweep_launches"] > 0
+    assert json.loads(tune_env.read_text())["schema_version"] == tune.SCHEMA_VERSION
+
+
 def test_malformed_entry_is_a_miss_not_a_crash(tune_env, rng):
     """Valid JSON but a structurally broken entry (missing plan, bogus
     engine) must behave like a miss: tuned-policy launches fall back to
