@@ -15,6 +15,12 @@ fused chain is slower than its per-launch unfused baseline beyond the
 given relative tolerance — the perf-regression gate wired into
 .github/workflows/ci.yml (job: bench-smoke).
 
+``--layout-sweep`` times the fused *stencil* chains (lb_step,
+wilson_normal) across SoA/AoS/AoSoA{4,8,16}: the staged-nd lowering
+against the native-AoSoA block lowering (``view="block"``) side by side,
+gated on bit-identity — the paper's layout sweep finally reaching the
+halo'd launches (see README "Layouts in stencil chains").
+
 On this CPU-only container the *measured* numbers are the jnp-engine wall
 times (the paper's "host C" build); per-processor *modelled* times come
 from each kernel's bytes-per-site over the Table-1 STREAM bandwidths —
@@ -368,6 +374,112 @@ def tuned_vs_default(lattice=(16, 16, 16), milc_lattice=(8, 8, 8, 8),
     return rows, metrics
 
 
+LAYOUT_SWEEP = ("soa", "aos", "aosoa4", "aosoa8", "aosoa16")
+
+
+def layout_stencil_sweep(lattice=(8, 14, 16), milc_lattice=(8, 8, 8, 8),
+                         engine="pallas"):
+    """``--layout-sweep``: the paper's layout switch (§3.1) applied to the
+    *fused halo'd stencil chains* — the launches that dominate Figs. 3–5 —
+    across SoA/AoS/AoSoA{4,8,16}, timing the staged-nd lowering against the
+    native-AoSoA block lowering (``LoweringPlan.view == "block"``,
+    core.plan/core.fuse) side by side where the SAL is block-aligned.
+
+    Every native-block launch is checked **bit-identical** to its staged-nd
+    twin (field outputs and on-chip reductions) — the CI layout-sweep smoke
+    gates on this, so a mismatch in the native lowering fails the build.
+    Lattices are chosen so the halo'd inner planes of both chains stay
+    SAL-tileable up to AoSoA16 (ineligible combinations are reported as
+    such, not silently dropped).
+
+    Returns (rows, metrics): metrics maps "{chain}/{layout}" ->
+    {staged_s, native_s, native_eligible, bitwise_equal, plan labels}."""
+    from repro.core import tune
+    from repro.core import plan as plan_mod
+    from repro.core.layout import parse_layout
+    from repro.kernels.lb_propagation.ops import collide_propagate_graph
+
+    tgt = TargetConfig(engine, vvl=128)
+    rng = np.random.default_rng(0)
+    dist_np = (1.0 + 0.1 * rng.normal(size=(19, *lattice))).astype(np.float32)
+    force_np = (0.01 * rng.normal(size=(3, *lattice))).astype(np.float32)
+    cfg4 = MilcConfig(lattice=milc_lattice, kappa=0.1, target=tgt)
+    u4, b4 = init_problem(cfg4, seed=0)
+
+    cases = [
+        ("lb_step", collide_propagate_graph(0.8),
+         lambda lay: {"dist": Field.from_numpy("dist", dist_np, lattice, lay),
+                      "force": Field.from_numpy("force", force_np, lattice,
+                                                lay)},
+         ("dist2",), int(np.prod(lattice))),
+        ("wilson_normal", wilson_normal_graph(cfg4.kappa),
+         lambda lay: {"p": b4.as_layout(lay), "u": u4.as_layout(lay)},
+         ("ap", "pap"), int(np.prod(milc_lattice))),
+    ]
+    rows, metrics = [], {}
+    for name, graph, mk_ins, outs, nsites in cases:
+        for spec in LAYOUT_SWEEP:
+            lay = parse_layout(spec)
+            label = f"{name}/{lay.name}"
+            if not lay.fits(nsites):
+                rows.append(csv_row(f"fig3_layout/{label}", 0.0,
+                                    "skipped=sal_does_not_tile_lattice"))
+                continue
+            ins = mk_ins(lay)
+            default = tune.plan_candidates_for(
+                graph, ins, config=tgt, outputs=outs)[0]
+
+            def run(plan, _g=graph, _i=ins, _o=outs):
+                return jax.tree_util.tree_leaves(
+                    _g.launch(_i, config=tgt, outputs=_o, plan=plan))
+
+            eligible = (engine == "pallas"
+                        and tune.block_view_for(graph, ins, outs))
+            m = {"staged_plan": default.describe(), "staged_s": None,
+                 "native_s": None, "native_eligible": bool(eligible),
+                 "bitwise_equal": None}
+            if eligible:
+                native = dataclasses.replace(default,
+                                             view=plan_mod.VIEW_BLOCK)
+                m["native_plan"] = native.describe()
+                t_st, t_na = _time_interleaved(run, default, native)
+                m["staged_s"], m["native_s"] = t_st, t_na
+                a = graph.launch(ins, config=tgt, outputs=outs, plan=default)
+                b = graph.launch(ins, config=tgt, outputs=outs, plan=native)
+                equal = True
+                for o in outs:
+                    va = a[o].data if isinstance(a[o], Field) else a[o]
+                    vb = b[o].data if isinstance(b[o], Field) else b[o]
+                    equal = equal and bool(
+                        np.array_equal(np.asarray(va), np.asarray(vb)))
+                m["bitwise_equal"] = equal
+                rows.append(csv_row(
+                    f"fig3_layout/{label}_staged", t_st * 1e6,
+                    f"plan={default.describe()}"))
+                rows.append(csv_row(
+                    f"fig3_layout/{label}_native", t_na * 1e6,
+                    f"plan={native.describe()};bitwise_equal={equal}"))
+            else:
+                m["staged_s"] = time_fn(run, default)
+                rows.append(csv_row(
+                    f"fig3_layout/{label}_staged", m["staged_s"] * 1e6,
+                    f"plan={default.describe()};native=ineligible"))
+            metrics[label] = m
+    return rows, metrics
+
+
+def gate_layout_identity(metrics):
+    """The layout-sweep CI gate: every native-block launch must be bitwise
+    identical to its staged-nd twin — the view is a data-movement knob,
+    never a semantics knob."""
+    return [
+        f"{label}: native-block output differs bitwise from staged-nd "
+        f"(plans {m.get('native_plan')} vs {m['staged_plan']})"
+        for label, m in metrics.items()
+        if m.get("bitwise_equal") is False
+    ]
+
+
 def gate_tuned(metrics, tolerance):
     """The tune-smoke CI gate: a tuned plan must never be slower than the
     default heuristic plan beyond ``tolerance`` relative (when the sweep
@@ -420,11 +532,21 @@ def main(argv=None):
     ap.add_argument("--tune-gate", type=float, default=None, metavar="TOL",
                     help="with --tune: exit 1 if any tuned plan is slower "
                          "than the default plan beyond TOL (e.g. 0.05)")
+    ap.add_argument("--layout-sweep", action="store_true",
+                    help="sweep the fused stencil chains across "
+                         "SoA/AoS/AoSoA{4,8,16}, native-block vs staged-nd "
+                         "side by side, gated on bit-identity")
     args = ap.parse_args(argv)
     sizes = (dict(lattice=(8, 8, 8), milc_lattice=(4, 4, 4, 4))
              if args.smoke else {})
     rows, metrics, failures = [], {}, []
-    if args.tune:
+    if args.layout_sweep:
+        # lattices keep the halo'd inner planes SAL-tileable up to AoSoA16
+        lsizes = (dict(lattice=(4, 14, 16), milc_lattice=(4, 4, 4, 4))
+                  if args.smoke else {})
+        rows, metrics = layout_stencil_sweep(engine=args.engine, **lsizes)
+        failures += gate_layout_identity(metrics)
+    elif args.tune:
         # smoke lattices are tiny, so per-launch timings are noise-heavy:
         # demand a decisive (25%) swept gain before leaving the default
         # plan, keeping the tuned-vs-default gate deterministic in CI
@@ -445,10 +567,12 @@ def main(argv=None):
     for r in rows:
         print(r)
     if args.json:
+        mode = ("layout-sweep" if args.layout_sweep
+                else "tune" if args.tune else "fused")
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "metrics": metrics,
                        "engine": args.engine, "smoke": args.smoke,
-                       "mode": "tune" if args.tune else "fused",
+                       "mode": mode,
                        "gate": {"tolerance": (args.tune_gate if args.tune
                                               else args.gate),
                                 "failures": failures}}, f, indent=2)

@@ -35,6 +35,18 @@ boundary slabs run once the halos land — comms hidden behind compute), or
 ``halo=None`` (the planning layer — ``plan_policy``/tuned table — picks).
 `run_steps` drives the step through core.schedule.StepPipeline (donated
 double-buffers, pipelined dispatch) for multi-timestep runs.
+
+Layouts: every Field a step builds carries ``cfg.layout`` (the paper's
+per-architecture layout switch), including the halo'd inputs of the fused
+LB launch — so a tuned table whose winner is the native-AoSoA stencil
+lowering (``LoweringPlan.view == "block"``, core.plan) applies to the
+hottest launch of the step with zero driver changes under
+``cfg.target.plan_policy="tuned"``.  Every temporary the step builds —
+interior stage outputs and halo'd local Fields alike — goes through the
+``tileable_layout`` fallback: the lattice keeps ``cfg.layout`` wherever
+the site count is SAL-tileable and degrades to SOA otherwise (in practice
+only padded local lattices hit the fallback; interior lattices that are
+not tileable already fail at ``init_state``).
 """
 
 from __future__ import annotations
@@ -49,6 +61,7 @@ import numpy as np
 
 from repro.core import (
     Field, LaunchGraph, Layout, SOA, TargetConfig, compat, launch, target_sum,
+    tileable_layout,
 )
 from repro.kernels.lb_collision import ref as lbref
 from repro.kernels.lb_collision.ops import collide_kernel
@@ -129,7 +142,9 @@ def _fed_body(v, *, a0, gamma, kappa):
 
 
 def _mkfield(name: str, arr_nd: jnp.ndarray, cfg: LudwigConfig) -> Field:
-    return Field.from_canonical(name, arr_nd, tuple(arr_nd.shape[1:]), cfg.layout)
+    lat = tuple(arr_nd.shape[1:])
+    return Field.from_canonical(
+        name, arr_nd, lat, tileable_layout(cfg.layout, lat))
 
 
 # -- stage functions (single-shard periodic) ----------------------------------
@@ -397,7 +412,9 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain, halo: str = "pre"):
         qh = exchange_w(pad(q_nd, WQ), WQ)
         dq_h = gr.grad_central(qh)
         lapq_h = gr.laplacian(qh)
-        mk = lambda name, arr: Field.from_canonical(name, arr, tuple(arr.shape[1:]), cfg.layout)
+        # halo'd local Fields keep cfg.layout whenever the padded lattice
+        # stays SAL-tileable (so tuned native-AoSoA plans apply sharded too)
+        mk = lambda name, arr: _mkfield(name, arr, cfg)
         qF = mk("q", qh)
         cs = chem_stress_graph(cfg).launch(
             {"q": qF, "lapq": mk("lapq", lapq_h), "dq": mk("dq", dq_h)},

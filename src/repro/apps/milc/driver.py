@@ -20,6 +20,12 @@ MPI lives, §2.1.2).
   ``halo="pre"`` (the CG inner products are computed from the assembled
   Fields through the same producer-independent reduction in both modes),
   asserted under the 8-fake-device harness in tests/test_distributed.py.
+
+The halo'd spinor/gauge Fields keep ``cfg.layout`` whenever the padded
+local lattice stays SAL-tileable (falling back to SOA otherwise,
+``tileable_layout``), so a tuned native-AoSoA stencil plan
+(``LoweringPlan.view == "block"``) reaches the fused per-iteration
+operator under ``cfg.target.plan_policy="tuned"`` with no driver edits.
 """
 
 from __future__ import annotations
@@ -30,7 +36,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import Field, Layout, SOA, TargetConfig, compat, overlap_launch
+from repro.core import (
+    Field, Layout, SOA, TargetConfig, compat, overlap_launch, tileable_layout,
+)
 from repro.core import halo as halo_mod
 from repro.kernels.wilson_dslash.ops import dslash_halo
 from repro.lattice import Domain
@@ -141,6 +149,11 @@ def make_sharded_solver(
     def exchange(x, w=1):
         return halo_mod.exchange(x, dec, width=w)
 
+    def mkF(name, arr):
+        lat = tuple(arr.shape[1:])
+        return Field.from_canonical(
+            name, arr, lat, tileable_layout(cfg.layout, lat))
+
     def local_solve(u_loc, b_loc):
         lat_loc = u_loc.shape[1:]
         u_h = exchange(pad(u_loc))  # gauge halo once per solve
@@ -150,8 +163,8 @@ def make_sharded_solver(
             out = dslash_halo(psi_h, u_h, config=tgt, width=1)
             return psi.with_canonical(out.reshape(24, -1))
 
-        bF = Field.from_canonical("b", b_loc, lat_loc, cfg.layout)
-        uF = Field.from_canonical("u", u_loc, lat_loc, cfg.layout)
+        bF = mkF("b", b_loc)
+        uF = mkF("u", u_loc)
         apply_m, apply_mdag, apply_normal = make_wilson_op(
             uF, cfg.kappa, tgt, dslash_fn=dslash_fn
         )
@@ -163,21 +176,18 @@ def make_sharded_solver(
             # iteration.  The gauge halo (ring 2) is exchanged once here.
             graph = wilson_normal_graph(float(cfg.kappa))
             u_h2 = exchange(pad(u_loc, WN), WN)
-            uF_h = Field.from_canonical(
-                "u", u_h2, tuple(u_h2.shape[1:]), cfg.layout)
+            uF_h = mkF("u", u_h2)
 
             def apply_a_dot(p: Field):
                 p_p = pad(p.canonical_nd(), WN)
                 if halo == "pre":
                     p_h = exchange(p_p, WN)
-                    pF = Field.from_canonical(
-                        "p", p_h, tuple(p_h.shape[1:]), cfg.layout)
+                    pF = mkF("p", p_h)
                     out = graph.launch(
                         {"p": pF, "u": uF_h}, config=tgt, outputs=("ap",),
                         halo="pre", out_layouts={"ap": p.layout})
                 else:
-                    pF = Field.from_canonical(
-                        "p", p_p, tuple(p_p.shape[1:]), cfg.layout)
+                    pF = mkF("p", p_p)
                     out = overlap_launch(
                         graph, {"p": pF, "u": uF_h}, decomposed=dec,
                         config=tgt, outputs=("ap",), halo="overlap",

@@ -25,6 +25,20 @@ Three stage kinds (paper §2.1.1 classifies kernels as site-local vs stencil;
                  partial and accumulates it into a single small buffer, so
                  the reduction input never materializes in HBM.
 
+Stencil graphs lower under one of two canonical-view strategies
+(``LoweringPlan.view``).  ``"staged-nd"`` (the default) unpacks every input
+to a canonical SoA-nd view as XLA ops around the single kernel — layout
+round-trips through HBM for AoSoA data.  ``"block"`` is the *native AoSoA*
+lowering: a halo'd AoSoA input is staged whole into VMEM in its physical
+``(nblocks, ncomp, SAL)`` tile shape, each program rebases its x-slab
+window onto the block axis (``SAL | halo'd inner-plane count`` keeps every
+window a whole number of short arrays) and un-/re-packs in VMEM, and an
+aligned AoSoA output is written back as native blocks — so the paper's
+layout sweep (§3.1) reaches the halo'd chains (LB step, fused CG) with no
+XLA pack/unpack round-trip.  Both views run the identical composed body on
+identical window values: bit-identical outputs, asserted in
+tests/test_view.py.
+
 Site-local-only graphs lower over the flat 1-D site-block grid exactly as
 before.  Graphs containing a stencil stage lower over **x-slabs of the
 halo'd lattice**: every external input is halo-padded by the ring the
@@ -77,6 +91,7 @@ Example (the CG residual loop, stencil + reduction)::
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from collections import OrderedDict
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
@@ -87,12 +102,13 @@ from jax.experimental import pallas as pl
 
 from . import plan as plan_mod
 from .field import Field
-from .layout import Layout
-from .plan import LoweringPlan
-from .stencil import halo_pad
+from .layout import Layout, LayoutKind
+from .plan import VIEW_BLOCK, LoweringPlan
+from .stencil import halo_pad, halo_pad_physical
 from .target import (
     TargetConfig,
     TargetKernel,
+    build_block_out_specs,
     build_halo_in_specs,
     build_in_specs,
     build_out_specs,
@@ -108,6 +124,8 @@ __all__ = [
     "reset_stats",
     "clear_cache",
 ]
+
+log = logging.getLogger(__name__)
 
 _CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
 _CACHE_CAP = 256
@@ -160,6 +178,64 @@ def _hashable(v) -> bool:
     except TypeError:
         return False
     return True
+
+
+def _block_geometry(
+    ordered_ins: Sequence[str],
+    in_meta: Sequence[Tuple[int, Layout]],
+    in_lats: Sequence[Tuple[int, ...]],
+    in_rings: Sequence[int],
+    halo: str,
+    view: str,
+    out_layouts: Mapping[str, Layout],
+    field_outputs: Sequence[str],
+    lattice: Tuple[int, ...],
+) -> Tuple[List[Tuple[int, ...]], List[bool]]:
+    """Per-input halo'd lattices and native-AoSoA staging flags for a
+    stencil lowering.  Under ``view="block"`` this is the launch-time form
+    of ``core.plan.block_view_ok``: raises ValueError (naming the offending
+    value) when an AoSoA input/output is not block-aligned or when nothing
+    in the launch is AoSoA at all."""
+    # in "pre"/"overlap" mode the caller's lattices already carry the halo
+    hlats = [
+        tuple(s + (2 * ring if halo == "periodic" else 0) for s in lat)
+        for lat, ring in zip(in_lats, in_rings)
+    ]
+    native_in = [False] * len(in_lats)
+    if view != VIEW_BLOCK:
+        return hlats, native_in
+    aosoa_in_play = False
+    for idx, ((ncomp, lay), hlat) in enumerate(zip(in_meta, hlats)):
+        if lay.kind is not LayoutKind.AOSOA:
+            continue
+        aosoa_in_play = True
+        inner_h = int(math.prod(hlat[1:]))
+        if inner_h % lay.sal:
+            raise ValueError(
+                f"view='block': AoSoA(sal={lay.sal}) input "
+                f"{ordered_ins[idx]!r} has halo'd inner-plane site "
+                f"count {inner_h} not divisible by sal — x-slab "
+                f"windows would split short arrays; use "
+                f"view='staged-nd' or a conforming sal "
+                f"(core.plan.block_view_ok)")
+        native_in[idx] = True
+    if not aosoa_in_play and not any(
+            out_layouts[o].kind is LayoutKind.AOSOA for o in field_outputs):
+        raise ValueError(
+            "view='block' lowers AoSoA tiles natively, but no "
+            "input or output layout of this launch is AoSoA — "
+            "use view='staged-nd'")
+    inner = int(math.prod(lattice[1:]))
+    bad = [o for o in field_outputs
+           if out_layouts[o].kind is LayoutKind.AOSOA
+           and inner % out_layouts[o].sal]
+    if bad:
+        raise ValueError(
+            f"view='block': AoSoA output(s) {bad} have sal not "
+            f"dividing the interior inner-plane site count {inner} "
+            f"— slab rows would split short arrays; use "
+            f"view='staged-nd' or a conforming sal")
+    return hlats, native_in
 
 
 def _crop_ring(arr: jax.Array, r_from: int, r_to: int) -> jax.Array:
@@ -595,6 +671,7 @@ class LaunchGraph:
         # -- planning: every lowering decision comes from a LoweringPlan ----
         all_layouts = ([ins[n].layout for n in ordered_ins]
                        + [out_layouts[o] for o in field_outputs])
+        from_table = False
         if plan is None:
             policy = getattr(config, "plan_policy", "default")
             if isinstance(policy, LoweringPlan):
@@ -604,6 +681,7 @@ class LaunchGraph:
                 plan = tune.lookup(self.plan_key(
                     ins, config=config, outputs=outputs, halo=halo,
                     lattice=lattice))
+                from_table = plan is not None
             elif policy != "default":
                 raise ValueError(
                     f"unknown plan_policy {policy!r}; use 'default', "
@@ -614,8 +692,34 @@ class LaunchGraph:
                 stencil=stencil, lattice=lattice, halo=halo)
         else:
             plan = plan_mod.adapt_plan(plan, stencil=stencil, halo=halo)
-            plan.validate(nsites=nsites, lattice=lattice,
-                          layouts=all_layouts, stencil=stencil)
+            try:
+                plan.validate(nsites=nsites, lattice=lattice,
+                              layouts=all_layouts, stencil=stencil)
+                if (stencil and plan.engine == "pallas"
+                        and plan.view == VIEW_BLOCK):
+                    # alignment pre-check: same errors _build_nd would
+                    # raise, surfaced here so a stale table entry can
+                    # degrade instead of crashing the launch
+                    _block_geometry(
+                        ordered_ins,
+                        [(ins[n].ncomp, ins[n].layout) for n in ordered_ins],
+                        [ins[n].lattice for n in ordered_ins],
+                        in_rings, halo, plan.view, out_layouts,
+                        field_outputs, lattice)
+            except ValueError:
+                if not from_table:
+                    raise
+                # tuning must never break a launch (e.g. a persisted
+                # native-block winner meeting an out_layouts override
+                # whose SAL cannot tile the interior): degrade to the
+                # default heuristics, logged not fatal
+                log.warning(
+                    "tuned plan %s does not fit launch of graph %r "
+                    "(lattice %s) — falling back to the default plan",
+                    plan.describe(), self.name, lattice, exc_info=True)
+                plan = plan_mod.default_plan(
+                    config, nsites=nsites, layouts=all_layouts,
+                    stencil=stencil, lattice=lattice, halo=halo)
 
         if stencil and plan.halo == "overlap":
             # split schedule: interior + boundary sub-launches (each a
@@ -645,7 +749,7 @@ class LaunchGraph:
         if fn is None:
             _STATS["cache_misses"] += 1
             build = self._build_nd if stencil else self._build_flat
-            fn = build(
+            build_kw = dict(
                 engine=engine,
                 ordered_ins=ordered_ins,
                 in_meta=[(ins[n].ncomp, ins[n].layout) for n in ordered_ins],
@@ -662,6 +766,9 @@ class LaunchGraph:
                 bx=bx,
                 interpret=interpret,
             )
+            if stencil:  # only the stencil lowering is view-sensitive
+                build_kw["view"] = plan.view
+            fn = build(**build_kw)
             _CACHE[key] = fn
             while len(_CACHE) > _CACHE_CAP:
                 _CACHE.popitem(last=False)
@@ -945,6 +1052,7 @@ class LaunchGraph:
         vvl: int,
         bx: int,
         interpret: bool,
+        view: str,
     ) -> Callable:
         run_nd = self._run_stages_nd
         site_ndim = len(lattice)
@@ -989,25 +1097,48 @@ class LaunchGraph:
         # are not disjoint Blocked windows); each program dynamic-slices its
         # halo'd window out, runs every stage on it, writes its interior
         # slab, and accumulates reduction partials into the shared buffer.
+        #
+        # view="staged-nd": inputs are unpacked to canonical nd views (XLA
+        # ops) before staging and outputs packed after — AoSoA data pays an
+        # HBM relayout round-trip on both sides of the kernel.
+        # view="block" (native AoSoA): an aligned AoSoA input is staged in
+        # its physical (nblocks, ncomp, SAL) tile shape — in "pre" mode the
+        # caller's array is used as-is, zero staging ops — the per-program
+        # window slice is rebased to the block axis (row_blocks = halo'd
+        # inner-plane sites / SAL tiles per x-plane) and unpacked in VMEM;
+        # an aligned AoSoA output is packed in VMEM and written as native
+        # blocks.  Non-AoSoA values take the staged path either way (SOA
+        # staging is a view, AoS a transpose).
         grid = (lattice[0] // bx,)
         nin, nsc = len(ordered_ins), len(ordered_scalars)
-        # in "pre" mode the caller's lattices already carry the halo
-        padded = [
-            (ncomp,) + tuple(
-                s + (2 * ring if halo == "periodic" else 0) for s in lat
-            )
-            for (ncomp, _), lat, ring in zip(in_meta, in_lats, in_rings)
-        ]
-        in_specs = build_halo_in_specs(padded) + [
+        hlats, native_in = _block_geometry(
+            ordered_ins, in_meta, in_lats, in_rings, halo, view,
+            out_layouts, field_outputs, lattice)
+        stage_shapes = []
+        for (ncomp, lay), hlat, nat in zip(in_meta, hlats, native_in):
+            if nat:
+                hsites = int(math.prod(hlat))
+                stage_shapes.append((hsites // lay.sal, ncomp, lay.sal))
+            else:
+                stage_shapes.append((ncomp,) + hlat)
+        in_specs = build_halo_in_specs(stage_shapes) + [
             pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in range(nsc)
         ]
-        out_shapes, out_block_specs = build_slab_out_specs(
-            field_outputs, out_info, lattice, bx
-        )
+        if view == VIEW_BLOCK:
+            # _block_geometry already rejected misaligned AoSoA outputs
+            out_shapes, out_block_specs, native_out = build_block_out_specs(
+                field_outputs, out_info, out_layouts, lattice, bx
+            )
+        else:
+            out_shapes, out_block_specs = build_slab_out_specs(
+                field_outputs, out_info, lattice, bx
+            )
+            native_out = [False] * len(field_outputs)
         red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
         out_shapes += red_shapes
         out_block_specs += red_specs
         nfield = len(field_outputs)
+        inner_int = int(math.prod(lattice[1:]))
         name = self.name
 
         def fused_kernel(*refs):
@@ -1018,33 +1149,67 @@ class LaunchGraph:
             i = pl.program_id(0)
             xs = i * bx
             values = {}
-            for n, (ncomp, _), shp, ring, r in zip(
-                    ordered_ins, in_meta, padded, in_rings, in_refs):
+            for n, (ncomp, lay), hlat, ring, nat, r in zip(
+                    ordered_ins, in_meta, hlats, in_rings, native_in,
+                    in_refs):
                 arr = r[...]  # full halo'd stage (VMEM)
-                window = jax.lax.dynamic_slice(
-                    arr,
-                    (0, xs) + (0,) * (site_ndim - 1),
-                    (ncomp, bx + 2 * ring) + shp[2:],
-                )
+                rows = bx + 2 * ring
+                if nat:
+                    # block-coordinate rebase: each x-plane of the halo'd
+                    # lattice is row_blocks whole short arrays, so the
+                    # window [xs, xs + rows) is a contiguous run on the
+                    # block axis; the canonical nd window is recovered by
+                    # the AoSoA unpack on VMEM-resident data (transpose of
+                    # a (nblk, ncomp, sal) tile stack — never through HBM)
+                    row_blocks = int(math.prod(hlat[1:])) // lay.sal
+                    tile = jax.lax.dynamic_slice(
+                        arr,
+                        (xs * row_blocks, 0, 0),
+                        (rows * row_blocks, ncomp, lay.sal),
+                    )
+                    window = tile.transpose(1, 0, 2).reshape(
+                        (ncomp, rows) + hlat[1:])
+                else:
+                    window = jax.lax.dynamic_slice(
+                        arr,
+                        (0, xs) + (0,) * (site_ndim - 1),
+                        (ncomp, rows) + hlat[1:],
+                    )
                 values[n] = (window, ring)
             for n, r in zip(ordered_scalars, sc_refs):
                 values[n] = (r[...], None)
             values, partials = run_nd(values, site_ndim)
-            for o, r in zip(field_outputs, out_refs):
+            for o, nat, r in zip(field_outputs, native_out, out_refs):
                 arr, ring = values[o]
-                r[...] = _crop_ring(arr, ring, 0).astype(out_info[o][1])
+                a0 = _crop_ring(arr, ring, 0).astype(out_info[o][1])
+                if nat:  # pack the interior slab in VMEM: native blocks out
+                    ncomp = out_info[o][0]
+                    sal = out_layouts[o].sal
+                    r[...] = a0.reshape(
+                        ncomp, bx * inner_int // sal, sal).transpose(1, 0, 2)
+                else:
+                    r[...] = a0
             for o, r in zip(red_outputs, acc_refs):
                 combine, init, _ = red_ops[o]
                 _accumulate(r, combine, init,
                             partials[o][:, None].astype(out_info[o][1]))
 
+        def stage_in(n, meta, lat, ring, nat, d):
+            if not nat:
+                return to_halo_nd(n, meta, lat, ring, d)
+            if halo == "periodic" and ring > 0:
+                ncomp, lay = meta
+                return halo_pad_physical(d, lay, ncomp, lat, ring)
+            return d  # "pre": the caller's physical array, staged as-is
+
         def fn(datas, svals):
             _STATS["traces"] += 1
             _STATS["pallas_calls"] += 1
-            nds = [
-                to_halo_nd(n, meta, lat, ring, d)
-                for n, meta, lat, ring, d in zip(
-                    ordered_ins, in_meta, in_lats, in_rings, datas)
+            staged = [
+                stage_in(n, meta, lat, ring, nat, d)
+                for n, meta, lat, ring, nat, d in zip(
+                    ordered_ins, in_meta, in_lats, in_rings, native_in,
+                    datas)
             ]
             call = pl.pallas_call(
                 fused_kernel,
@@ -1057,13 +1222,15 @@ class LaunchGraph:
                 interpret=interpret,
                 name=name,
             )
-            res = call(*nds, *svals)
+            res = call(*staged, *svals)
             if len(out_shapes) == 1:
                 res = (res,)
             out = []
             for idx, r in enumerate(res):
                 if idx >= nfield:  # reduction accumulator (ncomp, 1)
                     out.append(r[:, 0])
+                elif native_out[idx]:  # already the physical AoSoA array
+                    out.append(r)
                 else:  # canonical nd -> requested physical layout
                     o = field_outputs[idx]
                     ncomp, _ = out_info[o]

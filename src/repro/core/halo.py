@@ -23,6 +23,7 @@ from jax import lax
 __all__ = [
     "exchange_dim",
     "exchange",
+    "exchange_field",
     "exchange_boundary",
     "start_exchange",
     "finish_exchange",
@@ -100,6 +101,23 @@ def exchange(
             x, axis_name=axis_name, axis_size=axis_size, dim=dim, width=width
         )
     return x
+
+
+def exchange_field(f, decomposed: Sequence[Tuple[int, str, int]], *, width: int):
+    """Halo-exchange a :class:`~repro.core.field.Field` whose lattice is the
+    halo'd local lattice, returning a Field in the SAME physical layout.
+
+    The AoSoA-backed-shard form of :func:`exchange`: the ppermutes run on
+    the canonical-nd view (collectives move whole halo planes — the
+    physical layout of the wire format is irrelevant), and the result is
+    re-packed into the input's layout, so a downstream native-AoSoA stencil
+    launch (``LoweringPlan.view == "block"``) receives the physical tile
+    stack it stages as-is.  With ``width`` 0 or no decomposed dims the
+    Field is returned untouched."""
+    if width < 1 or not decomposed:
+        return f
+    nd = exchange(f.canonical_nd(), decomposed, width=width)
+    return f.with_canonical(nd.reshape(f.ncomp, -1))
 
 
 def exchange_boundary(

@@ -36,7 +36,7 @@ import enum
 from typing import Tuple
 
 
-__all__ = ["LayoutKind", "Layout", "AOS", "SOA", "aosoa"]
+__all__ = ["LayoutKind", "Layout", "AOS", "SOA", "aosoa", "tileable_layout"]
 
 
 class LayoutKind(enum.Enum):
@@ -73,6 +73,13 @@ class Layout:
                 f"AoSoA(sal={self.sal}) requires sal | nsites, got nsites={nsites}"
             )
         return (nsites // self.sal, ncomp, self.sal)
+
+    def fits(self, nsites: int) -> bool:
+        """Whether this layout can tile ``nsites`` sites (AoSoA needs
+        SAL | nsites; SoA/AoS always fit).  Drivers use this to fall back
+        to SOA for halo'd temporaries whose padded site count the
+        configured SAL cannot tile."""
+        return self.kind is not LayoutKind.AOSOA or nsites % self.sal == 0
 
     # -- the INDEX() macro ----------------------------------------------------
 
@@ -175,6 +182,19 @@ SOA = Layout(LayoutKind.SOA)
 def aosoa(sal: int) -> Layout:
     """AoSoA with short-array length ``sal`` (TPU-native at sal=128)."""
     return Layout(LayoutKind.AOSOA, sal)
+
+
+def tileable_layout(layout: Layout, lattice) -> Layout:
+    """``layout`` when it can tile this lattice, else SOA.
+
+    The drivers' fallback policy for halo'd local Fields: the configured
+    layout is kept wherever the (possibly padded) site count stays
+    SAL-tileable — so tuned native-AoSoA stencil plans apply sharded —
+    and degrades to SOA instead of failing the step otherwise."""
+    nsites = 1
+    for s in lattice:
+        nsites *= int(s)
+    return layout if layout.fits(nsites) else SOA
 
 
 def parse_layout(spec: str) -> Layout:

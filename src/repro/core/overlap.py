@@ -122,10 +122,11 @@ def split_boxes(
 def _window(f: Field, box: Box, ring: int) -> Field:
     """Slice the halo'd window a sub-launch over ``box`` needs from a
     pre-halo'd input Field (ring ``ring``): halo'd coords
-    ``[start, stop + 2*ring)`` per dim.  Windows stay SOA — the stencil
-    lowering works on canonical staged-nd views, so the physical layout of
-    the sliced window is irrelevant (and AoSoA blocks need not divide
-    arbitrary slab sizes)."""
+    ``[start, stop + 2*ring)`` per dim.  Windows stay SOA — arbitrary slab
+    extents do not stay AoSoA-block-aligned, so ``sub_lattice_plan`` pins
+    every sub-launch to the staged-nd view (a native-block outer plan still
+    assembles into the requested output layout, bit-identically; the
+    per-site arithmetic is view-independent)."""
     nd = f.canonical_nd()
     sl = (slice(None),) + tuple(
         slice(s, e + 2 * ring) for (s, e) in box)
@@ -334,9 +335,10 @@ def overlap_launch(
     for n in ext:
         f = ins[n]
         r = rings.get(n, 0)
-        if r > 0 and n not in exchanged and decomposed:
-            nd = halo_mod.exchange(f.canonical_nd(), decomposed, width=r)
-            ex_ins[n] = Field.from_canonical(n, nd, f.lattice, f.layout)
+        if n not in exchanged:
+            # layout-preserving: AoSoA-backed shards come back as AoSoA, so
+            # a native-block plan's "pre" fallback launch stages them as-is
+            ex_ins[n] = halo_mod.exchange_field(f, decomposed, width=r)
         else:
             ex_ins[n] = f
 

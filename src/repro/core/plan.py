@@ -17,9 +17,20 @@ routes through a :class:`LoweringPlan`:
               or "overlap" (interior/boundary split launches overlapping the
               halo exchange with interior compute — core.overlap)
   view        canonical-view strategy: "block" (layout pack/unpack inside the
-              kernel via BlockSpec) or "staged-nd" (canonical SoA-nd views
-              packed/unpacked as XLA ops around the single halo'd kernel —
-              native AoSoA stencil blocks are the roadmap follow-on)
+              kernel, per VMEM block) or "staged-nd" (canonical SoA-nd views
+              packed/unpacked as XLA ops around the single halo'd kernel).
+              Site-local lowerings always use "block" (BlockSpec tiling per
+              Layout).  Stencil lowerings default to "staged-nd"; "block" is
+              the *native AoSoA* stencil lowering: halo'd AoSoA inputs are
+              staged whole as physical ``(nblocks, ncomp, SAL)`` tiles, each
+              program slices its halo'd x-slab window on the *block* axis
+              and un-/re-packs in VMEM, so the paper's layout sweep reaches
+              halo'd chains without an XLA pack/unpack round-trip
+              (``block_view_ok`` states the alignment precondition).  The
+              dataclass default is the "auto" sentinel: resolved per shape
+              by ``adapt_plan`` (block for site-local, staged-nd for
+              stencil), so hand-built plans without view= behave as before
+              the knob existed
 
 ``choose_vvl`` / ``choose_slab`` live here as plan *candidate generators*:
 they enumerate the divisors of the lattice extent (memoized — the previous
@@ -56,6 +67,7 @@ __all__ = [
     "choose_slab",
     "resolve_vvl",
     "sal_alignment",
+    "block_view_ok",
     "default_plan",
     "plan_for_launch",
     "sub_lattice_plan",
@@ -65,6 +77,11 @@ __all__ = [
 
 VIEW_BLOCK = "block"
 VIEW_STAGED_ND = "staged-nd"
+# dataclass default: resolved per lowering shape by adapt_plan (site-local
+# -> block, stencil -> staged-nd), so hand-built plans that never set view=
+# keep the exact pre-view-knob behavior; requesting the native-AoSoA stencil
+# lowering is always an explicit view=VIEW_BLOCK
+VIEW_AUTO = "auto"
 
 
 # -- divisor enumeration (memoized candidate generators) -----------------------
@@ -136,6 +153,38 @@ def sal_alignment(layouts: Sequence[Layout]) -> int:
     return align
 
 
+def block_view_ok(
+    in_views: Sequence[Tuple[Layout, int]],
+    out_layouts: Sequence[Layout],
+    interior_inner: int,
+) -> bool:
+    """Whether a stencil launch can lower natively on AoSoA blocks
+    (``view="block"``).
+
+    in_views        (layout, halo'd inner-plane site count) per external
+                    input — ``prod(halo'd_lattice[1:])``, the site count of
+                    one x-plane of the *staged* (halo'd) array.
+    out_layouts     layout per field output.
+    interior_inner  ``prod(interior_lattice[1:])``.
+
+    True iff at least one *input* is AoSoA (the knob only pays when a halo'd
+    input would otherwise round-trip through an XLA unpack) and every AoSoA
+    layout in play is block-aligned: an input's SAL must divide its halo'd
+    inner-plane count (so every x-slab window is a whole number of short
+    arrays and the per-program ``dynamic_slice`` can be rebased to block
+    coordinates), and an output's SAL must divide the interior inner-plane
+    count (so the disjoint slab BlockSpec rows are whole blocks)."""
+    if not any(lay.kind is LayoutKind.AOSOA for lay, _ in in_views):
+        return False
+    for lay, halo_inner in in_views:
+        if lay.kind is LayoutKind.AOSOA and halo_inner % lay.sal:
+            return False
+    for lay in out_layouts:
+        if lay.kind is LayoutKind.AOSOA and interior_inner % lay.sal:
+            return False
+    return True
+
+
 def resolve_vvl(config, nsites: int, layouts: Sequence[Layout]) -> int:
     """config.vvl when it fits, else the best choose_vvl fallback.
 
@@ -162,7 +211,7 @@ class LoweringPlan:
     bx: int = 0
     interpret: bool = False
     halo: str = "periodic"
-    view: str = VIEW_BLOCK
+    view: str = VIEW_AUTO
 
     # -- serialization (core.tune persists plans as JSON) ----------------------
 
@@ -180,8 +229,12 @@ class LoweringPlan:
         if self.engine != "pallas":
             return self.engine + suffix
         knob = f"bx={self.bx}" if self.bx else f"vvl={self.vvl}"
-        return (f"pallas/{knob}" + ("/interpret" if self.interpret else "")
-                + suffix)
+        # stencil plans carry the canonical-view knob (native AoSoA blocks
+        # vs staged-nd); site-local plans are always "block", untagged so
+        # persisted timing labels stay stable
+        view = "/block" if (self.bx and self.view == VIEW_BLOCK) else ""
+        return (f"pallas/{knob}{view}"
+                + ("/interpret" if self.interpret else "") + suffix)
 
     # -- validation -------------------------------------------------------------
 
@@ -201,7 +254,7 @@ class LoweringPlan:
             raise ValueError(
                 f"halo must be 'periodic', 'pre' or 'overlap', "
                 f"got {self.halo!r}")
-        if self.view not in (VIEW_BLOCK, VIEW_STAGED_ND):
+        if self.view not in (VIEW_AUTO, VIEW_BLOCK, VIEW_STAGED_ND):
             raise ValueError(f"unknown canonical-view strategy {self.view!r}")
         if self.halo == "overlap" and not stencil:
             raise ValueError(
@@ -219,11 +272,13 @@ class LoweringPlan:
                 raise ValueError(
                     f"bx={self.bx} must divide the leading lattice dim "
                     f"{lattice[0]}")
-            if self.view != VIEW_STAGED_ND:
+            if self.view == VIEW_BLOCK and layouts and not any(
+                    lay.kind is LayoutKind.AOSOA for lay in layouts):
                 raise ValueError(
-                    "stencil graphs lower on canonical staged-nd views "
-                    "(view='staged-nd'); native AoSoA stencil blocks are a "
-                    "roadmap follow-on")
+                    "view='block' lowers stencil graphs natively on AoSoA "
+                    "tiles, but no launch layout is AoSoA — use "
+                    "view='staged-nd' (the per-input block alignment is "
+                    "checked at launch, where halo rings are known)")
         else:
             if self.vvl < 1:
                 raise ValueError(
@@ -241,7 +296,7 @@ class LoweringPlan:
                     raise ValueError(
                         f"vvl={self.vvl} must be a multiple of AoSoA "
                         f"sal={lay.sal}")
-            if self.view != VIEW_BLOCK:
+            if self.view not in (VIEW_AUTO, VIEW_BLOCK):
                 raise ValueError(
                     "site-local lowering packs/unpacks per-block inside the "
                     "kernel (view='block')")
@@ -251,8 +306,15 @@ class LoweringPlan:
 def adapt_plan(plan: LoweringPlan, *, stencil: bool, halo: str) -> LoweringPlan:
     """Fit an externally supplied plan (explicit policy or tuned-table entry)
     to a concrete launch: the call-site halo strategy is authoritative (the
-    sharded drivers pass halo='pre'), and the view follows the lowering shape
-    (only one strategy per shape exists today).  One exception: 'pre' and
+    sharded drivers pass halo='pre') and the view must fit the lowering
+    shape — site-local lowerings are always 'block'; a *stencil* plan keeps
+    an explicitly chosen view (this is how a persisted native-AoSoA winner
+    reaches a launch, and an explicit 'block' that cannot lower fails
+    loudly at validation), while the 'auto' dataclass default resolves to
+    'staged-nd' — so hand-built plans that never set view=, e.g.
+    ``LoweringPlan("pallas", bx=2)`` from the pre-view era, launch exactly
+    as they always did regardless of layout or alignment.  The jnp stencil
+    lowering is staged by construction.  One exception on halo: 'pre' and
     'overlap' are interchangeable strategies for pre-exchanged stencil
     launches (same input contract, different schedule), so a plan that
     chose 'overlap' — e.g. a persisted autotuner winner — upgrades a
@@ -260,8 +322,13 @@ def adapt_plan(plan: LoweringPlan, *, stencil: bool, halo: str) -> LoweringPlan:
     eff = halo
     if halo == "pre" and plan.halo == "overlap" and stencil:
         eff = "overlap"
-    return dataclasses.replace(
-        plan, halo=eff, view=VIEW_STAGED_ND if stencil else VIEW_BLOCK)
+    if not stencil:
+        view = VIEW_BLOCK
+    elif plan.engine != "pallas" or plan.view == VIEW_AUTO:
+        view = VIEW_STAGED_ND
+    else:
+        view = plan.view
+    return dataclasses.replace(plan, halo=eff, view=view)
 
 
 # -- planners ------------------------------------------------------------------
@@ -329,17 +396,21 @@ def sub_lattice_plan(
 ) -> LoweringPlan:
     """Fit a stencil plan to a sub-lattice — how the overlap scheduler
     (core.overlap) plans its interior/boundary slab sub-launches: keep the
-    outer plan's engine/interpret/view, keep its x-slab ``bx`` when it
-    divides the slab's leading extent, otherwise re-choose the largest
-    conforming slab for the (thin) sub-lattice."""
+    outer plan's engine/interpret, keep its x-slab ``bx`` when it divides
+    the slab's leading extent, otherwise re-choose the largest conforming
+    slab for the (thin) sub-lattice.  The view drops to 'staged-nd': the
+    scheduler's sliced windows are SOA Fields (arbitrary slab extents do
+    not stay block-aligned), so a native-AoSoA outer plan executes its
+    sub-launches on staged canonical views — bit-identical arithmetic, the
+    relayout happens at assembly."""
     if plan.engine != "pallas":
         return dataclasses.replace(plan, halo=halo)
     if plan.bx >= 1 and lattice[0] % plan.bx == 0:
-        return dataclasses.replace(plan, halo=halo)
+        return dataclasses.replace(plan, halo=halo, view=VIEW_STAGED_ND)
     bx = choose_slab(
         lattice[0], int(math.prod(lattice[1:])),
         max(int(getattr(config, "vvl", 128)), 1))
-    return dataclasses.replace(plan, halo=halo, bx=bx)
+    return dataclasses.replace(plan, halo=halo, bx=bx, view=VIEW_STAGED_ND)
 
 
 def _spread(values, k: int):
@@ -362,6 +433,7 @@ def candidate_plans(
     halo: str = "periodic",
     max_candidates: int = 8,
     devices: Optional[int] = None,
+    block_view: Optional[bool] = None,
 ) -> Tuple[LoweringPlan, ...]:
     """Enumerate valid plans for the autotuner sweep, deterministically.
 
@@ -386,7 +458,16 @@ def candidate_plans(
     unless overlap wins decisively — a sharded timing harness (or an
     explicitly recorded winner) is what flips launches to the split
     schedule.  On a single device there is no exchange at all and the
-    twins are skipped."""
+    twins are skipped.
+
+    Stencil launches with an AoSoA input additionally get two
+    ``view="block"`` twins (the default slab and the widest swept one) —
+    the native-AoSoA lowering, so the tuner can rank it against staged-nd
+    per lattice/backend.  ``block_view`` gates them: ``None`` emits twins
+    whenever some input layout is AoSoA (the tuner skips+records a
+    candidate whose alignment fails at launch); callers that know the
+    halo'd geometry pass the precise :func:`block_view_ok` verdict
+    (``core.tune.plan_candidates_for`` does)."""
     default = default_plan(config, nsites=nsites, layouts=layouts,
                            stencil=stencil, lattice=lattice, halo=halo)
     if default.engine != "pallas":
@@ -400,12 +481,18 @@ def candidate_plans(
             import jax
             devices = jax.device_count()
         with_overlap = halo == "pre" and devices > 1
-        k = max(1, max_candidates - 2) if with_overlap else max_candidates
-        cands = [dataclasses.replace(default, bx=bx)
-                 for bx in _spread(bxs, k)]
+        if block_view is None:
+            block_view = any(lay.kind is LayoutKind.AOSOA for lay in layouts)
+        n_twins = (2 if with_overlap else 0) + (2 if block_view else 0)
+        k = max(1, max_candidates - n_twins)
+        spread_bxs = _spread(bxs, k)
+        cands = [dataclasses.replace(default, bx=bx) for bx in spread_bxs]
+        twin_bxs = sorted({default.bx, spread_bxs[-1]})[:2]
         if with_overlap:
-            twin_bxs = sorted({default.bx, cands[-1].bx})[:2]
             cands += [dataclasses.replace(default, bx=bx, halo="overlap")
+                      for bx in twin_bxs]
+        if block_view:
+            cands += [dataclasses.replace(default, bx=bx, view=VIEW_BLOCK)
                       for bx in twin_bxs]
     else:
         align = sal_alignment(layouts)

@@ -14,7 +14,13 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-__all__ = ["shift_periodic", "interior", "halo_pad", "shifted_window"]
+__all__ = [
+    "shift_periodic",
+    "interior",
+    "halo_pad",
+    "halo_pad_physical",
+    "shifted_window",
+]
 
 
 def shift_periodic(x_nd: jax.Array, disp: Sequence[int]) -> jax.Array:
@@ -36,6 +42,28 @@ def halo_pad(x_nd: jax.Array, width: int, site_dims: Sequence[int]) -> jax.Array
     for d in site_dims:
         pads[d] = (width, width)
     return jnp.pad(x_nd, pads, mode="wrap")
+
+
+def halo_pad_physical(
+    data: jax.Array, layout, ncomp: int, lattice: Sequence[int], width: int
+) -> jax.Array:
+    """Halo-pad a *physical* array by periodic wrap, returning the physical
+    array over the padded lattice in the same layout.
+
+    The single-shard halo fill for the native-AoSoA stencil lowering
+    (``LoweringPlan.view == "block"``): the padded sites re-linearize, so a
+    3-D AoSoA ``(nsites/SAL, ncomp, SAL)`` shape is re-blocked over the
+    padded site count — which therefore must stay a multiple of SAL (a
+    clear ValueError otherwise; the plan layer only proposes block views
+    whose SAL divides the halo'd inner-plane count, see
+    ``core.plan.block_view_ok``).  For SOA/AoS this is pack(pad(unpack)),
+    where pack/unpack are views."""
+    if width < 1:
+        return data
+    lattice = tuple(int(s) for s in lattice)
+    nd = layout.unpack(data).reshape((ncomp,) + lattice)
+    padded = halo_pad(nd, width, range(1, nd.ndim))
+    return layout.pack(padded.reshape(ncomp, -1))
 
 
 def interior(x_halo: jax.Array, width: int, site_dims: Sequence[int]) -> jax.Array:

@@ -42,6 +42,7 @@ explicit plan).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -111,7 +112,11 @@ def build_halo_in_specs(
     staged whole into VMEM (constant index map) and the kernel slices the
     per-program halo'd window out with ``lax.dynamic_slice`` — displacement
     becomes slice arithmetic on VMEM-resident data (see
-    kernels/lb_propagation for the single-kernel precedent)."""
+    kernels/lb_propagation for the single-kernel precedent).  Shapes are
+    whatever the staging produced: canonical ``(ncomp, *halo'd_lattice)``
+    under ``view="staged-nd"``, or the physical 3-D AoSoA
+    ``(nblocks, ncomp, SAL)`` tile stack under the native ``view="block"``
+    lowering (the kernel then slices on the *block* axis)."""
     specs = []
     for shp in shapes:
         zeros = (0,) * len(shp)
@@ -138,6 +143,48 @@ def build_slab_out_specs(
         idx = lambda i: (0, i) + (0,) * len(inner)
         specs.append(pl.BlockSpec(block, idx))
     return shapes, specs
+
+
+def build_block_out_specs(
+    out_names: Sequence[str],
+    out_specs: Mapping[str, Tuple[int, object]],
+    out_layouts: Mapping[str, Layout],
+    lattice: Tuple[int, ...],
+    bx: int,
+) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec], List[bool]]:
+    """(out_shape, BlockSpec, native?) per output of a ``view="block"``
+    stencil graph.
+
+    An AoSoA output whose SAL divides the interior inner-plane site count
+    is written *natively*: the out_shape is the physical
+    ``(nsites/SAL, ncomp, SAL)`` array and each program owns a disjoint
+    run of ``bx * inner / SAL`` whole blocks on the leading axis — the
+    kernel packs its interior slab in VMEM and no XLA relayout runs after
+    the launch.  Anything else falls back to the canonical x-slab spec of
+    :func:`build_slab_out_specs` (packing for SoA is a view and for AoS a
+    transpose), flagged ``native=False`` so the caller packs as usual."""
+    from .layout import LayoutKind
+
+    inner = int(math.prod(lattice[1:]))
+    nsites = int(math.prod(lattice))
+    shapes, specs, native = [], [], []
+    for k in out_names:
+        ncomp, dtype = out_specs[k]
+        lay = out_layouts[k]
+        if lay.kind is LayoutKind.AOSOA and inner % lay.sal == 0:
+            sal = lay.sal
+            shapes.append(
+                jax.ShapeDtypeStruct((nsites // sal, ncomp, sal), dtype))
+            specs.append(
+                pl.BlockSpec((bx * inner // sal, ncomp, sal),
+                             lambda i: (i, 0, 0)))
+            native.append(True)
+        else:
+            s, p = build_slab_out_specs([k], out_specs, lattice, bx)
+            shapes += s
+            specs += p
+            native.append(False)
+    return shapes, specs, native
 
 
 def build_reduce_specs(

@@ -49,6 +49,8 @@ __all__ = [
     "clear_table_cache",
     "lookup",
     "record",
+    "block_view_for",
+    "plan_candidates_for",
     "autotune_graph",
     "stats",
     "reset_stats",
@@ -227,6 +229,33 @@ def _interior_lattice(graph, ins, outputs, halo) -> Tuple[int, ...]:
     return lattice
 
 
+def block_view_for(graph, ins, outputs, halo="periodic") -> bool:
+    """Precise native-AoSoA eligibility for this launch geometry
+    (core.plan.block_view_ok): per-input halo'd inner-plane counts come
+    from the graph's ring analysis, output layouts from the launch default
+    (the first input's layout) — so the candidate sweep only proposes
+    ``view="block"`` plans that will actually lower."""
+    if not graph.has_stencil:
+        return False
+    outs = tuple(outputs) if outputs is not None else None
+    rings = graph.halo_widths(outs)
+    in_views = []
+    for n, f in ins.items():
+        r = rings.get(n, 0)
+        hlat = (tuple(f.lattice) if halo in ("pre", "overlap")
+                else tuple(s + 2 * r for s in f.lattice))
+        inner_h = 1
+        for s in hlat[1:]:
+            inner_h *= s
+        in_views.append((f.layout, inner_h))
+    interior = _interior_lattice(graph, ins, outs, halo)
+    interior_inner = 1
+    for s in interior[1:]:
+        interior_inner *= s
+    first = next(iter(ins.values()))
+    return plan_mod.block_view_ok(in_views, [first.layout], interior_inner)
+
+
 def plan_candidates_for(
     graph,
     ins,
@@ -238,7 +267,10 @@ def plan_candidates_for(
 ) -> Tuple[LoweringPlan, ...]:
     """Candidate plans for launching ``graph`` with ``ins`` (first entry is
     always the default heuristic plan) — the sweep set of autotune_graph,
-    also what benchmarks use to time default-vs-tuned."""
+    also what benchmarks use to time default-vs-tuned.  Stencil sweeps with
+    an aligned AoSoA input include native-block (``view="block"``) twins,
+    so a persisted winner can flip the hot halo'd launches to the native
+    AoSoA lowering per backend."""
     lattice = _interior_lattice(graph, ins, outputs, halo)
     nsites = 1
     for s in lattice:
@@ -246,7 +278,8 @@ def plan_candidates_for(
     layouts = [f.layout for f in ins.values()]
     return plan_mod.candidate_plans(
         config, nsites=nsites, layouts=layouts, stencil=graph.has_stencil,
-        lattice=lattice, halo=halo, max_candidates=max_candidates)
+        lattice=lattice, halo=halo, max_candidates=max_candidates,
+        block_view=block_view_for(graph, ins, outputs, halo))
 
 
 def autotune_graph(

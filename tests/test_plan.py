@@ -128,7 +128,9 @@ def test_stencil_candidates_valid(x_dim, inner, preferred):
 def test_jnp_engine_single_candidate():
     cands = plan_mod.candidate_plans(
         TargetConfig("jnp"), nsites=64, layouts=[SOA])
-    assert cands == (LoweringPlan("jnp"),)
+    # the planner resolves the view explicitly (the bare dataclass default
+    # is the 'auto' sentinel)
+    assert cands == (LoweringPlan("jnp", view=plan_mod.VIEW_BLOCK),)
 
 
 # -- plan validation / serialization -------------------------------------------
@@ -145,9 +147,13 @@ def test_plan_validation_errors():
     with pytest.raises(ValueError, match="bx=3 must divide"):
         LoweringPlan("pallas", bx=3, view="staged-nd").validate(
             lattice=(8, 4, 4), stencil=True)
-    with pytest.raises(ValueError, match="staged-nd"):
+    # view='block' is a legal stencil view when an AoSoA layout is in play
+    # (the native-AoSoA lowering); without one it is rejected
+    LoweringPlan("pallas", bx=2, view="block").validate(
+        lattice=(8, 4, 4), stencil=True, layouts=[aosoa(4), SOA])
+    with pytest.raises(ValueError, match="no launch layout is AoSoA"):
         LoweringPlan("pallas", bx=2, view="block").validate(
-            lattice=(8, 4, 4), stencil=True)
+            lattice=(8, 4, 4), stencil=True, layouts=[SOA, AOS])
     # jnp plans carry no pallas constraints
     LoweringPlan("jnp").validate(nsites=7, layouts=[aosoa(8)])
 

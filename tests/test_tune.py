@@ -300,7 +300,7 @@ def test_jnp_engine_tunes_to_single_candidate(tune_env, rng):
     fx = _field(rng)
     plan, info = tune.autotune_graph(
         _graph(), {"x": fx}, config=TargetConfig("jnp"), iters=1, warmup=0)
-    assert plan == LoweringPlan("jnp")
+    assert plan == LoweringPlan("jnp", view="block")  # site-local default
     assert len(info["timings_us"]) == 1
 
 
