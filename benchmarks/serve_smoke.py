@@ -1,0 +1,119 @@
+"""Batched-serving smoke benchmark: multi-simulation solve throughput.
+
+Times the batched CG serving path (apps.milc.driver.solve_batched — one
+fused operator pallas_call + one fused masked-update pallas_call per
+iteration for the WHOLE batch) against the looped single-solve oracle at
+batch sizes 1/4/16, and gates on the serving contract: every slot of the
+batched solve must be *bitwise identical* to the corresponding dedicated
+solve.  Timings off-accelerator are trend-only (interpret-mode CPU); the
+bit-identity gate is the CI pass/fail.
+
+CI mode: ``--smoke --json SERVE_ci.json`` runs a tiny lattice at a fixed
+iteration count (tol=0, so every batch size does identical per-request
+work) and writes the fig3-schema artifact (``rows``/``metrics``/``gate``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+try:  # runnable both as a module and as a script
+    from .common import csv_row, time_fn
+except ImportError:
+    from common import csv_row, time_fn
+
+from repro.apps.milc import driver, fields
+from repro.core import Field, SOA, TargetConfig
+
+BATCHES = (1, 4, 16)
+
+
+def measured_serving(smoke: bool, engine: str, iters: int):
+    lattice = (4, 4, 4, 8) if smoke else (8, 8, 8, 8)
+    cfg = driver.MilcConfig(lattice=lattice, kappa=0.10, tol=0.0,
+                            max_iter=iters, layout=SOA,
+                            target=TargetConfig(engine, vvl=128))
+    u, _ = driver.init_problem(cfg, seed=0)
+    sources = [Field.from_numpy(
+        "b", fields.random_spinor(lattice, seed=100 + i), lattice,
+        cfg.layout) for i in range(max(BATCHES))]
+
+    rows, metrics = [], {}
+    # looped oracle timing: one solve, scaled — every request is the same
+    # work at tol=0, and the loop has no cross-request reuse to measure
+    t_single = time_fn(lambda: driver.solve(cfg, u, sources[0]),
+                       iters=3, warmup=1)
+    for bsz in BATCHES:
+        bs = sources[:bsz]
+        t_batched = time_fn(lambda _bs=bs: driver.solve_batched(cfg, u, _bs),
+                            iters=3, warmup=1)
+        res = driver.solve_batched(cfg, u, bs)
+        identical = True
+        for i, b in enumerate(bs):
+            r1 = driver.solve(cfg, u, b)
+            identical &= np.array_equal(np.asarray(res.x.element(i).data),
+                                        np.asarray(r1.x.data))
+            identical &= int(res.iterations[i]) == int(r1.iterations)
+            identical &= np.array_equal(np.asarray(res.residual[i]),
+                                        np.asarray(r1.residual))
+        per_req = t_batched / bsz
+        speedup = t_single / per_req if per_req > 0 else 0.0
+        name = f"serve_smoke/batched_cg_b{bsz}"
+        rows.append(csv_row(
+            name, per_req * 1e6,
+            f"batch={bsz};iters={iters};vs_loop={speedup:.2f}x;"
+            f"bit_identical={identical}"))
+        metrics[name] = {
+            "batch": bsz, "cg_iters": iters, "engine": engine,
+            "lattice": list(lattice), "batched_s": t_batched,
+            "single_s": t_single, "per_request_s": per_req,
+            "speedup_vs_loop": speedup, "bit_identical": bool(identical),
+        }
+    return rows, metrics
+
+
+def gate_serving(metrics):
+    """CI pass/fail: the batched lowering must reproduce the dedicated
+    per-request solves bit-for-bit at every batch size (throughput is
+    archived for trend review, not gated — off-accelerator timings
+    jitter)."""
+    return [f"{name}: batched solve diverged from the looped single-solve "
+            f"oracle (serving-path regression)"
+            for name, m in metrics.items() if not m["bit_identical"]]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny lattice (CI-sized run)")
+    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--iters", type=int, default=12,
+                    help="fixed CG iterations per request (tol=0)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows/metrics/gate to PATH (fig3 schema)")
+    args = ap.parse_args(argv)
+
+    rows, metrics = measured_serving(args.smoke, args.engine, args.iters)
+    failures = gate_serving(metrics)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "metrics": metrics,
+                       "smoke": args.smoke, "mode": "serving",
+                       "gate": {"tolerance": None, "failures": failures}},
+                      f, indent=2)
+    if failures:
+        print("SERVING BIT-IDENTITY GATE FAILED:", *failures, sep="\n  ",
+              file=sys.stderr)
+        sys.exit(1)
+    return rows, metrics, failures
+
+
+if __name__ == "__main__":
+    main()

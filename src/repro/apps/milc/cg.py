@@ -33,7 +33,9 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import Field, LaunchGraph, TargetConfig, launch, target_sum
+from repro.core import (
+    BatchedField, Field, LaunchGraph, TargetConfig, launch, target_sum,
+)
 from repro.kernels.wilson_dslash import dslash
 from repro.kernels.wilson_dslash.ops import dslash_stencil_body
 
@@ -61,6 +63,15 @@ def _square_body(v):
 
 def _mul_body(v):
     return {"out": v["x"] * v["y"]}
+
+
+def _masked_fma_body(v):
+    """y + a*x where the per-request mask is set, y (bitwise) elsewhere.
+
+    The frozen branch must be a *select*, not arithmetic masking: y + 0*x
+    flips -0.0 to +0.0 and poisons on non-finite x, so a converged
+    request's state would drift from its single-solve bits."""
+    return {"out": jnp.where(v["m"] > 0, v["y"] + v["a"] * v["x"], v["y"])}
 
 
 def _m_g5_body(v, *, kappa):
@@ -118,6 +129,51 @@ def fused_cg_update(x: Field, r: Field, p: Field, ap: Field, alpha,
     return x.with_data(out["x_new"].data), r.with_data(out["r_new"].data), out["rr"]
 
 
+def masked_cg_update_graph(ncomp: int) -> LaunchGraph:
+    """The batched-serving variant of :func:`cg_update_graph`: the x/r
+    updates select per request on the runtime mask scalar ``m`` (1 while
+    the request iterates, 0 once converged), so a frozen slot's state and
+    residual are bitwise untouched while live slots update exactly as the
+    unmasked chain would."""
+    return (
+        LaunchGraph("cg_update_masked")
+        .add(_masked_fma_body, {"x": "p", "y": "x", "a": "alpha", "m": "m"},
+             {"out": ncomp}, rename={"out": "x_new"})
+        .add(_masked_fma_body, {"x": "ap", "y": "r", "a": "neg_alpha",
+                                "m": "m"},
+             {"out": ncomp}, rename={"out": "r_new"})
+        .add(_square_body, {"x": "r_new"}, {"out": ncomp},
+             rename={"out": "rr_prod"})
+        .add_reduce("rr_prod", op="sum", name="rr")
+    )
+
+
+def fused_masked_cg_update(x, r, p, ap, alpha, mask, config: TargetConfig):
+    """Per-request-masked CG update chain, one fused launch over the whole
+    batch.  ``alpha`` and ``mask`` are per-request ``(batch,)`` scalars."""
+    out = masked_cg_update_graph(x.ncomp).launch(
+        {"x": x, "r": r, "p": p, "ap": ap},
+        scalars={"alpha": alpha, "neg_alpha": -alpha, "m": mask},
+        config=config,
+        outputs=("x_new", "r_new", "rr"),
+        out_layouts={"x_new": x.layout, "r_new": r.layout},
+    )
+    return (x.with_data(out["x_new"].data), r.with_data(out["r_new"].data),
+            out["rr"])
+
+
+def fused_masked_xpay(y, a, x, mask, config: TargetConfig):
+    """Masked p-update: r + beta*p where the request is live, p bitwise
+    frozen elsewhere (the batched form of :func:`fused_xpay`)."""
+    g = LaunchGraph("cg_xpay_masked").add(
+        _masked_fma_body, {"x": "x", "y": "y", "a": "a", "m": "m"},
+        {"out": x.ncomp}
+    )
+    out = g.launch({"x": x, "y": y}, scalars={"a": a, "m": mask},
+                   config=config, out_layouts={"out": x.layout})["out"]
+    return x.with_data(out.data)
+
+
 def dot(x: Field, y: Field, config: TargetConfig) -> jnp.ndarray:
     """<x, y> as the real inner product over all components/sites.
 
@@ -128,6 +184,19 @@ def dot(x: Field, y: Field, config: TargetConfig) -> jnp.ndarray:
     prod = launch(lambda v: {"p": v["x"] * v["y"]}, {"x": x, "y": y},
                   {"p": x.ncomp}, config=config)["p"]
     return target_sum(prod, config).sum()
+
+
+def batched_dot(x: BatchedField, y: BatchedField,
+                config: TargetConfig) -> jnp.ndarray:
+    """Per-request <x, y> over a batch, shape (batch,) — each element
+    bitwise :func:`dot` of the corresponding slots: the elementwise product
+    is lowering-independent and the batched ``target_sum`` folds each batch
+    row in the single-Field accumulation order."""
+    g = LaunchGraph("dot_prod").add(_mul_body, {"x": "x", "y": "y"},
+                                    {"out": x.ncomp}, rename={"out": "p"})
+    prod = g.launch({"x": x, "y": y}, config=config,
+                    out_layouts={"p": x.layout})["p"]
+    return target_sum(prod, config).sum(axis=-1)
 
 
 def g5(psi: Field, config: TargetConfig) -> Field:
@@ -169,14 +238,19 @@ def wilson_normal_graph(kappa: float) -> LaunchGraph:
 
 def make_fused_normal(u: Field, kappa: float, config: TargetConfig):
     """Returns apply(p) -> (A p, <p, A p>) through the fused graph
-    (A = M^dag M); ap keeps p's pytree identity for the while_loop carry."""
+    (A = M^dag M); ap keeps p's pytree identity for the while_loop carry.
+    ``p`` may be a BatchedField (the gauge field is shared across the
+    batch): ap comes back batched and the inner product per request,
+    shape (batch,)."""
     graph = wilson_normal_graph(float(kappa))
 
-    def apply(p: Field):
+    def apply(p):
         out = graph.launch({"p": p, "u": u}, config=config,
                            outputs=("ap", "pap"),
                            out_layouts={"ap": p.layout})
-        return p.with_data(out["ap"].data), out["pap"].sum()
+        # axis=-1 folds the per-component partials: a scalar for a Field,
+        # (batch,) for a BatchedField — bitwise the 1-D sum either way
+        return p.with_data(out["ap"].data), out["pap"].sum(axis=-1)
 
     return apply
 
@@ -260,3 +334,104 @@ def cg(
     rr0 = gdot(r0, r0)
     x, r, p, rr, it = jax.lax.while_loop(cond, body, (x0, r0, p0, rr0, jnp.int32(0)))
     return CGResult(x=x, iterations=it, residual=rr / b2)
+
+
+# -- batched CG (multi-simulation serving) --------------------------------------
+
+class BatchedCGState(NamedTuple):
+    """Per-slot CG state for a batch of independent same-lattice solves.
+
+    Slot semantics: ``b2 > 0`` and ``rr / b2 > tol`` and ``it < max_iter``
+    means the slot is live; an empty slot (all-zero rhs) has ``b2 == 0``
+    and is inert (``0/0`` compares False), so a partially filled batch
+    runs without special-casing."""
+
+    x: BatchedField
+    r: BatchedField
+    p: BatchedField
+    rr: jnp.ndarray   # (batch,) |r|^2 per slot
+    b2: jnp.ndarray   # (batch,) |rhs|^2 per slot
+    it: jnp.ndarray   # (batch,) int32, active iterations taken
+
+
+class BatchedCGResult(NamedTuple):
+    x: BatchedField
+    iterations: jnp.ndarray  # (batch,) int32
+    residual: jnp.ndarray    # (batch,) final |r|^2 / |b|^2 per slot
+
+
+def batched_cg_state(rhs: BatchedField, config: TargetConfig) -> BatchedCGState:
+    """Initial state: x = 0, r = p = rhs, per-slot norms — each slot set up
+    exactly as :func:`cg` sets up a single solve."""
+    b2 = batched_dot(rhs, rhs, config)
+    x0 = rhs.with_data(jnp.zeros_like(rhs.data))
+    return BatchedCGState(x=x0, r=rhs, p=rhs, rr=b2, b2=b2,
+                          it=jnp.zeros((rhs.batch,), jnp.int32))
+
+
+def batched_cg_active(state: BatchedCGState, *, tol: float,
+                      max_iter: int) -> jnp.ndarray:
+    """(batch,) liveness mask — per slot, exactly the single-solve loop
+    condition ``rr/b2 > tol and it < max_iter`` (NaN-false for empty
+    slots, whose b2 is 0)."""
+    return jnp.logical_and(state.rr / state.b2 > tol,
+                           state.it < max_iter)
+
+
+def batched_cg_iteration(
+    state: BatchedCGState,
+    apply_a_dot,
+    *,
+    config: TargetConfig,
+    tol: float,
+    max_iter: int,
+) -> BatchedCGState:
+    """One convergence-masked CG iteration over the whole batch: the fused
+    normal-operator launch and the fused masked update chain each run ONCE
+    for the full stack.  A live slot takes exactly the single-solve step
+    (bitwise: the masked kernels select the identically computed update);
+    a converged/empty slot's x, r, p, rr are bitwise frozen — it stays in
+    the batch without perturbing anyone's residuals until the scheduler
+    drains it."""
+    act = batched_cg_active(state, tol=tol, max_iter=max_iter)
+    m = act.astype(state.r.dtype)
+    ap, pap = apply_a_dot(state.p)
+    # guard the frozen lanes' divides (their alpha/beta are never selected)
+    alpha = jnp.where(act, state.rr / jnp.where(act, pap, 1.0), 0.0)
+    x, r, rr_vec = fused_masked_cg_update(
+        state.x, state.r, state.p, ap, alpha, m, config)
+    rr_new = jnp.where(act, rr_vec.sum(axis=-1), state.rr)
+    beta = jnp.where(act, rr_new / jnp.where(act, state.rr, 1.0), 0.0)
+    p = fused_masked_xpay(r, beta, state.p, m, config)
+    return BatchedCGState(x=x, r=r, p=p, rr=rr_new, b2=state.b2,
+                          it=state.it + act.astype(state.it.dtype))
+
+
+def cg_batched(
+    apply_a_dot,
+    rhs: BatchedField,
+    *,
+    config: TargetConfig,
+    tol: float = 1e-8,
+    max_iter: int = 500,
+) -> BatchedCGResult:
+    """CG on a stack of independent right-hand sides under one shared
+    operator, per-request convergence-masked: every iteration runs one
+    fused operator launch and one fused update launch for the whole batch,
+    and each slot's trajectory is bit-identical to :func:`cg` on that slot
+    alone (asserted in tests/test_batch.py).  The loop runs until every
+    slot has converged or hit max_iter; slots that finish early ride along
+    frozen."""
+
+    state0 = batched_cg_state(rhs, config)
+
+    def cond(state):
+        return jnp.any(batched_cg_active(state, tol=tol, max_iter=max_iter))
+
+    def body(state):
+        return batched_cg_iteration(state, apply_a_dot, config=config,
+                                    tol=tol, max_iter=max_iter)
+
+    state = jax.lax.while_loop(cond, body, state0)
+    return BatchedCGResult(x=state.x, iterations=state.it,
+                           residual=state.rr / state.b2)

@@ -37,13 +37,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    Field, Layout, SOA, TargetConfig, compat, overlap_launch, tileable_layout,
+    BatchedField, Field, Layout, SOA, TargetConfig, compat, overlap_launch,
+    tileable_layout,
 )
 from repro.core import halo as halo_mod
 from repro.kernels.wilson_dslash.ops import dslash_halo
 from repro.lattice import Domain
+from .cg import (
+    BatchedCGResult, CGResult, cg, cg_batched, dot, make_fused_normal,
+    make_wilson_op, wilson_normal_graph,
+)
 from . import fields
-from .cg import CGResult, cg, dot, make_fused_normal, make_wilson_op, wilson_normal_graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +83,28 @@ def solve(cfg: MilcConfig, u: Field, b: Field) -> CGResult:
              max_iter=cfg.max_iter,
              apply_a_dot=make_fused_normal(u, cfg.kappa, cfg.target))
     return res
+
+
+def solve_batched(cfg: MilcConfig, u: Field, bs) -> BatchedCGResult:
+    """CG-solve a stack of sources against ONE shared gauge field through
+    batched launches: per iteration, one fused operator pallas_call and one
+    fused masked-update pallas_call cover the whole batch.
+
+    ``bs`` is a sequence of same-lattice source Fields or an already-stacked
+    BatchedField.  Each slot's trajectory — rhs, every alpha/beta, the
+    iteration count, the final x — is bit-identical to ``solve(cfg, u, b)``
+    on that source alone: the rhs is computed per request through the
+    single-lattice M^dag path before stacking, and converged slots are
+    frozen by select-masking, never arithmetic (see cg._masked_fma_body)."""
+    _, apply_mdag, _ = make_wilson_op(u, cfg.kappa, cfg.target)
+    if isinstance(bs, BatchedField):
+        rhs = BatchedField.stack(
+            [apply_mdag(b) for b in bs.unstack()], name="rhs")
+    else:
+        rhs = BatchedField.stack([apply_mdag(b) for b in bs], name="rhs")
+    return cg_batched(
+        make_fused_normal(u, cfg.kappa, cfg.target), rhs,
+        config=cfg.target, tol=cfg.tol, max_iter=cfg.max_iter)
 
 
 def tune_solve_graphs(cfg: MilcConfig, u: Field, b: Field, **tune_kw):

@@ -25,7 +25,7 @@ Version gates          ->  core.compat   (shard_map / make_mesh across jax
 from .layout import (  # noqa: F401
     AOS, SOA, Layout, LayoutKind, aosoa, parse_layout, tileable_layout,
 )
-from .field import Field  # noqa: F401
+from .field import BatchedField, Field  # noqa: F401
 from .plan import LoweringPlan  # noqa: F401
 from .target import (  # noqa: F401
     TargetConfig,

@@ -18,7 +18,7 @@ import numpy as np
 
 from .layout import Layout, SOA
 
-__all__ = ["Field"]
+__all__ = ["Field", "BatchedField"]
 
 
 @dataclasses.dataclass
@@ -101,6 +101,107 @@ class Field:
         )
 
 
+@dataclasses.dataclass
+class BatchedField:
+    """A stack of ``batch`` independent same-shape Fields, one leading axis.
+
+    data has shape ``(batch,) + layout.physical_shape(ncomp, nsites)`` —
+    every batch element is an ordinary Field's physical array, so
+    ``element(b)`` / ``unstack()`` round-trip bitwise.  The serving layer
+    (launch.serve) packs many small simulations into one of these and the
+    fused launch lowers the whole stack through a single kernel
+    (core.fuse grows a leading grid axis).
+    """
+
+    name: str
+    batch: int
+    ncomp: int
+    lattice: Tuple[int, ...]
+    layout: Layout
+    data: jax.Array
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def stack(cls, fields, name=None):
+        """Stack same-(ncomp, lattice, layout) Fields along a new batch axis."""
+        fields = list(fields)
+        if not fields:
+            raise ValueError("BatchedField.stack needs at least one Field")
+        f0 = fields[0]
+        for f in fields[1:]:
+            if (f.ncomp, f.lattice, f.layout) != (f0.ncomp, f0.lattice, f0.layout):
+                raise ValueError(
+                    f"cannot stack {f!r} with {f0!r}: batch elements must "
+                    f"share ncomp, lattice and layout")
+        data = jnp.stack([f.data for f in fields])
+        return cls(name or f0.name, len(fields), f0.ncomp, f0.lattice,
+                   f0.layout, data)
+
+    @classmethod
+    def zeros(cls, name, batch, ncomp, lattice, layout=SOA, dtype=jnp.float32):
+        nsites = math.prod(lattice)
+        shape = (batch,) + layout.physical_shape(ncomp, nsites)
+        return cls(name, batch, ncomp, tuple(lattice), layout,
+                   jnp.zeros(shape, dtype))
+
+    @classmethod
+    def from_canonical(cls, name, canonical, lattice, layout=SOA):
+        """canonical: (batch, ncomp, *lattice) or (batch, ncomp, nsites)."""
+        canonical = jnp.asarray(canonical)
+        batch, ncomp = canonical.shape[:2]
+        nsites = math.prod(lattice)
+        flat = canonical.reshape(batch, ncomp, nsites)
+        return cls(name, batch, ncomp, tuple(lattice), layout,
+                   jax.vmap(layout.pack)(flat))
+
+    # -- views -----------------------------------------------------------------
+
+    @property
+    def nsites(self) -> int:
+        return math.prod(self.lattice)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def element(self, b: int) -> Field:
+        """Batch element ``b`` as an ordinary Field (bitwise the stacked data)."""
+        return Field(f"{self.name}[{b}]", self.ncomp, self.lattice,
+                     self.layout, self.data[b])
+
+    def unstack(self):
+        return [self.element(b) for b in range(self.batch)]
+
+    def canonical(self) -> jax.Array:
+        """(batch, ncomp, nsites) logical view."""
+        return jax.vmap(self.layout.unpack)(self.data)
+
+    def canonical_nd(self) -> jax.Array:
+        """(batch, ncomp, *lattice) logical view."""
+        return self.canonical().reshape((self.batch, self.ncomp) + self.lattice)
+
+    def to_numpy(self) -> np.ndarray:
+        return np.asarray(self.canonical_nd())
+
+    # -- functional updates ----------------------------------------------------
+
+    def with_data(self, data: jax.Array) -> "BatchedField":
+        return dataclasses.replace(self, data=data)
+
+    def with_element(self, b, field: Field) -> "BatchedField":
+        """Replace batch slot ``b`` with a Field's data (same shape/layout)."""
+        f = field.as_layout(self.layout)
+        return dataclasses.replace(self, data=self.data.at[b].set(f.data))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"BatchedField({self.name!r}, batch={self.batch}, "
+            f"ncomp={self.ncomp}, lattice={self.lattice}, "
+            f"layout={self.layout.name}, dtype={self.dtype})"
+        )
+
+
 # Fields are pytrees: data is the leaf, everything else is static metadata.
 def _field_flatten(f: Field):
     return (f.data,), (f.name, f.ncomp, f.lattice, f.layout)
@@ -112,3 +213,16 @@ def _field_unflatten(aux, children):
 
 
 jax.tree_util.register_pytree_node(Field, _field_flatten, _field_unflatten)
+
+
+def _bfield_flatten(f: BatchedField):
+    return (f.data,), (f.name, f.batch, f.ncomp, f.lattice, f.layout)
+
+
+def _bfield_unflatten(aux, children):
+    name, batch, ncomp, lattice, layout = aux
+    return BatchedField(name, batch, ncomp, lattice, layout, children[0])
+
+
+jax.tree_util.register_pytree_node(
+    BatchedField, _bfield_flatten, _bfield_unflatten)

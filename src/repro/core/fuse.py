@@ -101,7 +101,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import plan as plan_mod
-from .field import Field
+from .field import BatchedField, Field
 from .layout import Layout, LayoutKind
 from .plan import VIEW_BLOCK, LoweringPlan
 from .stencil import halo_pad, halo_pad_physical
@@ -431,13 +431,24 @@ class LaunchGraph:
 
     def reduce_info(self) -> Dict[str, Tuple[str, str]]:
         """reduce output name -> (source graph value, monoid op) — what the
-        overlap scheduler needs to combine per-slab partials."""
-        return {
-            out: (vname, st.op)
-            for st in self._stages if st.kind == "reduce"
-            for (_, out, _, _) in st.outs
-            for (_, vname) in st.ins
-        }
+        overlap scheduler needs to combine per-slab partials.  The mapping
+        is exact per (output, input) pair: a reduce stage folds exactly one
+        graph value, and a stage that somehow carries several inputs is
+        rejected here rather than silently keyed on the last one (which
+        would mis-combine overlap partials)."""
+        info: Dict[str, Tuple[str, str]] = {}
+        for st in self._stages:
+            if st.kind != "reduce":
+                continue
+            if len(st.ins) != 1:
+                raise ValueError(
+                    f"reduce stage producing {[o for (_, o, _, _) in st.outs]} "
+                    f"has {len(st.ins)} inputs {[v for (_, v) in st.ins]}; a "
+                    f"terminal reduction folds exactly one graph value")
+            ((_, vname),) = st.ins
+            for (_, out, _, _) in st.outs:
+                info[out] = (vname, st.op)
+        return info
 
     def _required_rings(self, outputs: Sequence[str]) -> Dict[str, int]:
         """Backward width analysis: minimum valid halo ring each graph value
@@ -505,10 +516,18 @@ class LaunchGraph:
         # halos), so they share table entries: the strategy choice lives in
         # the persisted plan's halo field, not the key
         halo_key = "pre" if halo == "overlap" else halo
+        # a batched launch tunes (and persists winners) per batch size and
+        # per batched-vs-shared input split; batch=0 keeps pre-batch keys
+        batch = max((int(getattr(ins[n], "batch", 0)) for n in ordered_ins),
+                    default=0)
+        batch_key = 0
+        if batch:
+            batch_key = (batch,) + tuple(
+                int(bool(getattr(ins[n], "batch", 0))) for n in ordered_ins)
         return plan_mod.graph_plan_key(
             self.plan_signature(), engine=config.engine, halo=halo_key,
             outputs=tuple(outputs), inputs=inputs, lattice=tuple(lattice),
-            backend=jax.default_backend())
+            backend=jax.default_backend(), batch=batch_key)
 
     def bytes_moved(
         self,
@@ -595,6 +614,18 @@ class LaunchGraph:
                 f"halo={halo!r} only applies to graphs with stencil stages")
 
         first = next(iter(ins.values()))
+        # leading batch axis: BatchedField inputs stack `batch` independent
+        # same-shape lattices; plain Fields are shared across the batch
+        # (e.g. one gauge field serving many right-hand sides)
+        in_batch = {n: int(getattr(f, "batch", 0)) for n, f in ins.items()}
+        batch = max(in_batch.values(), default=0)
+        if batch:
+            bad_b = {n: b for n, b in in_batch.items() if b not in (0, batch)}
+            if bad_b:
+                raise ValueError(
+                    f"batched inputs disagree on the batch size: {bad_b} "
+                    f"vs {batch}; every BatchedField in one launch must "
+                    f"stack the same number of lattices")
         double = sorted(set(ins) & set(scalars))
         if double:
             raise ValueError(
@@ -732,9 +763,12 @@ class LaunchGraph:
         engine, interpret = plan.engine, plan.interpret
         vvl, bx = plan.vvl, plan.bx
 
+        in_batched = tuple(bool(in_batch[n]) for n in ordered_ins)
         key = (
             plan,
             lattice,
+            batch,
+            in_batched,
             tuple(st.signature() for st in self._stages),
             tuple(
                 (n, ins[n].ncomp, str(ins[n].dtype), ins[n].layout,
@@ -765,6 +799,8 @@ class LaunchGraph:
                 vvl=vvl,
                 bx=bx,
                 interpret=interpret,
+                batch=batch,
+                in_batched=in_batched,
             )
             if stencil:  # only the stencil lowering is view-sensitive
                 build_kw["view"] = plan.view
@@ -777,17 +813,36 @@ class LaunchGraph:
             _CACHE.move_to_end(key)
 
         datas = tuple(ins[n].data for n in ordered_ins)
-        svals = tuple(
-            jnp.asarray(scalars[n], first.dtype).reshape(1, 1)
-            for n in ordered_scalars
-        )
+        if batch:
+            # scalars may be per-request, shape (batch,) — e.g. the masked
+            # CG's per-slot alpha/beta — or plain scalars broadcast to all
+            svals = []
+            for n in ordered_scalars:
+                v = jnp.asarray(scalars[n], first.dtype)
+                if v.ndim == 0:
+                    v = jnp.broadcast_to(v, (batch,))
+                elif v.shape != (batch,):
+                    raise ValueError(
+                        f"batched launch scalar {n!r} must be a scalar or a "
+                        f"({batch},) per-request vector, got shape {v.shape}")
+                svals.append(v.reshape(batch, 1, 1))
+            svals = tuple(svals)
+        else:
+            svals = tuple(
+                jnp.asarray(scalars[n], first.dtype).reshape(1, 1)
+                for n in ordered_scalars
+            )
         results = fn(datas, svals)
 
         out: Dict[str, Union[Field, jax.Array]] = {}
         ordered_out = list(field_outputs) + list(red_outputs)
         for o, val in zip(ordered_out, results):
             if o in red_names:
-                out[o] = val
+                out[o] = val  # (ncomp,) or batched (batch, ncomp)
+            elif batch:
+                ncomp, _ = out_info[o]
+                out[o] = BatchedField(o, batch, ncomp, lattice,
+                                      out_layouts[o], val)
             else:
                 ncomp, _ = out_info[o]
                 out[o] = Field(o, ncomp, lattice, out_layouts[o], val)
@@ -946,16 +1001,19 @@ class LaunchGraph:
         vvl: int,
         bx: int,
         interpret: bool,
+        batch: int = 0,
+        in_batched: Sequence[bool] = (),
     ) -> Callable:
         run_stages = self._run_stages
         nsites = int(math.prod(lattice))
         red_ops = {o: _RED_OPS[st.op] for st in self._stages
                    if st.kind == "reduce" for (_, o, _, _) in st.outs}
+        if not in_batched:
+            in_batched = (False,) * len(ordered_ins)
 
         if engine == "jnp":
 
-            def fn(datas, svals):
-                _STATS["traces"] += 1
+            def one(datas, svals):
                 values = {}
                 for n, (_, lay), d in zip(ordered_ins, in_meta, datas):
                     values[n] = lay.unpack(d)
@@ -970,22 +1028,56 @@ class LaunchGraph:
                         for o in red_outputs]
                 return tuple(res)
 
+            if batch:
+                # one trace, vmapped over the stack; shared (plain Field)
+                # inputs broadcast with in_axes=None — the batched analogue
+                # of the whole-lattice oracle, element-bitwise identical to
+                # running `one` per batch element
+                vone = jax.vmap(one, in_axes=(
+                    tuple(0 if b else None for b in in_batched), 0))
+
+                def fn(datas, svals):
+                    _STATS["traces"] += 1
+                    return vone(datas, svals)
+            else:
+
+                def fn(datas, svals):
+                    _STATS["traces"] += 1
+                    return one(datas, svals)
+
             return jax.jit(fn)
 
-        # pallas: the whole chain is ONE pallas_call over the site-block grid
-        grid = (nsites // vvl,)
+        # pallas: the whole chain is ONE pallas_call over the site-block
+        # grid — batched launches grow a leading batch grid axis, so the
+        # grid is (batch, nblocks) and every BlockSpec picks its batch row
+        grid = (batch, nsites // vvl) if batch else (nsites // vvl,)
         nin, nsc = len(ordered_ins), len(ordered_scalars)
-        in_specs = build_in_specs(in_meta, vvl) + [
-            pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in range(nsc)
-        ]
+        in_specs = build_in_specs(in_meta, vvl)
         out_shapes, out_block_specs = build_out_specs(
             field_outputs, out_info, out_layouts, nsites, vvl
         )
         red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
+        if batch:
+            in_specs = _batch_specs(in_specs, in_batched)
+            in_specs += [pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0))
+                         for _ in range(nsc)]
+            out_shapes = _batch_shapes(out_shapes, batch)
+            out_block_specs = _batch_specs(
+                out_block_specs, [True] * len(out_block_specs))
+            red_shapes = _batch_shapes(red_shapes, batch)
+            red_specs = [
+                pl.BlockSpec((1,) + tuple(s.block_shape),
+                             lambda b, i: (b, 0, 0))
+                for s in red_specs
+            ]
+        else:
+            in_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0))
+                         for _ in range(nsc)]
         out_shapes += red_shapes
         out_block_specs += red_specs
         nfield = len(field_outputs)
         name = self.name
+        red_axis = 1 if batch else 0
 
         def fused_kernel(*refs):
             in_refs = refs[:nin]
@@ -993,20 +1085,24 @@ class LaunchGraph:
             out_refs = refs[nin + nsc : nin + nsc + nfield]
             acc_refs = refs[nin + nsc + nfield :]
             values = {}
-            for n, (ncomp, lay), r in zip(ordered_ins, in_meta, in_refs):
-                values[n] = lay.block_to_canonical(r[...], ncomp, vvl)
+            for n, (ncomp, lay), bat, r in zip(
+                    ordered_ins, in_meta, in_batched, in_refs):
+                blk = r[...][0] if (batch and bat) else r[...]
+                values[n] = lay.block_to_canonical(blk, ncomp, vvl)
             for n, r in zip(ordered_scalars, sc_refs):
-                values[n] = r[...]
+                values[n] = r[...][0] if batch else r[...]
             values, partials = run_stages(values)
             for o, r in zip(field_outputs, out_refs):
                 ncomp, dtype = out_info[o]
-                r[...] = out_layouts[o].canonical_to_block(
+                blk = out_layouts[o].canonical_to_block(
                     values[o].astype(dtype), ncomp, vvl
                 )
+                r[...] = blk[None] if batch else blk
             for o, r in zip(red_outputs, acc_refs):
                 combine, init, _ = red_ops[o]
+                part = partials[o][:, None].astype(out_info[o][1])
                 _accumulate(r, combine, init,
-                            partials[o][:, None].astype(out_info[o][1]))
+                            part[None] if batch else part, axis=red_axis)
 
         def fn(datas, svals):
             _STATS["traces"] += 1
@@ -1025,9 +1121,9 @@ class LaunchGraph:
             res = call(*datas, *svals)
             if len(out_shapes) == 1:
                 res = (res,)
-            # reduction accumulators (ncomp, 1) -> (ncomp,)
+            # reduction accumulators (..., ncomp, 1) -> (..., ncomp)
             return tuple(
-                r[:, 0] if i >= nfield else r for i, r in enumerate(res)
+                r[..., 0] if i >= nfield else r for i, r in enumerate(res)
             )
 
         return jax.jit(fn)
@@ -1053,12 +1149,16 @@ class LaunchGraph:
         bx: int,
         interpret: bool,
         view: str,
+        batch: int = 0,
+        in_batched: Sequence[bool] = (),
     ) -> Callable:
         run_nd = self._run_stages_nd
         site_ndim = len(lattice)
         site_dims = tuple(range(1, site_ndim + 1))
         red_ops = {o: _RED_OPS[st.op] for st in self._stages
                    if st.kind == "reduce" for (_, o, _, _) in st.outs}
+        if not in_batched:
+            in_batched = (False,) * len(ordered_ins)
 
         def to_halo_nd(n, meta, lat, ring, d):
             """Physical data -> canonical (ncomp, *padded_lattice)."""
@@ -1070,8 +1170,7 @@ class LaunchGraph:
 
         if engine == "jnp":
 
-            def fn(datas, svals):
-                _STATS["traces"] += 1
+            def one(datas, svals):
                 values = {}
                 for n, meta, lat, ring, d in zip(
                         ordered_ins, in_meta, in_lats, in_rings, datas):
@@ -1089,6 +1188,19 @@ class LaunchGraph:
                 res += [partials[o].astype(out_info[o][1])
                         for o in red_outputs]
                 return tuple(res)
+
+            if batch:
+                vone = jax.vmap(one, in_axes=(
+                    tuple(0 if b else None for b in in_batched), 0))
+
+                def fn(datas, svals):
+                    _STATS["traces"] += 1
+                    return vone(datas, svals)
+            else:
+
+                def fn(datas, svals):
+                    _STATS["traces"] += 1
+                    return one(datas, svals)
 
             return jax.jit(fn)
 
@@ -1109,7 +1221,8 @@ class LaunchGraph:
         # an aligned AoSoA output is packed in VMEM and written as native
         # blocks.  Non-AoSoA values take the staged path either way (SOA
         # staging is a view, AoS a transpose).
-        grid = (lattice[0] // bx,)
+        grid = ((batch, lattice[0] // bx) if batch
+                else (lattice[0] // bx,))
         nin, nsc = len(ordered_ins), len(ordered_scalars)
         hlats, native_in = _block_geometry(
             ordered_ins, in_meta, in_lats, in_rings, halo, view,
@@ -1121,9 +1234,7 @@ class LaunchGraph:
                 stage_shapes.append((hsites // lay.sal, ncomp, lay.sal))
             else:
                 stage_shapes.append((ncomp,) + hlat)
-        in_specs = build_halo_in_specs(stage_shapes) + [
-            pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in range(nsc)
-        ]
+        in_specs = build_halo_in_specs(stage_shapes)
         if view == VIEW_BLOCK:
             # _block_geometry already rejected misaligned AoSoA outputs
             out_shapes, out_block_specs, native_out = build_block_out_specs(
@@ -1135,24 +1246,43 @@ class LaunchGraph:
             )
             native_out = [False] * len(field_outputs)
         red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
+        if batch:
+            in_specs = _batch_specs(in_specs, in_batched)
+            in_specs += [pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0))
+                         for _ in range(nsc)]
+            out_shapes = _batch_shapes(out_shapes, batch)
+            out_block_specs = _batch_specs(
+                out_block_specs, [True] * len(out_block_specs))
+            red_shapes = _batch_shapes(red_shapes, batch)
+            red_specs = [
+                pl.BlockSpec((1,) + tuple(s.block_shape),
+                             lambda b, i: (b, 0, 0))
+                for s in red_specs
+            ]
+        else:
+            in_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0))
+                         for _ in range(nsc)]
         out_shapes += red_shapes
         out_block_specs += red_specs
         nfield = len(field_outputs)
         inner_int = int(math.prod(lattice[1:]))
         name = self.name
+        red_axis = 1 if batch else 0
 
         def fused_kernel(*refs):
             in_refs = refs[:nin]
             sc_refs = refs[nin : nin + nsc]
             out_refs = refs[nin + nsc : nin + nsc + nfield]
             acc_refs = refs[nin + nsc + nfield :]
-            i = pl.program_id(0)
+            i = pl.program_id(1) if batch else pl.program_id(0)
             xs = i * bx
             values = {}
-            for n, (ncomp, lay), hlat, ring, nat, r in zip(
+            for n, (ncomp, lay), hlat, ring, nat, bat, r in zip(
                     ordered_ins, in_meta, hlats, in_rings, native_in,
-                    in_refs):
-                arr = r[...]  # full halo'd stage (VMEM)
+                    in_batched, in_refs):
+                # full halo'd stage (VMEM); batched refs carry a leading
+                # length-1 batch-row axis
+                arr = r[...][0] if (batch and bat) else r[...]
                 rows = bx + 2 * ring
                 if nat:
                     # block-coordinate rebase: each x-plane of the halo'd
@@ -1177,7 +1307,7 @@ class LaunchGraph:
                     )
                 values[n] = (window, ring)
             for n, r in zip(ordered_scalars, sc_refs):
-                values[n] = (r[...], None)
+                values[n] = (r[...][0] if batch else r[...], None)
             values, partials = run_nd(values, site_ndim)
             for o, nat, r in zip(field_outputs, native_out, out_refs):
                 arr, ring = values[o]
@@ -1185,14 +1315,14 @@ class LaunchGraph:
                 if nat:  # pack the interior slab in VMEM: native blocks out
                     ncomp = out_info[o][0]
                     sal = out_layouts[o].sal
-                    r[...] = a0.reshape(
+                    a0 = a0.reshape(
                         ncomp, bx * inner_int // sal, sal).transpose(1, 0, 2)
-                else:
-                    r[...] = a0
+                r[...] = a0[None] if batch else a0
             for o, r in zip(red_outputs, acc_refs):
                 combine, init, _ = red_ops[o]
+                part = partials[o][:, None].astype(out_info[o][1])
                 _accumulate(r, combine, init,
-                            partials[o][:, None].astype(out_info[o][1]))
+                            part[None] if batch else part, axis=red_axis)
 
         def stage_in(n, meta, lat, ring, nat, d):
             if not nat:
@@ -1205,12 +1335,16 @@ class LaunchGraph:
         def fn(datas, svals):
             _STATS["traces"] += 1
             _STATS["pallas_calls"] += 1
-            staged = [
-                stage_in(n, meta, lat, ring, nat, d)
-                for n, meta, lat, ring, nat, d in zip(
+            staged = []
+            for n, meta, lat, ring, nat, bat, d in zip(
                     ordered_ins, in_meta, in_lats, in_rings, native_in,
-                    datas)
-            ]
+                    in_batched, datas):
+                if batch and bat:  # stage each batch element, stacked
+                    staged.append(jax.vmap(
+                        lambda x, _n=n, _m=meta, _l=lat, _r=ring, _na=nat:
+                        stage_in(_n, _m, _l, _r, _na, x))(d))
+                else:
+                    staged.append(stage_in(n, meta, lat, ring, nat, d))
             call = pl.pallas_call(
                 fused_kernel,
                 grid=grid,
@@ -1227,24 +1361,49 @@ class LaunchGraph:
                 res = (res,)
             out = []
             for idx, r in enumerate(res):
-                if idx >= nfield:  # reduction accumulator (ncomp, 1)
-                    out.append(r[:, 0])
+                if idx >= nfield:  # reduction accumulator (..., ncomp, 1)
+                    out.append(r[..., 0])
                 elif native_out[idx]:  # already the physical AoSoA array
                     out.append(r)
                 else:  # canonical nd -> requested physical layout
                     o = field_outputs[idx]
                     ncomp, _ = out_info[o]
-                    out.append(out_layouts[o].pack(r.reshape(ncomp, -1)))
+                    pack = (lambda a, _o=o, _nc=ncomp:
+                            out_layouts[_o].pack(a.reshape(_nc, -1)))
+                    out.append(jax.vmap(pack)(r) if batch else pack(r))
             return tuple(out)
 
         return jax.jit(fn)
 
 
-def _accumulate(ref, combine, init, partial):
-    """Grid-sequential accumulation into a constant-index-map buffer (the
-    fused analogue of core.reduce's partial-sum kernel)."""
+def _batch_specs(specs, batched) -> List[pl.BlockSpec]:
+    """Grow a leading batch grid axis on single-lattice BlockSpecs: a
+    batched operand gets a length-1 batch-row block selected by the batch
+    program id; a shared operand keeps its rank and ignores it."""
+    out = []
+    for spec, bat in zip(specs, batched):
+        shape, m = tuple(spec.block_shape), spec.index_map
+        if bat:
+            out.append(pl.BlockSpec(
+                (1,) + shape, lambda b, i, _m=m: (b,) + tuple(_m(i))))
+        else:
+            out.append(pl.BlockSpec(
+                shape, lambda b, i, _m=m: tuple(_m(i))))
+    return out
 
-    @pl.when(pl.program_id(0) == 0)
+
+def _batch_shapes(shapes, batch: int) -> List[jax.ShapeDtypeStruct]:
+    return [jax.ShapeDtypeStruct((batch,) + tuple(s.shape), s.dtype)
+            for s in shapes]
+
+
+def _accumulate(ref, combine, init, partial, axis: int = 0):
+    """Grid-sequential accumulation into a constant-index-map buffer (the
+    fused analogue of core.reduce's partial-sum kernel).  ``axis`` is the
+    site-block grid axis (1 when a leading batch axis is present: each
+    batch row initializes at its own first site block)."""
+
+    @pl.when(pl.program_id(axis) == 0)
     def _init():
         ref[...] = init(ref.shape, ref.dtype)
 

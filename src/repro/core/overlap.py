@@ -66,7 +66,7 @@ import jax.numpy as jnp
 
 from . import halo as halo_mod
 from . import plan as plan_mod
-from .field import Field
+from .field import BatchedField, Field
 from .layout import SOA
 from .plan import LoweringPlan
 from .target import TargetConfig
@@ -119,18 +119,21 @@ def split_boxes(
     return tuple(interior), boxes
 
 
-def _window(f: Field, box: Box, ring: int) -> Field:
+def _window(f, box: Box, ring: int):
     """Slice the halo'd window a sub-launch over ``box`` needs from a
     pre-halo'd input Field (ring ``ring``): halo'd coords
     ``[start, stop + 2*ring)`` per dim.  Windows stay SOA — arbitrary slab
     extents do not stay AoSoA-block-aligned, so ``sub_lattice_plan`` pins
     every sub-launch to the staged-nd view (a native-block outer plan still
     assembles into the requested output layout, bit-identically; the
-    per-site arithmetic is view-independent)."""
+    per-site arithmetic is view-independent).  BatchedField inputs window
+    every batch element identically (the box geometry is per-lattice)."""
     nd = f.canonical_nd()
-    sl = (slice(None),) + tuple(
-        slice(s, e + 2 * ring) for (s, e) in box)
-    w = nd[sl]
+    site_sl = tuple(slice(s, e + 2 * ring) for (s, e) in box)
+    if getattr(f, "batch", 0):
+        w = nd[(slice(None), slice(None)) + site_sl]
+        return BatchedField.from_canonical(f.name, w, tuple(w.shape[2:]), SOA)
+    w = nd[(slice(None),) + site_sl]
     return Field.from_canonical(f.name, w, tuple(w.shape[1:]), SOA)
 
 
@@ -200,16 +203,23 @@ def _split_launch(
     results = [(interior_box, launch_box(interior_box, ins_interior))]
     results += [(box, launch_box(box, ins_boundary)) for box in boundary]
 
+    batch = max((int(getattr(ins_boundary[n], "batch", 0)) for n in ext),
+                default=0)
     out: Dict[str, Union[Field, jax.Array]] = {}
     for o in field_outputs:
         first_val = results[0][1][o]
         ncomp, dtype = first_val.ncomp, first_val.dtype
-        acc = jnp.zeros((ncomp,) + lattice, dtype)
+        lead = (batch, ncomp) if batch else (ncomp,)
+        acc = jnp.zeros(lead + lattice, dtype)
         for box, res in results:
-            starts = (0,) + tuple(s for (s, _) in box)
+            starts = (0,) * len(lead) + tuple(s for (s, _) in box)
             acc = jax.lax.dynamic_update_slice(
                 acc, res[o].canonical_nd(), starts)
-        out[o] = Field.from_canonical(o, acc, lattice, out_layouts[o])
+        if batch:
+            out[o] = BatchedField.from_canonical(o, acc, lattice,
+                                                 out_layouts[o])
+        else:
+            out[o] = Field.from_canonical(o, acc, lattice, out_layouts[o])
     for o in red_outputs:
         from .fuse import reduce_combine
         combine = reduce_combine(red_ops[o])

@@ -434,8 +434,17 @@ def candidate_plans(
     max_candidates: int = 8,
     devices: Optional[int] = None,
     block_view: Optional[bool] = None,
+    batch: int = 0,
 ) -> Tuple[LoweringPlan, ...]:
     """Enumerate valid plans for the autotuner sweep, deterministically.
+
+    ``batch`` is the leading batch-axis extent of a batched launch (0 for
+    single-lattice launches).  The candidate *geometry* is per batch
+    element — vvl/bx tile one lattice, the batch axis is a whole extra grid
+    dimension — so the set is the same, but the tuner keys its sweep (and
+    persists winners) per batch size via ``graph_plan_key``; a sharded
+    overlap twin makes no sense for a packed serving batch, so the
+    halo="overlap" twins are dropped when ``batch > 0``.
 
     Site-local: vvl over the SAL-conforming divisors of nsites (evenly
     spread when more than ``max_candidates``).  Stencil: bx over the
@@ -480,7 +489,7 @@ def candidate_plans(
         if devices is None:
             import jax
             devices = jax.device_count()
-        with_overlap = halo == "pre" and devices > 1
+        with_overlap = halo == "pre" and devices > 1 and not batch
         if block_view is None:
             block_view = any(lay.kind is LayoutKind.AOSOA for lay in layouts)
         n_twins = (2 if with_overlap else 0) + (2 if block_view else 0)
@@ -522,13 +531,21 @@ def graph_plan_key(
     inputs,
     lattice: Tuple[int, ...],
     backend: str,
+    batch=0,
 ) -> str:
     """Stable string key for the persisted tune table: one entry per
     (graph signature, input layouts/dtypes, lattice shape, engine, halo,
-    outputs, backend).  The signature must be process-stable (kernel *names*
-    and structure, not function objects — see LaunchGraph.plan_signature)."""
-    blob = repr((signature, engine, halo, tuple(outputs), tuple(inputs),
-                 tuple(lattice), backend))
+    outputs, backend, batch shape).  The signature must be process-stable
+    (kernel *names* and structure, not function objects — see
+    LaunchGraph.plan_signature).  ``batch`` is the batched-launch key
+    component ((batch size, per-input batched flags) from
+    ``LaunchGraph.plan_key``); the falsy default keeps every pre-batch key
+    byte-identical, so existing persisted tables stay warm."""
+    parts = (signature, engine, halo, tuple(outputs), tuple(inputs),
+             tuple(lattice), backend)
+    if batch:
+        parts = parts + (batch,)
+    blob = repr(parts)
     digest = hashlib.sha256(blob.encode()).hexdigest()[:16]
     name = signature[0] if isinstance(signature, tuple) and signature else "g"
     return f"{name}|{backend}|{engine}|{digest}"

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .field import Field
+from .field import Field  # noqa: F401  (re-exported reduction operand type)
 from .plan import plan_for_launch
 from .target import TargetConfig
 
@@ -34,45 +34,69 @@ _MONOIDS = {
 }
 
 
-def _reduce(field: Field, config: Optional[TargetConfig], op: str) -> jax.Array:
+def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
     config = config or TargetConfig()
     combine, init, fold = _MONOIDS[op]
+    batch = int(getattr(field, "batch", 0))
     # lowering decisions (vvl conformance, interpret fallback, plan policy)
     # come from the planning layer, like every other launch
     plan = plan_for_launch(config, field.nsites, [field.layout])
     if plan.engine == "jnp":
-        return fold(field.canonical(), axis=1)
+        # batched: (batch, ncomp, nsites) -> (batch, ncomp); the per-row
+        # fold is the same whole-lattice fold as the single-Field path
+        return fold(field.canonical(), axis=-1)
 
     vvl = plan.vvl
     nsites, ncomp = field.nsites, field.ncomp
-    grid = (nsites // vvl,)
     layout = field.layout
+    blk = tuple(layout.block_shape(ncomp, vvl))
+    bmap = layout.block_index_map()
+    if batch:
+        # leading batch grid axis: each batch row accumulates its own
+        # (ncomp, vvl) partial in the same site-block order as the
+        # single-Field kernel — per-element bitwise identical
+        grid = (batch, nsites // vvl)
+        in_spec = pl.BlockSpec((1,) + blk,
+                               lambda b, i, _m=bmap: (b,) + tuple(_m(i)))
+        out_spec = pl.BlockSpec((1, ncomp, vvl), lambda b, i: (b, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((batch, ncomp, vvl), field.dtype)
+        blk_axis = 1
+    else:
+        grid = (nsites // vvl,)
+        in_spec = pl.BlockSpec(blk, bmap)
+        out_spec = pl.BlockSpec((ncomp, vvl), lambda i: (0, 0))
+        out_shape = jax.ShapeDtypeStruct((ncomp, vvl), field.dtype)
+        blk_axis = 0
 
     def kern(x_ref, acc_ref):
-        @pl.when(pl.program_id(0) == 0)
+        @pl.when(pl.program_id(blk_axis) == 0)
         def _init():
             acc_ref[...] = init(acc_ref.shape, acc_ref.dtype)
 
-        chunk = layout.block_to_canonical(x_ref[...], ncomp, vvl)
-        acc_ref[...] = combine(acc_ref[...], chunk)
+        x = x_ref[...][0] if batch else x_ref[...]
+        chunk = layout.block_to_canonical(x, ncomp, vvl)
+        acc_ref[...] = combine(acc_ref[...], chunk[None] if batch else chunk)
 
     partial = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec(layout.block_shape(ncomp, vvl), layout.block_index_map())],
-        out_specs=pl.BlockSpec((ncomp, vvl), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((ncomp, vvl), field.dtype),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=plan.interpret,
         name=f"target_{op}",
     )(field.data)
-    return fold(partial, axis=1)
+    return fold(partial, axis=-1)
 
 
-def target_sum(field: Field, config: Optional[TargetConfig] = None) -> jax.Array:
-    """targetDoubleSum: per-component sum over all local lattice sites."""
+def target_sum(field, config: Optional[TargetConfig] = None) -> jax.Array:
+    """targetDoubleSum: per-component sum over all local lattice sites.
+    A :class:`~repro.core.field.BatchedField` reduces per batch element to
+    ``(batch, ncomp)`` — each row bitwise the single-Field reduction."""
     return _reduce(field, config, "sum")
 
 
-def target_max(field: Field, config: Optional[TargetConfig] = None) -> jax.Array:
-    """Per-component max over all local lattice sites."""
+def target_max(field, config: Optional[TargetConfig] = None) -> jax.Array:
+    """Per-component max over all local lattice sites (per batch element
+    for a BatchedField)."""
     return _reduce(field, config, "max")

@@ -276,10 +276,12 @@ def plan_candidates_for(
     for s in lattice:
         nsites *= s
     layouts = [f.layout for f in ins.values()]
+    batch = max((int(getattr(f, "batch", 0)) for f in ins.values()),
+                default=0)
     return plan_mod.candidate_plans(
         config, nsites=nsites, layouts=layouts, stencil=graph.has_stencil,
         lattice=lattice, halo=halo, max_candidates=max_candidates,
-        block_view=block_view_for(graph, ins, outputs, halo))
+        block_view=block_view_for(graph, ins, outputs, halo), batch=batch)
 
 
 def autotune_graph(

@@ -1,27 +1,195 @@
-"""Production serving launcher: batched decode against KV/state caches.
+"""Production serving launcher: batched LM decode and batched lattice-solve
+serving.
+
+LM path (``--arch``): batched autoregressive decode against KV/state caches,
+as before.
+
+Solve path (``--solve``): a shape-bucketed request scheduler for
+multi-simulation serving.  Requests (source Fields) are admitted into
+per-lattice-shape queues; each bucket owns a fixed number of batch *slots*
+and replays ONE jitted convergence-masked batched CG iteration
+(train.serve_step.build_cg_serve_step) over all of its slots — one fused
+operator pallas_call + one fused masked-update pallas_call per tick,
+regardless of how many requests are packed in.  Completed solves are
+drained continuously: a converged (or max_iter'd) slot is harvested and
+refilled from the queue at the next tick, while in-flight slots are
+untouched — the masking is a bitwise select, so every request's
+trajectory is identical to a dedicated single-lattice solve
+(tests/test_serve.py asserts bit-identity against apps.milc.driver.solve).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke-arch
+  PYTHONPATH=src python -m repro.launch.serve --solve --requests 6 --slots 2
 """
 
 import argparse
+import dataclasses
 import time
+from collections import deque
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_arch
-from repro.models import init_params
-from repro.train.serve_step import build_serve_step, generate
+from repro.core import BatchedField, Field, TargetConfig
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--smoke-arch", action="store_true")
-    args = ap.parse_args()
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One inversion request: solve M x = b for the bucket's operator."""
+    rid: int
+    b: Field
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOutcome:
+    rid: int
+    x: Field
+    iterations: int
+    residual: float
+
+
+class _Bucket:
+    """All state for one lattice shape: the operator, a FIFO admission
+    queue, ``slots`` batch slots and the jitted masked-iteration step."""
+
+    def __init__(self, u: Field, kappa: float, config: TargetConfig,
+                 slots: int, tol: float, max_iter: int):
+        from repro.apps.milc.cg import make_wilson_op
+        from repro.train.serve_step import build_cg_serve_step
+
+        self.u, self.kappa, self.config = u, float(kappa), config
+        self.tol, self.max_iter, self.slots = tol, max_iter, slots
+        _, self.apply_mdag, _ = make_wilson_op(u, self.kappa, config)
+        self.step = build_cg_serve_step(u, self.kappa, config, tol=tol,
+                                        max_iter=max_iter)
+        self.queue: deque = deque()
+        self.slot_rid: list = [None] * slots
+        self.state = None  # lazily shaped from the first admitted source
+        self.iterations_run = 0
+
+    # -- slot state ------------------------------------------------------
+
+    def _init_state(self, proto: Field):
+        from repro.apps.milc.cg import BatchedCGState
+
+        z = BatchedField.zeros("x", self.slots, proto.ncomp, proto.lattice,
+                               proto.layout, dtype=proto.dtype)
+        v = jnp.zeros((self.slots,), proto.dtype)
+        self.state = BatchedCGState(x=z, r=z, p=z, rr=v, b2=v,
+                                    it=jnp.zeros((self.slots,), jnp.int32))
+
+    def _admit(self, slot: int, req: SolveRequest):
+        """Pack a request into a free slot: rhs and |rhs|^2 come through the
+        single-lattice M^dag / dot path (the exact values a dedicated
+        ``cg`` solve would start from), then land in the batch via
+        per-slot .at[slot].set writes — in-flight slots' bits never move."""
+        from repro.apps.milc.cg import BatchedCGState, dot
+
+        rhs = self.apply_mdag(req.b)
+        if self.state is None:
+            self._init_state(rhs)
+        b2 = dot(rhs, rhs, self.config)
+        st = self.state
+        x0 = rhs.with_data(jnp.zeros_like(rhs.data))
+        self.state = BatchedCGState(
+            x=st.x.with_element(slot, x0),
+            r=st.r.with_element(slot, rhs),
+            p=st.p.with_element(slot, rhs),
+            rr=st.rr.at[slot].set(b2),
+            b2=st.b2.at[slot].set(b2),
+            it=st.it.at[slot].set(0),
+        )
+        self.slot_rid[slot] = req.rid
+
+    def _harvest(self, slot: int) -> SolveOutcome:
+        st = self.state
+        out = SolveOutcome(
+            rid=self.slot_rid[slot],
+            x=st.x.element(slot),
+            iterations=int(st.it[slot]),
+            residual=float(st.rr[slot] / st.b2[slot]),
+        )
+        self.slot_rid[slot] = None
+        return out
+
+    # -- scheduler tick --------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_rid)
+
+    def tick(self) -> Dict[int, SolveOutcome]:
+        """Admit into free slots, run one masked batched iteration, drain
+        finished slots.  Returns {rid: outcome} for requests that completed
+        this tick."""
+        from repro.apps.milc.cg import batched_cg_active
+
+        for slot in range(self.slots):
+            if self.slot_rid[slot] is None and self.queue:
+                self._admit(slot, self.queue.popleft())
+        if not any(r is not None for r in self.slot_rid):
+            return {}
+        self.state = self.step(self.state)
+        self.iterations_run += 1
+        act = np.asarray(
+            batched_cg_active(self.state, tol=self.tol,
+                              max_iter=self.max_iter))
+        done = {}
+        for slot in range(self.slots):
+            if self.slot_rid[slot] is not None and not act[slot]:
+                out = self._harvest(slot)
+                done[out.rid] = out
+        return done
+
+
+class SolveServer:
+    """Shape-bucketed batched solve scheduler.
+
+    ``register(u, kappa)`` declares the operator for requests on
+    ``u.lattice``; ``submit`` enqueues sources; ``run`` drains every queue
+    to completion, interleaving ticks across buckets so mixed-shape
+    request streams make progress together.  Each bucket packs up to
+    ``slots`` heterogeneous requests into one batched launch chain."""
+
+    def __init__(self, config: TargetConfig, *, slots: int = 4,
+                 tol: float = 1e-8, max_iter: int = 500):
+        self.config = config
+        self.slots, self.tol, self.max_iter = slots, tol, max_iter
+        self.buckets: Dict[Tuple[int, ...], _Bucket] = {}
+
+    def register(self, u: Field, kappa: float,
+                 slots: Optional[int] = None) -> None:
+        """Declare the gauge field + kappa serving ``u.lattice``-shaped
+        requests (one operator per shape bucket)."""
+        self.buckets[u.lattice] = _Bucket(
+            u, kappa, self.config, slots or self.slots, self.tol,
+            self.max_iter)
+
+    def submit(self, req: SolveRequest) -> None:
+        if req.b.lattice not in self.buckets:
+            raise KeyError(
+                f"no operator registered for lattice {req.b.lattice}; "
+                f"known: {sorted(self.buckets)}")
+        self.buckets[req.b.lattice].queue.append(req)
+
+    def run(self) -> Dict[int, SolveOutcome]:
+        """Tick all buckets round-robin until every queue and slot is
+        drained.  Returns {rid: SolveOutcome}."""
+        results: Dict[int, SolveOutcome] = {}
+        while any(b.busy for b in self.buckets.values()):
+            for bucket in self.buckets.values():
+                if bucket.busy:
+                    results.update(bucket.tick())
+        return results
+
+
+# -- CLI -------------------------------------------------------------------
+
+def _main_decode(args):
+    from repro.configs import get_arch
+    from repro.models import init_params
+    from repro.train.serve_step import build_serve_step, generate
 
     cfg = get_arch(args.arch, smoke=args.smoke_arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -35,6 +203,57 @@ def main():
     dt = time.perf_counter() - t0
     print(f"{args.batch * args.steps} tokens in {dt:.2f}s")
     print(np.asarray(out)[0].tolist())
+
+
+def _main_solve(args):
+    from repro.apps.milc import driver, fields
+
+    cfg = driver.MilcConfig(lattice=(4, 4, 4, 8), kappa=0.10, tol=1e-8,
+                            max_iter=args.steps,
+                            target=TargetConfig(args.engine, vvl=128))
+    server = SolveServer(cfg.target, slots=args.slots, tol=cfg.tol,
+                         max_iter=cfg.max_iter)
+    shapes = [(4, 4, 4, 8), (4, 4, 8, 8)]
+    for i, lat in enumerate(shapes):
+        u = Field.from_numpy(
+            "u", fields.random_su3_gauge(lat, seed=i, hot=cfg.hot), lat,
+            cfg.layout)
+        server.register(u, cfg.kappa)
+        for j in range(args.requests // len(shapes)):
+            b = Field.from_numpy(
+                "b", fields.random_spinor(lat, seed=100 + 10 * i + j), lat,
+                cfg.layout)
+            server.submit(SolveRequest(rid=10 * i + j, b=b))
+    t0 = time.perf_counter()
+    results = server.run()
+    dt = time.perf_counter() - t0
+    ticks = sum(b.iterations_run for b in server.buckets.values())
+    print(f"{len(results)} solves in {dt:.2f}s "
+          f"({ticks} batched iterations across {len(server.buckets)} buckets)")
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"  rid={rid} lattice={r.x.lattice} iters={r.iterations} "
+              f"residual={r.residual:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=None, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--smoke-arch", action="store_true")
+    ap.add_argument("--solve", action="store_true",
+                    help="serve batched lattice solves instead of LM decode")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
+    args = ap.parse_args()
+    if args.solve:
+        _main_solve(args)
+    else:
+        if args.arch is None:
+            ap.error("--arch is required unless --solve is given")
+        _main_decode(args)
 
 
 if __name__ == "__main__":

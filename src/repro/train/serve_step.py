@@ -4,6 +4,11 @@
 against a KV/state cache of seq_len — exactly the decode_32k / long_500k
 shapes.  ``generate`` drives it for the runnable serving example (greedy
 or temperature sampling over a batch of requests).
+
+``build_cg_serve_step`` is the lattice-solver analogue: the jitted unit
+of work the request scheduler (launch/serve.py) replays between admission
+and drain — one convergence-masked batched CG iteration over a fixed
+(lattice, batch-slots) bucket.
 """
 
 from __future__ import annotations
@@ -35,12 +40,36 @@ def build_prefill(cfg: ArchConfig):
     return prefill
 
 
+def build_cg_serve_step(u, kappa: float, config, *, tol: float,
+                        max_iter: int):
+    """Jitted masked-iteration step for batched CG serving: (BatchedCGState)
+    -> BatchedCGState, one fused operator launch + one fused masked-update
+    launch for the whole slot batch.  Converged/empty slots ride along
+    bitwise frozen, so the scheduler can drain and refill them between
+    calls without perturbing in-flight solves (apps.milc.cg semantics)."""
+    from repro.apps.milc.cg import batched_cg_iteration, make_fused_normal
+
+    apply_a_dot = make_fused_normal(u, float(kappa), config)
+
+    def step(state):
+        return batched_cg_iteration(state, apply_a_dot, config=config,
+                                    tol=tol, max_iter=max_iter)
+
+    return jax.jit(step)
+
+
 def generate(params, cfg: ArchConfig, prompt_tokens, *, steps: int,
              s_max: int, temperature: float = 0.0, rng=None,
              jit_step=None):
     """Greedy/sampled generation for the examples (CPU, smoke configs).
-    prompt_tokens: (B, P) int32.  Returns (B, P+steps) tokens."""
+    prompt_tokens: (B, P) int32.  Returns (B, P+steps) tokens.
+
+    ``rng`` is only consulted when ``temperature > 0``; it defaults to a
+    fixed PRNGKey(0) so sampled generation is usable (and reproducible)
+    out of the box — passing rng=None used to crash in jax.random.split."""
     B, P = prompt_tokens.shape
+    if temperature > 0.0 and rng is None:
+        rng = jax.random.PRNGKey(0)
     cache = init_cache(cfg, B, s_max)
     step = jit_step or jax.jit(build_serve_step(cfg))
     toks = [prompt_tokens[:, i] for i in range(P)]

@@ -1,0 +1,201 @@
+"""Batched launches (multi-simulation serving, leading batch axis).
+
+The contract under test: lowering a BatchedField stack through ONE launch
+is per-element *bitwise identical* to a Python loop of single-Field
+launches — site-local chains, stencils under every halo mode, fused
+terminal reductions and standalone target_sum, across layouts and both
+engines — and the whole batch still costs one pallas_call.  Plus the
+reduce_info regression (exact per-output input mapping, multi-input
+reduce stages rejected).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AOS, SOA, BatchedField, Field, LaunchGraph, TargetConfig, aosoa,
+    target_sum,
+)
+from repro.core import fuse
+
+LAT = (4, 4, 8)  # 128 sites
+B = 3
+LAYOUTS = [AOS, SOA, aosoa(32)]
+ENGINES = ["jnp", "pallas"]
+
+
+def _fma(v):
+    return {"out": v["y"] + v["a"] * v["x"]}
+
+
+def _sq(v):
+    return {"p": v["out"] * v["out"]}
+
+
+def _sten(v, gather):
+    return {"s": v["x"] + 0.5 * gather("x", (1, 0, 0)) - gather("x", (0, -1, 0))}
+
+
+def _mkb(name, ncomp, lay, rng, lat=LAT, b=B):
+    return BatchedField.from_canonical(
+        name, jnp.asarray(rng.normal(size=(b, ncomp, *lat)).astype(np.float32)),
+        lat, lay)
+
+
+def _mk1(name, ncomp, lay, rng, lat=LAT):
+    return Field.from_numpy(
+        name, rng.normal(size=(ncomp, *lat)).astype(np.float32), lat, lay)
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batched_flat_chain_bitwise_vs_loop_one_pallas_call(lay, engine, rng):
+    """Site-local chain + fused reduce: batched x, SHARED y, per-request
+    scalar a — every batch element bitwise equals its single-Field launch,
+    and the whole batch is one pallas_call."""
+    cfg = TargetConfig(engine, vvl=64)
+    g = (LaunchGraph("bflat")
+         .add(_fma, {"x": "x", "y": "y", "a": "a"}, {"out": 3})
+         .add(_sq, {"out": "out"}, {"p": 3})
+         .add_reduce("p", "sum", name="ps"))
+    bx = _mkb("x", 3, lay, rng)
+    y = _mk1("y", 3, lay, rng)
+    a = jnp.asarray([0.5, -1.25, 2.0], jnp.float32)
+    fuse.clear_cache()
+    fuse.reset_stats()
+    outb = g.launch({"x": bx, "y": y}, scalars={"a": a}, config=cfg,
+                    outputs=("out", "ps"))
+    if engine == "pallas":
+        assert fuse.stats()["pallas_calls"] == 1
+    assert isinstance(outb["out"], BatchedField) and outb["out"].batch == B
+    assert outb["ps"].shape == (B, 3)
+    for b in range(B):
+        o1 = g.launch({"x": bx.element(b), "y": y},
+                      scalars={"a": float(a[b])}, config=cfg,
+                      outputs=("out", "ps"))
+        np.testing.assert_array_equal(
+            np.asarray(outb["out"].element(b).data), np.asarray(o1["out"].data))
+        np.testing.assert_array_equal(
+            np.asarray(outb["ps"][b]), np.asarray(o1["ps"]))
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batched_stencil_periodic_bitwise_vs_loop(lay, engine, rng):
+    cfg = TargetConfig(engine, vvl=64)
+    g = LaunchGraph("bsten").add_stencil(_sten, {"x": "x"}, {"s": 3}, width=1)
+    bx = _mkb("x", 3, lay, rng)
+    outb = g.launch({"x": bx}, config=cfg)
+    for b in range(B):
+        o1 = g.launch({"x": bx.element(b)}, config=cfg)
+        np.testing.assert_array_equal(
+            np.asarray(outb["s"].element(b).data), np.asarray(o1["s"].data))
+
+
+@pytest.mark.parametrize("halo", ["pre", "overlap"])
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batched_stencil_halo_and_fused_reduce_bitwise_vs_loop(
+        halo, engine, rng):
+    """Pre-halo'd batched inputs through the pre/overlap schedules, with a
+    fused terminal reduction riding along."""
+    cfg = TargetConfig(engine, vvl=64)
+    g = (LaunchGraph("bsten2")
+         .add_stencil(_sten, {"x": "x"}, {"s": 3}, width=1)
+         .add_reduce("s", "sum", name="ss"))
+    hlat = tuple(s + 2 for s in LAT)
+    bx = _mkb("x", 3, SOA, rng, lat=hlat)
+    outb = g.launch({"x": bx}, config=cfg, halo=halo, outputs=("s", "ss"))
+    for b in range(B):
+        o1 = g.launch({"x": bx.element(b)}, config=cfg, halo=halo,
+                      outputs=("s", "ss"))
+        np.testing.assert_array_equal(
+            np.asarray(outb["s"].element(b).data), np.asarray(o1["s"].data))
+        np.testing.assert_array_equal(
+            np.asarray(outb["ss"][b]), np.asarray(o1["ss"]))
+
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batched_target_sum_bitwise_vs_loop(lay, engine, rng):
+    cfg = TargetConfig(engine, vvl=64)
+    bx = _mkb("x", 3, lay, rng)
+    ts = target_sum(bx, cfg)
+    assert ts.shape == (B, 3)
+    for b in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(ts[b]), np.asarray(target_sum(bx.element(b), cfg)))
+
+
+def test_batched_scalar_shape_rejected(rng):
+    cfg = TargetConfig("jnp", vvl=64)
+    g = LaunchGraph("bs").add(_fma, {"x": "x", "y": "y", "a": "a"}, {"out": 3})
+    bx = _mkb("x", 3, SOA, rng)
+    y = _mk1("y", 3, SOA, rng)
+    with pytest.raises(ValueError, match="scalar"):
+        g.launch({"x": bx, "y": y},
+                 scalars={"a": jnp.zeros((B + 1,), jnp.float32)}, config=cfg)
+
+
+def test_mismatched_batch_sizes_rejected(rng):
+    cfg = TargetConfig("jnp", vvl=64)
+    g = LaunchGraph("bm").add(
+        lambda v: {"out": v["x"] + v["y"]}, {"x": "x", "y": "y"}, {"out": 3})
+    bx = _mkb("x", 3, SOA, rng, b=2)
+    by = _mkb("y", 3, SOA, rng, b=3)
+    with pytest.raises(ValueError, match="batch"):
+        g.launch({"x": bx, "y": by}, config=cfg)
+
+
+def test_plan_key_distinguishes_batch(rng):
+    """The autotuner persists per-batch-size winners: a batched launch keys
+    differently from the single-Field launch of the same graph, and from a
+    different batch size."""
+    cfg = TargetConfig("jnp", vvl=64)
+    g = LaunchGraph("bk").add(_sq, {"out": "x"}, {"p": 3})
+    f1 = _mk1("x", 3, SOA, rng)
+    k1 = g.plan_key({"x": f1}, config=cfg)
+    k2 = g.plan_key({"x": _mkb("x", 3, SOA, rng, b=2)}, config=cfg)
+    k4 = g.plan_key({"x": _mkb("x", 3, SOA, rng, b=4)}, config=cfg)
+    assert len({k1, k2, k4}) == 3
+
+
+def test_batched_field_roundtrip_and_slots(rng):
+    bx = _mkb("x", 3, aosoa(32), rng)
+    fields = bx.unstack()
+    assert len(fields) == B
+    re = BatchedField.stack(fields, name="x")
+    np.testing.assert_array_equal(np.asarray(re.data), np.asarray(bx.data))
+    # slot write: only the written slot's bits move
+    f = _mk1("x", 3, SOA, rng)
+    up = bx.with_element(1, f)
+    np.testing.assert_array_equal(np.asarray(up.element(0).data),
+                                  np.asarray(bx.element(0).data))
+    np.testing.assert_array_equal(np.asarray(up.element(2).data),
+                                  np.asarray(bx.element(2).data))
+    np.testing.assert_array_equal(np.asarray(up.element(1).canonical()),
+                                  np.asarray(f.canonical()))
+
+
+# -- reduce_info regression ---------------------------------------------------
+
+def test_reduce_info_maps_each_output_to_its_own_input(rng):
+    g = (LaunchGraph("ri")
+         .add(_sq, {"out": "x"}, {"p": 3})
+         .add(_fma, {"x": "x", "y": "p", "a": "a"}, {"out": 3})
+         .add_reduce("p", "sum", name="psum")
+         .add_reduce("out", "max", name="omax"))
+    info = g.reduce_info()
+    assert info == {"psum": ("p", "sum"), "omax": ("out", "max")}
+
+
+def test_reduce_info_rejects_multi_input_reduce_stage():
+    """add_reduce can't build one, but a hand-assembled multi-input reduce
+    stage must be rejected loudly instead of silently mapping the output to
+    the last input (the old bug)."""
+    g = LaunchGraph("rbad").add(_sq, {"out": "x"}, {"p": 3})
+    g._stages.append(fuse._Stage(
+        None, (("x", "p"), ("y", "p")), (("out", "bad", None, None),),
+        (), kind="reduce", op="sum"))
+    with pytest.raises(ValueError, match="inputs"):
+        g.reduce_info()

@@ -1,0 +1,158 @@
+"""Batched multi-simulation serving: batched CG bit-identity against
+independent solves, convergence-mask invariance, the shape-bucketed
+request scheduler draining mixed-shape streams, and the generate()
+sampling-path regression (temperature > 0 with the default rng)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.milc import driver, fields
+from repro.apps.milc.cg import make_wilson_op
+from repro.core import Field, SOA, TargetConfig
+from repro.launch.serve import SolveRequest, SolveServer
+
+LAT = (4, 4, 4, 8)
+
+
+def _cfg(engine, lattice=LAT, max_iter=40):
+    return driver.MilcConfig(lattice=lattice, kappa=0.10, tol=1e-8,
+                             max_iter=max_iter, layout=SOA,
+                             target=TargetConfig(engine, vvl=128))
+
+
+def _sources(cfg, n, seed0=10):
+    return [Field.from_numpy(
+        "b", fields.random_spinor(cfg.lattice, seed=seed0 + i),
+        cfg.lattice, cfg.layout) for i in range(n)]
+
+
+def _filtered(cfg, u, b, n=6):
+    """Spectrally filter a source (repeated normal-operator applications)
+    so its CG converges at a different iteration count — exercises the
+    frozen-slot path while the rest of the batch keeps iterating."""
+    _, _, apply_normal = make_wilson_op(u, cfg.kappa, cfg.target)
+    for _ in range(n):
+        b = apply_normal(b)
+    return b.with_data(b.data / jnp.linalg.norm(b.data))
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+def test_solve_batched_bitwise_vs_independent_solves(engine):
+    """A batch of solves with *divergent* convergence points (one slot
+    freezes early, one slot is empty) — every live request's x, iteration
+    count and residual are bitwise the dedicated single solve's."""
+    cfg = _cfg(engine)
+    u, _ = driver.init_problem(cfg, seed=0)
+    bs = _sources(cfg, 3)
+    bs[1] = _filtered(cfg, u, bs[1])          # converges earlier
+    bs[2] = bs[2].with_data(bs[2].data * 0.0)  # empty slot
+    res = driver.solve_batched(cfg, u, bs)
+    its = [int(i) for i in res.iterations]
+    assert its[1] < its[0], its  # the freeze path actually ran
+    assert its[2] == 0 and not np.any(np.asarray(res.x.element(2).data))
+    for i in (0, 1):
+        r1 = driver.solve(cfg, u, bs[i])
+        np.testing.assert_array_equal(np.asarray(res.x.element(i).data),
+                                      np.asarray(r1.x.data))
+        assert its[i] == int(r1.iterations)
+        np.testing.assert_array_equal(np.asarray(res.residual[i]),
+                                      np.asarray(r1.residual))
+
+
+def test_convergence_mask_invariance():
+    """A request's trajectory must not depend on its batch neighbours:
+    solve the same source next to a fast-converging neighbour and next to
+    an empty slot — identical bits both times."""
+    cfg = _cfg("jnp")
+    u, _ = driver.init_problem(cfg, seed=0)
+    b0, b1 = _sources(cfg, 2)
+    fast = _filtered(cfg, u, b1)
+    empty = b1.with_data(b1.data * 0.0)
+    r_fast = driver.solve_batched(cfg, u, [b0, fast])
+    r_empty = driver.solve_batched(cfg, u, [b0, empty])
+    np.testing.assert_array_equal(np.asarray(r_fast.x.element(0).data),
+                                  np.asarray(r_empty.x.element(0).data))
+    assert int(r_fast.iterations[0]) == int(r_empty.iterations[0])
+    np.testing.assert_array_equal(np.asarray(r_fast.residual[0]),
+                                  np.asarray(r_empty.residual[0]))
+
+
+def test_scheduler_drains_mixed_shapes_bitwise():
+    """Mixed-shape request stream through the bucketed scheduler, more
+    requests than slots (so slots drain and refill mid-flight): every
+    completed solve is bitwise the dedicated driver.solve result."""
+    shapes = [LAT, (4, 4, 8, 8)]
+    cfgs, us, reqs, oracle = {}, {}, [], {}
+    for i, lat in enumerate(shapes):
+        cfg = _cfg("jnp", lattice=lat)
+        u, _ = driver.init_problem(cfg, seed=i)
+        cfgs[lat], us[lat] = cfg, u
+        for j in range(3):
+            rid = 10 * i + j
+            b = _sources(cfg, 1, seed0=100 + rid)[0]
+            reqs.append(SolveRequest(rid=rid, b=b))
+            oracle[rid] = driver.solve(cfg, u, b)
+    server = SolveServer(cfgs[LAT].target, slots=2, tol=cfgs[LAT].tol,
+                         max_iter=cfgs[LAT].max_iter)
+    for lat in shapes:
+        server.register(us[lat], cfgs[lat].kappa)
+    # interleave shapes in the submission order
+    for req in sorted(reqs, key=lambda r: r.rid % 10):
+        server.submit(req)
+    results = server.run()
+    assert sorted(results) == sorted(o.rid for o in reqs)
+    for rid, out in results.items():
+        want = oracle[rid]
+        np.testing.assert_array_equal(np.asarray(out.x.data),
+                                      np.asarray(want.x.data))
+        assert out.iterations == int(want.iterations)
+        assert out.residual == float(want.residual)
+
+
+def test_scheduler_rejects_unregistered_shape():
+    cfg = _cfg("jnp")
+    server = SolveServer(cfg.target)
+    b = _sources(cfg, 1)[0]
+    with pytest.raises(KeyError, match="no operator registered"):
+        server.submit(SolveRequest(rid=0, b=b))
+
+
+# -- generate() sampling-path regression --------------------------------------
+
+def _lm():
+    from repro.configs import get_arch
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_arch("olmo-1b", smoke=True),
+                              dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    return cfg, params, prompt
+
+
+def test_generate_greedy_path():
+    from repro.train.serve_step import generate
+
+    cfg, params, prompt = _lm()
+    out = generate(params, cfg, prompt, steps=4, s_max=32)
+    assert out.shape == (1, 12) and out.dtype == jnp.int32
+
+
+def test_generate_sampled_path_default_rng():
+    """temperature > 0 with rng left at None used to crash in
+    jax.random.split(None); it must sample with a fixed default key."""
+    from repro.train.serve_step import generate
+
+    cfg, params, prompt = _lm()
+    out = generate(params, cfg, prompt, steps=4, s_max=32, temperature=0.7)
+    out2 = generate(params, cfg, prompt, steps=4, s_max=32, temperature=0.7)
+    assert out.shape == (1, 12)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    # an explicit key still drives the sample stream
+    out3 = generate(params, cfg, prompt, steps=4, s_max=32, temperature=0.7,
+                    rng=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out3))
