@@ -214,12 +214,10 @@ def lb_step_graph(cfg: LudwigConfig) -> LaunchGraph:
 
 def stage_chemical_stress(state_q: Field, dq_nd, lapq_nd, cfg: LudwigConfig):
     """molecular field + stress (one fused launch) + force divergence."""
-    out = chem_stress_graph(cfg).launch(
-        {"q": state_q, "lapq": _mkfield("lapq", lapq_nd, cfg),
-         "dq": _mkfield("dq", dq_nd, cfg)},
-        config=cfg.target,
-        outputs=("h", "sigma"),
-    )
+    out = chem_stress_graph(cfg).bind(
+        config=cfg.target, outputs=("h", "sigma"),
+    )({"q": state_q, "lapq": _mkfield("lapq", lapq_nd, cfg),
+       "dq": _mkfield("dq", dq_nd, cfg)})
     force_nd = gr.divergence(out["sigma"].canonical_nd())
     return out["h"], force_nd
 
@@ -230,12 +228,10 @@ def stage_advection(q_nd, u_nd):
 
 
 def stage_lc_update(state_q: Field, h: Field, w_nd, adv_nd, cfg: LudwigConfig) -> Field:
-    q_new = lc_update_graph(cfg).launch(
-        {"q": state_q, "h": h, "w": _mkfield("w", w_nd, cfg),
-         "adv": _mkfield("adv", adv_nd, cfg)},
-        config=cfg.target,
-        outputs=("q_new",),
-    )["q_new"]
+    q_new = lc_update_graph(cfg).bind(
+        config=cfg.target, outputs=("q_new",),
+    )({"q": state_q, "h": h, "w": _mkfield("w", w_nd, cfg),
+       "adv": _mkfield("adv", adv_nd, cfg)})["q_new"]
     # keep the Field name stable across steps (it is pytree aux data)
     return dataclasses.replace(q_new, name=state_q.name)
 
@@ -255,11 +251,9 @@ def step(state: LudwigState, cfg: LudwigConfig) -> LudwigState:
 
     # moments + collision + streaming fused: one halo'd launch, dist and
     # force stream from HBM once, post-collision dist never touches HBM
-    lb = lb_step_graph(cfg).launch(
-        {"dist": state.dist, "force": force},
-        config=cfg.target,
-        outputs=("dist2", "u"),
-    )
+    lb = lb_step_graph(cfg).bind(
+        config=cfg.target, outputs=("dist2", "u"),
+    )({"dist": state.dist, "force": force})
     dist2 = dataclasses.replace(lb["dist2"], name=state.dist.name)
 
     u = lb["u"]
@@ -291,13 +285,10 @@ def step_timed(state: LudwigState, cfg: LudwigConfig) -> Tuple[LudwigState, Dict
     # time the same fused LB launch production step() runs; the row name
     # matches the LUDWIG_KERNELS["lb_step"] traffic model (dist+force read
     # once, dist''+u written; dist' and rho never touch HBM)
-    lb = timed(
-        "lb_step",
-        lambda: lb_step_graph(cfg).launch(
-            {"dist": state.dist, "force": force},
-            config=cfg.target, outputs=("dist2", "u"),
-        ),
-    )
+    lb_bound = lb_step_graph(cfg).bind(config=cfg.target,
+                                       outputs=("dist2", "u"))
+    lb = timed("lb_step", lambda: lb_bound({"dist": state.dist,
+                                            "force": force}))
     dist2 = dataclasses.replace(lb["dist2"], name=state.dist.name)
     u_nd = lb["u"].canonical_nd()
     w_nd = _w_tensor(u_nd)
@@ -406,6 +397,13 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain, halo: str = "pre"):
         return _halo.exchange(x, dec, width=w)
 
     tgt = cfg.target
+    # bound launches: graph + config + outputs (+ halo) fixed once, reused
+    # every sharded call — launch(...) kwargs on a raw graph still work
+    chem_step = chem_stress_graph(cfg).bind(config=tgt,
+                                            outputs=("h", "sigma"))
+    lb_pre_step = lb_step_graph(cfg).bind(config=tgt,
+                                          outputs=("dist2", "u"), halo="pre")
+    lc_step = lc_update_graph(cfg).bind(config=tgt, outputs=("q_new",))
 
     def local_step(dist_nd, q_nd):
         # ---- Q stencils on width-2 halo
@@ -416,10 +414,8 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain, halo: str = "pre"):
         # stays SAL-tileable (so tuned native-AoSoA plans apply sharded too)
         mk = lambda name, arr: _mkfield(name, arr, cfg)
         qF = mk("q", qh)
-        cs = chem_stress_graph(cfg).launch(
-            {"q": qF, "lapq": mk("lapq", lapq_h), "dq": mk("dq", dq_h)},
-            config=tgt, outputs=("h", "sigma"),
-        )
+        cs = chem_step(
+            {"q": qF, "lapq": mk("lapq", lapq_h), "dq": mk("dq", dq_h)})
         h_F = cs["h"]
         force_h = gr.divergence(cs["sigma"].canonical_nd())
         force_nd = crop(force_h, WQ)  # interior: ring-1 div reads ring-2
@@ -436,10 +432,8 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain, halo: str = "pre"):
         if halo == "pre":
             d_h = exchange_w(pad(dist_nd, 1), 1)
             f_h = exchange_w(pad(force_nd, 1), 1)
-            lb = lb_step_graph(cfg).launch(
-                {"dist": mk("dist", d_h), "force": mk("force", f_h)},
-                config=tgt, outputs=("dist2", "u"), halo="pre",
-            )
+            lb = lb_pre_step(
+                {"dist": mk("dist", d_h), "force": mk("force", f_h)})
         else:
             from repro.core import overlap_launch
             lb = overlap_launch(
@@ -463,11 +457,9 @@ def make_sharded_step(cfg: LudwigConfig, domain: Domain, halo: str = "pre"):
 
         # ---- Beris-Edwards update on interior (fused rhs -> update)
         qiF = mk("qi", q_nd)
-        q_new = lc_update_graph(cfg).launch(
+        q_new = lc_step(
             {"q": qiF, "h": mk("h", crop(h_F.canonical_nd(), WQ)),
-             "w": mk("w", w_nd), "adv": mk("adv", adv_nd)},
-            config=tgt, outputs=("q_new",),
-        )["q_new"]
+             "w": mk("w", w_nd), "adv": mk("adv", adv_nd)})["q_new"]
         return dist2_nd, q_new.canonical_nd()
 
     sharded = compat.shard_map(

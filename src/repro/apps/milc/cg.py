@@ -242,12 +242,11 @@ def make_fused_normal(u: Field, kappa: float, config: TargetConfig):
     ``p`` may be a BatchedField (the gauge field is shared across the
     batch): ap comes back batched and the inner product per request,
     shape (batch,)."""
-    graph = wilson_normal_graph(float(kappa))
+    bound = wilson_normal_graph(float(kappa)).bind(
+        config=config, outputs=("ap", "pap"))
 
     def apply(p):
-        out = graph.launch({"p": p, "u": u}, config=config,
-                           outputs=("ap", "pap"),
-                           out_layouts={"ap": p.layout})
+        out = bound({"p": p, "u": u}, out_layouts={"ap": p.layout})
         # axis=-1 folds the per-component partials: a scalar for a Field,
         # (batch,) for a BatchedField — bitwise the 1-D sum either way
         return p.with_data(out["ap"].data), out["pap"].sum(axis=-1)

@@ -203,15 +203,17 @@ def make_sharded_solver(
             graph = wilson_normal_graph(float(cfg.kappa))
             u_h2 = exchange(pad(u_loc, WN), WN)
             uF_h = mkF("u", u_h2)
+            # config/outputs/halo bound once; the per-Field output layout
+            # is a per-call override (it follows the solve vector)
+            normal_pre = graph.bind(config=tgt, outputs=("ap",), halo="pre")
 
             def apply_a_dot(p: Field):
                 p_p = pad(p.canonical_nd(), WN)
                 if halo == "pre":
                     p_h = exchange(p_p, WN)
                     pF = mkF("p", p_h)
-                    out = graph.launch(
-                        {"p": pF, "u": uF_h}, config=tgt, outputs=("ap",),
-                        halo="pre", out_layouts={"ap": p.layout})
+                    out = normal_pre({"p": pF, "u": uF_h},
+                                     out_layouts={"ap": p.layout})
                 else:
                     pF = mkF("p", p_p)
                     out = overlap_launch(

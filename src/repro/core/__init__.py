@@ -36,7 +36,7 @@ from .target import (  # noqa: F401
     launch,
     resolve_vvl,
 )
-from .fuse import LaunchGraph, fused_launch  # noqa: F401
+from .fuse import BoundLaunch, LaunchGraph, ReduceSpec, fused_launch  # noqa: F401
 from . import plan, tune  # noqa: F401
 from . import compat  # noqa: F401
 from . import overlap  # noqa: F401

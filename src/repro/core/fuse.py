@@ -114,10 +114,13 @@ from .target import (
     build_out_specs,
     build_reduce_specs,
     build_slab_out_specs,
+    build_split_reduce_specs,
 )
 
 __all__ = [
     "LaunchGraph",
+    "BoundLaunch",
+    "ReduceSpec",
     "fused_launch",
     "reduce_combine",
     "stats",
@@ -132,19 +135,9 @@ _CACHE_CAP = 256
 
 _STATS = {"traces": 0, "pallas_calls": 0, "cache_hits": 0, "cache_misses": 0}
 
-# reduction monoids: combine, accumulator init, per-block fold (axis 1)
-_RED_OPS = {
-    "sum": (
-        lambda a, b: a + b,
-        lambda shape, dt: jnp.zeros(shape, dt),
-        lambda x: jnp.sum(x, axis=1),
-    ),
-    "max": (
-        jnp.maximum,
-        lambda shape, dt: jnp.full(shape, -jnp.inf, dt),
-        lambda x: jnp.max(x, axis=1),
-    ),
-}
+# reduction monoids, keyed by op name (the single source ReduceSpec wraps)
+_RED_COMBINE = {"sum": lambda a, b: a + b, "max": jnp.maximum}
+_RED_FOLD = {"sum": jnp.sum, "max": jnp.max}
 
 
 def stats() -> Dict[str, int]:
@@ -163,13 +156,73 @@ def clear_cache() -> None:
     _CACHE.clear()
 
 
+@dataclasses.dataclass(frozen=True)
+class ReduceSpec:
+    """One terminal reduction's metadata: the single definition of a
+    reduction monoid that the fused lowering, the overlap scheduler's
+    per-slab combine and the split-reduction stage-2 combine all consume
+    (previously an ad-hoc ``reduce_info()`` string tuple plus a separate
+    ``reduce_combine(op)`` lookup plus an inline monoid table).
+
+    op       "sum" | "max".
+    source   the graph value being folded (None for a bare-op spec).
+    ncomp    per-component width when statically known from the producing
+             stage (None when the reduced value is an external input —
+             launch resolves it from the input Field).
+    dtype    the accumulate dtype (None: the launch's default out dtype).
+    """
+
+    op: str
+    source: Optional[str] = None
+    ncomp: Optional[int] = None
+    dtype: Optional[object] = None
+
+    def __post_init__(self):
+        if self.op not in _RED_COMBINE:
+            raise ValueError(
+                f"unknown reduction op {self.op!r}; have {list(_RED_COMBINE)}")
+
+    @property
+    def combine(self) -> Callable:
+        """The monoid combine fn — how any two partials merge."""
+        return _RED_COMBINE[self.op]
+
+    def init(self, shape, dtype) -> jax.Array:
+        """Identity-filled accumulator (dtype-aware: integer max starts at
+        iinfo.min, not a float -inf cast)."""
+        dt = jnp.dtype(dtype)
+        if self.op == "max":
+            if jnp.issubdtype(dt, jnp.integer):
+                return jnp.full(shape, jnp.iinfo(dt).min, dt)
+            return jnp.full(shape, -jnp.inf, dt)
+        return jnp.zeros(shape, dt)
+
+    def fold(self, x: jax.Array, axis: int = -1) -> jax.Array:
+        """Per-block fold along ``axis`` (the site axis)."""
+        return _RED_FOLD[self.op](x, axis=axis)
+
+    def combine_partials(self, parts: jax.Array, axis: int = 0) -> jax.Array:
+        """The stage-2 combine: fold stage-1 partials along ``axis`` by a
+        sequential monoid combine in index order.  Deterministic (fixed
+        association for a fixed partial count) — the overlap scheduler's
+        slab partials and the split-reduction rsplit rows both combine
+        through here, so both strategies share one numerics contract:
+        exact for max and integer sums, tolerance-level reassociation
+        relative to the unsplit fold for fp sums."""
+        n = parts.shape[axis]
+        idx = [slice(None)] * parts.ndim
+        idx[axis] = 0
+        acc = parts[tuple(idx)]
+        for k in range(1, n):
+            idx[axis] = k
+            acc = self.combine(acc, parts[tuple(idx)])
+        return acc
+
+
 def reduce_combine(op: str) -> Callable:
     """The combine function of a reduction monoid (``"sum"``/``"max"``) —
-    how per-region partials merge, e.g. across the interior/boundary
-    sub-launches of the overlap scheduler (core.overlap)."""
-    if op not in _RED_OPS:
-        raise ValueError(f"unknown reduction op {op!r}; have {list(_RED_OPS)}")
-    return _RED_OPS[op][0]
+    kept as a thin shim over :class:`ReduceSpec` for existing callers."""
+    return ReduceSpec(op=op).combine
 
 
 def _hashable(v) -> bool:
@@ -384,8 +437,9 @@ class LaunchGraph:
         ``"{value}_{op}"``), is returned by launch() as a per-component
         ``(ncomp,)`` jnp array — it is an accumulator, not a Field, and its
         per-site input never touches HBM on the pallas engine."""
-        if op not in _RED_OPS:
-            raise ValueError(f"unknown reduction op {op!r}; have {list(_RED_OPS)}")
+        if op not in _RED_COMBINE:
+            raise ValueError(
+                f"unknown reduction op {op!r}; have {list(_RED_COMBINE)}")
         out_name = name or f"{value}_{op}"
         reduced = {v for st in self._stages if st.kind == "reduce"
                    for (_, v, _, _) in st.outs}
@@ -429,14 +483,19 @@ class LaunchGraph:
         return [v for st in self._stages if st.kind == "reduce"
                 for (_, v, _, _) in st.outs]
 
-    def reduce_info(self) -> Dict[str, Tuple[str, str]]:
-        """reduce output name -> (source graph value, monoid op) — what the
-        overlap scheduler needs to combine per-slab partials.  The mapping
-        is exact per (output, input) pair: a reduce stage folds exactly one
-        graph value, and a stage that somehow carries several inputs is
-        rejected here rather than silently keyed on the last one (which
-        would mis-combine overlap partials)."""
-        info: Dict[str, Tuple[str, str]] = {}
+    def reduce_specs(self) -> Dict[str, ReduceSpec]:
+        """reduce output name -> :class:`ReduceSpec` — the one definition of
+        this graph's reduction metadata, consumed by the overlap
+        scheduler's per-slab combine and the split-reduction stage-2
+        combine.  The mapping is exact per (output, input) pair: a reduce
+        stage folds exactly one graph value, and a stage that somehow
+        carries several inputs is rejected here rather than silently keyed
+        on the last one (which would mis-combine overlap partials).
+        ``ncomp`` is filled in when the reduced value is produced by an
+        earlier stage (None for reductions of external inputs — launch
+        resolves those from the input Field)."""
+        prod = self._produced()
+        specs: Dict[str, ReduceSpec] = {}
         for st in self._stages:
             if st.kind != "reduce":
                 continue
@@ -446,9 +505,17 @@ class LaunchGraph:
                     f"has {len(st.ins)} inputs {[v for (_, v) in st.ins]}; a "
                     f"terminal reduction folds exactly one graph value")
             ((_, vname),) = st.ins
-            for (_, out, _, _) in st.outs:
-                info[out] = (vname, st.op)
-        return info
+            for (_, out, _, dtype) in st.outs:
+                specs[out] = ReduceSpec(
+                    op=st.op, source=vname,
+                    ncomp=prod.get(vname, (None, None))[0], dtype=dtype)
+        return specs
+
+    def reduce_info(self) -> Dict[str, Tuple[str, str]]:
+        """reduce output name -> (source graph value, monoid op): the
+        legacy string-tuple view of :meth:`reduce_specs`, kept for
+        existing callers."""
+        return {o: (s.source, s.op) for o, s in self.reduce_specs().items()}
 
     def _required_rings(self, outputs: Sequence[str]) -> Dict[str, int]:
         """Backward width analysis: minimum valid halo ring each graph value
@@ -566,6 +633,36 @@ class LaunchGraph:
         }
 
     # -- execution --------------------------------------------------------------
+
+    def bind(
+        self,
+        *,
+        config: Optional[TargetConfig] = None,
+        outputs: Optional[Sequence[str]] = None,
+        out_layouts: Optional[Mapping[str, Layout]] = None,
+        halo: str = "periodic",
+        plan: Optional[LoweringPlan] = None,
+    ) -> "BoundLaunch":
+        """Freeze the launch-site keyword sprawl into a reusable callable.
+
+        Every driver threads the same ``config=/outputs=/out_layouts=/
+        halo=`` keywords verbatim through each ``launch`` call; ``bind``
+        captures them once and returns a :class:`BoundLaunch` — call it
+        with just the input Fields (plus per-call ``scalars=``/``plan=``,
+        or keyword overrides).  The raw ``launch(...)`` form keeps working
+        unchanged::
+
+            step = graph.bind(config=cfg, outputs=("ap", "pap"))
+            out = step({"p": p, "u": u}, scalars={"alpha": a})
+        """
+        return BoundLaunch(
+            self,
+            config=config,
+            outputs=tuple(outputs) if outputs is not None else None,
+            out_layouts=dict(out_layouts) if out_layouts else None,
+            halo=halo,
+            plan=plan,
+        )
 
     def launch(
         self,
@@ -799,6 +896,7 @@ class LaunchGraph:
                 vvl=vvl,
                 bx=bx,
                 interpret=interpret,
+                rsplit=plan.rsplit,
                 batch=batch,
                 in_batched=in_batched,
             )
@@ -860,8 +958,8 @@ class LaunchGraph:
         for st in self._stages:
             if st.kind == "reduce":
                 ((_, vname),) = st.ins
-                _, _, fold = _RED_OPS[st.op]
-                partials[st.outs[0][1]] = fold(values[vname])
+                partials[st.outs[0][1]] = _RED_FOLD[st.op](
+                    values[vname], axis=1)
                 continue
             chunks = {arg: values[v] for arg, v in st.ins}
             outs = st.kernel.body(chunks, **dict(st.params))
@@ -893,8 +991,8 @@ class LaunchGraph:
                 ((_, vname),) = st.ins
                 arr, r = values[vname]
                 a0 = _crop_ring(arr, r, 0)
-                _, _, fold = _RED_OPS[st.op]
-                partials[st.outs[0][1]] = fold(a0.reshape(a0.shape[0], -1))
+                partials[st.outs[0][1]] = _RED_FOLD[st.op](
+                    a0.reshape(a0.shape[0], -1), axis=1)
                 continue
 
             stage_ins = [(arg, values[v]) for arg, v in st.ins]
@@ -1001,13 +1099,13 @@ class LaunchGraph:
         vvl: int,
         bx: int,
         interpret: bool,
+        rsplit: int = 1,
         batch: int = 0,
         in_batched: Sequence[bool] = (),
     ) -> Callable:
         run_stages = self._run_stages
         nsites = int(math.prod(lattice))
-        red_ops = {o: _RED_OPS[st.op] for st in self._stages
-                   if st.kind == "reduce" for (_, o, _, _) in st.outs}
+        red_spec = self.reduce_specs()
         if not in_batched:
             in_batched = (False,) * len(ordered_ins)
 
@@ -1049,35 +1147,47 @@ class LaunchGraph:
 
         # pallas: the whole chain is ONE pallas_call over the site-block
         # grid — batched launches grow a leading batch grid axis, so the
-        # grid is (batch, nblocks) and every BlockSpec picks its batch row
-        grid = (batch, nsites // vvl) if batch else (nsites // vvl,)
+        # grid is (batch, nblocks) and every BlockSpec picks its batch
+        # row.  A split-reduction plan (rsplit > 1) partitions the block
+        # axis into (rsplit, nblocks/rsplit): split segment s covers
+        # blocks [s*per, (s+1)*per) in the unsplit order, accumulating its
+        # own stage-1 partial row; the stage-2 combine folds the rows in
+        # segment order after the call.
+        nblocks = nsites // vvl
+        per = nblocks // rsplit
+        site_grid = (rsplit, per) if rsplit > 1 else (nblocks,)
+        grid = ((batch,) + site_grid) if batch else site_grid
         nin, nsc = len(ordered_ins), len(ordered_scalars)
         in_specs = build_in_specs(in_meta, vvl)
         out_shapes, out_block_specs = build_out_specs(
             field_outputs, out_info, out_layouts, nsites, vvl
         )
-        red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
+        if rsplit > 1:
+            in_specs = _split_specs(in_specs, per)
+            out_block_specs = _split_specs(out_block_specs, per)
+            red_shapes, red_block_specs = build_split_reduce_specs(
+                red_outputs, out_info, rsplit)
+        else:
+            red_shapes, red_block_specs = build_reduce_specs(
+                red_outputs, out_info)
         if batch:
             in_specs = _batch_specs(in_specs, in_batched)
-            in_specs += [pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0))
+            in_specs += [pl.BlockSpec((1, 1, 1), lambda b, *_: (b, 0, 0))
                          for _ in range(nsc)]
             out_shapes = _batch_shapes(out_shapes, batch)
             out_block_specs = _batch_specs(
                 out_block_specs, [True] * len(out_block_specs))
             red_shapes = _batch_shapes(red_shapes, batch)
-            red_specs = [
-                pl.BlockSpec((1,) + tuple(s.block_shape),
-                             lambda b, i: (b, 0, 0))
-                for s in red_specs
-            ]
+            red_block_specs = _batch_specs(
+                red_block_specs, [True] * len(red_block_specs))
         else:
-            in_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0))
+            in_specs += [pl.BlockSpec((1, 1), lambda *_: (0, 0))
                          for _ in range(nsc)]
         out_shapes += red_shapes
-        out_block_specs += red_specs
+        out_block_specs += red_block_specs
         nfield = len(field_outputs)
         name = self.name
-        red_axis = 1 if batch else 0
+        red_axis = len(grid) - 1
 
         def fused_kernel(*refs):
             in_refs = refs[:nin]
@@ -1099,10 +1209,11 @@ class LaunchGraph:
                 )
                 r[...] = blk[None] if batch else blk
             for o, r in zip(red_outputs, acc_refs):
-                combine, init, _ = red_ops[o]
+                spec = red_spec[o]
                 part = partials[o][:, None].astype(out_info[o][1])
-                _accumulate(r, combine, init,
-                            part[None] if batch else part, axis=red_axis)
+                while part.ndim < len(r.shape):
+                    part = part[None]
+                _accumulate(r, spec.combine, spec.init, part, axis=red_axis)
 
         def fn(datas, svals):
             _STATS["traces"] += 1
@@ -1121,10 +1232,20 @@ class LaunchGraph:
             res = call(*datas, *svals)
             if len(out_shapes) == 1:
                 res = (res,)
-            # reduction accumulators (..., ncomp, 1) -> (..., ncomp)
-            return tuple(
-                r[..., 0] if i >= nfield else r for i, r in enumerate(res)
-            )
+            # reduction accumulators (..., ncomp, 1) -> (..., ncomp); a
+            # split plan's (..., rsplit, ncomp) stage-1 rows go through
+            # the stage-2 combine in segment order
+            out = []
+            for i, r in enumerate(res):
+                if i < nfield:
+                    out.append(r)
+                    continue
+                acc = r[..., 0]
+                if rsplit > 1:
+                    acc = red_spec[red_outputs[i - nfield]].combine_partials(
+                        acc, axis=-2)
+                out.append(acc)
+            return tuple(out)
 
         return jax.jit(fn)
 
@@ -1149,14 +1270,14 @@ class LaunchGraph:
         bx: int,
         interpret: bool,
         view: str,
+        rsplit: int = 1,
         batch: int = 0,
         in_batched: Sequence[bool] = (),
     ) -> Callable:
         run_nd = self._run_stages_nd
         site_ndim = len(lattice)
         site_dims = tuple(range(1, site_ndim + 1))
-        red_ops = {o: _RED_OPS[st.op] for st in self._stages
-                   if st.kind == "reduce" for (_, o, _, _) in st.outs}
+        red_spec = self.reduce_specs()
         if not in_batched:
             in_batched = (False,) * len(ordered_ins)
 
@@ -1221,8 +1342,10 @@ class LaunchGraph:
         # an aligned AoSoA output is packed in VMEM and written as native
         # blocks.  Non-AoSoA values take the staged path either way (SOA
         # staging is a view, AoS a transpose).
-        grid = ((batch, lattice[0] // bx) if batch
-                else (lattice[0] // bx,))
+        nslabs = lattice[0] // bx
+        per = nslabs // rsplit
+        site_grid = (rsplit, per) if rsplit > 1 else (nslabs,)
+        grid = ((batch,) + site_grid) if batch else site_grid
         nin, nsc = len(ordered_ins), len(ordered_scalars)
         hlats, native_in = _block_geometry(
             ordered_ins, in_meta, in_lats, in_rings, halo, view,
@@ -1245,36 +1368,44 @@ class LaunchGraph:
                 field_outputs, out_info, lattice, bx
             )
             native_out = [False] * len(field_outputs)
-        red_shapes, red_specs = build_reduce_specs(red_outputs, out_info)
+        if rsplit > 1:
+            in_specs = _split_specs(in_specs, per)
+            out_block_specs = _split_specs(out_block_specs, per)
+            red_shapes, red_block_specs = build_split_reduce_specs(
+                red_outputs, out_info, rsplit)
+        else:
+            red_shapes, red_block_specs = build_reduce_specs(
+                red_outputs, out_info)
         if batch:
             in_specs = _batch_specs(in_specs, in_batched)
-            in_specs += [pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0))
+            in_specs += [pl.BlockSpec((1, 1, 1), lambda b, *_: (b, 0, 0))
                          for _ in range(nsc)]
             out_shapes = _batch_shapes(out_shapes, batch)
             out_block_specs = _batch_specs(
                 out_block_specs, [True] * len(out_block_specs))
             red_shapes = _batch_shapes(red_shapes, batch)
-            red_specs = [
-                pl.BlockSpec((1,) + tuple(s.block_shape),
-                             lambda b, i: (b, 0, 0))
-                for s in red_specs
-            ]
+            red_block_specs = _batch_specs(
+                red_block_specs, [True] * len(red_block_specs))
         else:
-            in_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0))
+            in_specs += [pl.BlockSpec((1, 1), lambda *_: (0, 0))
                          for _ in range(nsc)]
         out_shapes += red_shapes
-        out_block_specs += red_specs
+        out_block_specs += red_block_specs
         nfield = len(field_outputs)
         inner_int = int(math.prod(lattice[1:]))
         name = self.name
-        red_axis = 1 if batch else 0
+        red_axis = len(grid) - 1
 
         def fused_kernel(*refs):
             in_refs = refs[:nin]
             sc_refs = refs[nin : nin + nsc]
             out_refs = refs[nin + nsc : nin + nsc + nfield]
             acc_refs = refs[nin + nsc + nfield :]
-            i = pl.program_id(1) if batch else pl.program_id(0)
+            axis0 = 1 if batch else 0
+            if rsplit > 1:  # x-slab index rebased from the split grid axes
+                i = pl.program_id(axis0) * per + pl.program_id(axis0 + 1)
+            else:
+                i = pl.program_id(axis0)
             xs = i * bx
             values = {}
             for n, (ncomp, lay), hlat, ring, nat, bat, r in zip(
@@ -1319,10 +1450,11 @@ class LaunchGraph:
                         ncomp, bx * inner_int // sal, sal).transpose(1, 0, 2)
                 r[...] = a0[None] if batch else a0
             for o, r in zip(red_outputs, acc_refs):
-                combine, init, _ = red_ops[o]
+                spec = red_spec[o]
                 part = partials[o][:, None].astype(out_info[o][1])
-                _accumulate(r, combine, init,
-                            part[None] if batch else part, axis=red_axis)
+                while part.ndim < len(r.shape):
+                    part = part[None]
+                _accumulate(r, spec.combine, spec.init, part, axis=red_axis)
 
         def stage_in(n, meta, lat, ring, nat, d):
             if not nat:
@@ -1361,8 +1493,14 @@ class LaunchGraph:
                 res = (res,)
             out = []
             for idx, r in enumerate(res):
-                if idx >= nfield:  # reduction accumulator (..., ncomp, 1)
-                    out.append(r[..., 0])
+                if idx >= nfield:  # reduction accumulator (..., ncomp, 1);
+                    # split plans fold the (..., rsplit, ncomp) stage-1
+                    # rows through the stage-2 combine in segment order
+                    acc = r[..., 0]
+                    if rsplit > 1:
+                        acc = red_spec[red_outputs[idx - nfield]] \
+                            .combine_partials(acc, axis=-2)
+                    out.append(acc)
                 elif native_out[idx]:  # already the physical AoSoA array
                     out.append(r)
                 else:  # canonical nd -> requested physical layout
@@ -1376,19 +1514,76 @@ class LaunchGraph:
         return jax.jit(fn)
 
 
+@dataclasses.dataclass(frozen=True)
+class BoundLaunch:
+    """A :meth:`LaunchGraph.launch` with its keyword sprawl frozen
+    (:meth:`LaunchGraph.bind`): a reusable callable the drivers invoke
+    with just the input Fields.  Per-call keywords override the bound
+    ones (``out_layouts`` merges, call entries winning), so one bound
+    launch serves call sites that differ only in, say, the output
+    layout."""
+
+    graph: LaunchGraph
+    config: Optional[TargetConfig] = None
+    outputs: Optional[Tuple[str, ...]] = None
+    out_layouts: Optional[Mapping[str, Layout]] = None
+    halo: str = "periodic"
+    plan: Optional[LoweringPlan] = None
+
+    def __call__(
+        self,
+        ins: Dict[str, Field],
+        *,
+        scalars: Optional[Mapping] = None,
+        config: Optional[TargetConfig] = None,
+        outputs: Optional[Sequence[str]] = None,
+        out_layouts: Optional[Mapping[str, Layout]] = None,
+        halo: Optional[str] = None,
+        plan: Optional[LoweringPlan] = None,
+    ) -> Dict[str, Union[Field, jax.Array]]:
+        layouts = dict(self.out_layouts or {})
+        if out_layouts:
+            layouts.update(out_layouts)
+        return self.graph.launch(
+            ins,
+            config=config if config is not None else self.config,
+            outputs=outputs if outputs is not None else self.outputs,
+            scalars=scalars,
+            out_layouts=layouts or None,
+            halo=halo if halo is not None else self.halo,
+            plan=plan if plan is not None else self.plan,
+        )
+
+
+def _split_specs(specs, per: int) -> List[pl.BlockSpec]:
+    """Grow a leading split-reduction grid axis (``LoweringPlan.rsplit``)
+    on single-lattice BlockSpecs: the site-block/x-slab index is rebased
+    to ``s * per + i``, so split segment ``s`` covers blocks
+    [s*per, (s+1)*per) — the same block order as the unsplit grid, just
+    regrouped into rsplit stage-1 partials."""
+    out = []
+    for spec in specs:
+        shape, m = tuple(spec.block_shape), spec.index_map
+        out.append(pl.BlockSpec(
+            shape, lambda s, i, _m=m, _p=per: tuple(_m(s * _p + i))))
+    return out
+
+
 def _batch_specs(specs, batched) -> List[pl.BlockSpec]:
     """Grow a leading batch grid axis on single-lattice BlockSpecs: a
     batched operand gets a length-1 batch-row block selected by the batch
-    program id; a shared operand keeps its rank and ignores it."""
+    program id; a shared operand keeps its rank and ignores it.  The
+    wrapped index map passes the remaining grid coordinates through, so
+    it composes with the split-reduction axis of ``_split_specs``."""
     out = []
     for spec, bat in zip(specs, batched):
         shape, m = tuple(spec.block_shape), spec.index_map
         if bat:
             out.append(pl.BlockSpec(
-                (1,) + shape, lambda b, i, _m=m: (b,) + tuple(_m(i))))
+                (1,) + shape, lambda b, *idx, _m=m: (b,) + tuple(_m(*idx))))
         else:
             out.append(pl.BlockSpec(
-                shape, lambda b, i, _m=m: tuple(_m(i))))
+                shape, lambda b, *idx, _m=m: tuple(_m(*idx))))
     return out
 
 

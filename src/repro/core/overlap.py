@@ -178,8 +178,8 @@ def _split_launch(
     red_names = set(graph._reduce_outputs())
     field_outputs = tuple(o for o in outputs if o not in red_names)
     red_outputs = tuple(o for o in outputs if o in red_names)
-    red_ops = {o: op for o, (_, op) in graph.reduce_info().items()
-               if o in red_outputs}
+    red_specs = {o: s for o, s in graph.reduce_specs().items()
+                 if o in red_outputs}
 
     out_layouts = dict(out_layouts or {})
     for o in field_outputs:
@@ -221,12 +221,12 @@ def _split_launch(
         else:
             out[o] = Field.from_canonical(o, acc, lattice, out_layouts[o])
     for o in red_outputs:
-        from .fuse import reduce_combine
-        combine = reduce_combine(red_ops[o])
-        acc = results[0][1][o]
-        for _, res in results[1:]:
-            acc = combine(acc, res[o])
-        out[o] = acc
+        # per-slab partials merge through the shared stage-2 combine
+        # (ReduceSpec.combine_partials) — the same deterministic
+        # segment-order fold the split-reduction (rsplit) lowering uses,
+        # stacked in slab order (interior first, then boundary slabs)
+        parts = jnp.stack([res[o] for _, res in results])
+        out[o] = red_specs[o].combine_partials(parts, axis=0)
     return out
 
 

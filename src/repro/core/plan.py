@@ -212,6 +212,14 @@ class LoweringPlan:
     interpret: bool = False
     halo: str = "periodic"
     view: str = VIEW_AUTO
+    # split-reduction factor: 1 lowers terminal reductions as the single
+    # grid-sequential accumulator (bit-identical to the pre-rsplit code);
+    # rsplit > 1 partitions the site-block (or x-slab) grid into rsplit
+    # segments, each accumulating its own stage-1 partial row, combined by
+    # a tiny stage-2 fold in segment order.  Deterministic for a fixed
+    # rsplit; tolerance-equal (not bitwise) to rsplit=1 for fp sums, exact
+    # for max and integer sums.  Pallas engine only.
+    rsplit: int = 1
 
     # -- serialization (core.tune persists plans as JSON) ----------------------
 
@@ -233,7 +241,11 @@ class LoweringPlan:
         # vs staged-nd); site-local plans are always "block", untagged so
         # persisted timing labels stay stable
         view = "/block" if (self.bx and self.view == VIEW_BLOCK) else ""
-        return (f"pallas/{knob}{view}"
+        # the split-reduction axis is named whenever it is in play — a
+        # tuned rsplit>1 winner must be identifiable in the persisted
+        # timing labels (its results are tolerance-, not bitwise-equal)
+        rs = f"/rs{self.rsplit}" if self.rsplit > 1 else ""
+        return (f"pallas/{knob}{view}{rs}"
                 + ("/interpret" if self.interpret else "") + suffix)
 
     # -- validation -------------------------------------------------------------
@@ -261,7 +273,14 @@ class LoweringPlan:
                 "halo='overlap' applies only to stencil graphs: a "
                 "site-local graph has no halo exchange to overlap "
                 "(add a stencil stage or use the default halo)")
+        if self.rsplit < 1:
+            raise ValueError(f"rsplit must be >= 1, got {self.rsplit}")
         if self.engine == "jnp":
+            if self.rsplit > 1:
+                raise ValueError(
+                    "rsplit > 1 splits the pallas reduction grid into "
+                    "stage-1 partial segments; the jnp engine folds "
+                    "whole-lattice arrays and has no grid to split")
             return self
         if stencil:
             if self.bx < 1:
@@ -272,6 +291,13 @@ class LoweringPlan:
                 raise ValueError(
                     f"bx={self.bx} must divide the leading lattice dim "
                     f"{lattice[0]}")
+            if (self.rsplit > 1 and lattice is not None
+                    and (lattice[0] // self.bx) % self.rsplit):
+                raise ValueError(
+                    f"rsplit={self.rsplit} must divide the x-slab count "
+                    f"{lattice[0] // self.bx} (bx={self.bx} over "
+                    f"lattice[0]={lattice[0]}) so every stage-1 partial "
+                    f"covers a whole number of slabs")
             if self.view == VIEW_BLOCK and layouts and not any(
                     lay.kind is LayoutKind.AOSOA for lay in layouts):
                 raise ValueError(
@@ -291,6 +317,13 @@ class LoweringPlan:
                 raise ValueError(
                     f"vvl={self.vvl} must divide nsites={nsites} "
                     f"(use a conforming candidate from candidate_plans)")
+            if (self.rsplit > 1 and nsites is not None
+                    and (nsites // self.vvl) % self.rsplit):
+                raise ValueError(
+                    f"rsplit={self.rsplit} must divide the site-block "
+                    f"count {nsites // self.vvl} (vvl={self.vvl} over "
+                    f"nsites={nsites}) so every stage-1 partial covers a "
+                    f"whole number of blocks")
             for lay in layouts:
                 if lay.kind is LayoutKind.AOSOA and self.vvl % lay.sal:
                     raise ValueError(
@@ -402,15 +435,30 @@ def sub_lattice_plan(
     scheduler's sliced windows are SOA Fields (arbitrary slab extents do
     not stay block-aligned), so a native-AoSoA outer plan executes its
     sub-launches on staged canonical views — bit-identical arithmetic, the
-    relayout happens at assembly."""
+    relayout happens at assembly.  ``rsplit`` likewise drops to 1: the
+    scheduler already combines per-slab reduction partials through the
+    stage-2 combine (the slabs *are* the split), and a thin boundary slab's
+    block count rarely keeps the outer split factor's divisibility."""
     if plan.engine != "pallas":
-        return dataclasses.replace(plan, halo=halo)
+        return dataclasses.replace(plan, halo=halo, rsplit=1)
     if plan.bx >= 1 and lattice[0] % plan.bx == 0:
-        return dataclasses.replace(plan, halo=halo, view=VIEW_STAGED_ND)
+        return dataclasses.replace(plan, halo=halo, view=VIEW_STAGED_ND,
+                                   rsplit=1)
     bx = choose_slab(
         lattice[0], int(math.prod(lattice[1:])),
         max(int(getattr(config, "vvl", 128)), 1))
-    return dataclasses.replace(plan, halo=halo, bx=bx, view=VIEW_STAGED_ND)
+    return dataclasses.replace(plan, halo=halo, bx=bx, view=VIEW_STAGED_ND,
+                               rsplit=1)
+
+
+def _rsplit_factors(nblocks: int, cap: int = 16, k: int = 2):
+    """Valid split-reduction twin factors for a grid of ``nblocks``
+    programs: up to ``k`` divisors > 1, preferring factors <= ``cap``
+    (a split per block is legal but pays stage-2 combine latency for
+    nothing).  Empty when the grid has a single program."""
+    rs = [r for r in divisors(nblocks) if r > 1]
+    capped = [r for r in rs if r <= cap]
+    return _spread(capped or rs[:1], k)
 
 
 def _spread(values, k: int):
@@ -435,6 +483,7 @@ def candidate_plans(
     devices: Optional[int] = None,
     block_view: Optional[bool] = None,
     batch: int = 0,
+    reduce: bool = False,
 ) -> Tuple[LoweringPlan, ...]:
     """Enumerate valid plans for the autotuner sweep, deterministically.
 
@@ -476,7 +525,17 @@ def candidate_plans(
     whenever some input layout is AoSoA (the tuner skips+records a
     candidate whose alignment fails at launch); callers that know the
     halo'd geometry pass the precise :func:`block_view_ok` verdict
-    (``core.tune.plan_candidates_for`` does)."""
+    (``core.tune.plan_candidates_for`` does).
+
+    Launches ending in a terminal reduction (``reduce=True`` —
+    ``plan_candidates_for`` passes the graph's verdict) additionally get
+    two ``rsplit`` twins: the default geometry with the smallest and
+    largest split factor (capped at 16) dividing its block count, so the
+    tuner can rank the two-stage split reduction per lattice/backend.  An
+    rsplit winner is the first plan axis whose results are
+    tolerance-equal rather than bitwise-equal to the default for fp sums
+    (deterministic for the fixed factor; exact for max and integer
+    sums)."""
     default = default_plan(config, nsites=nsites, layouts=layouts,
                            stencil=stencil, lattice=lattice, halo=halo)
     if default.engine != "pallas":
@@ -492,7 +551,19 @@ def candidate_plans(
         with_overlap = halo == "pre" and devices > 1 and not batch
         if block_view is None:
             block_view = any(lay.kind is LayoutKind.AOSOA for lay in layouts)
-        n_twins = (2 if with_overlap else 0) + (2 if block_view else 0)
+        # split-reduction twins come off the default geometry (or the
+        # narrowest swept slab when the default lowers the whole extent as
+        # one program); computed first so the bx sweep only cedes budget
+        # for twins that actually exist
+        red_twins = []
+        if reduce:
+            base = default
+            if lattice[0] // base.bx < 2 and min(bxs) < base.bx:
+                base = dataclasses.replace(default, bx=min(bxs))
+            red_twins = [dataclasses.replace(base, rsplit=r)
+                         for r in _rsplit_factors(lattice[0] // base.bx)]
+        n_twins = ((2 if with_overlap else 0) + (2 if block_view else 0)
+                   + len(red_twins))
         k = max(1, max_candidates - n_twins)
         spread_bxs = _spread(bxs, k)
         cands = [dataclasses.replace(default, bx=bx) for bx in spread_bxs]
@@ -503,13 +574,23 @@ def candidate_plans(
         if block_view:
             cands += [dataclasses.replace(default, bx=bx, view=VIEW_BLOCK)
                       for bx in twin_bxs]
+        cands += red_twins
     else:
         align = sal_alignment(layouts)
         cap = 8 * max(int(config.vvl), 128)
         vs = [v for v in divisors(nsites)
               if v % align == 0 and v <= cap] or [default.vvl]
+        red_twins = []
+        if reduce:
+            base = default
+            if nsites // base.vvl < 2 and vs and vs[0] < base.vvl:
+                base = dataclasses.replace(default, vvl=vs[0])
+            red_twins = [dataclasses.replace(base, rsplit=r)
+                         for r in _rsplit_factors(nsites // base.vvl)]
+        k = max(1, max_candidates - len(red_twins))
         cands = [dataclasses.replace(default, vvl=v)
-                 for v in _spread(vs, max_candidates)]
+                 for v in _spread(vs, k)]
+        cands += red_twins
     out = [default]
     for c in cands:
         if c not in out:

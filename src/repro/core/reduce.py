@@ -8,6 +8,17 @@ read-modify-write accumulation across grid steps is well defined), and the
 final (ncomp, VVL) -> (ncomp,) fold happens outside.  Across shards, callers
 compose with ``jax.lax.psum`` (see core.halo / apps drivers), mirroring the
 paper's MPI_Allreduce-above-targetDP split.
+
+Split reductions: a plan with ``rsplit > 1`` (an explicit
+``TargetConfig.plan_policy`` plan — the standalone path has no graph key to
+tune on) partitions the site-block grid into ``rsplit`` segments, each
+accumulating its own ``(ncomp, VVL)`` stage-1 partial row; a tiny stage-2
+combine folds the rows in segment order.  Same contract as the fused
+lowering (core.fuse): deterministic for a fixed ``rsplit``, bitwise exact
+for max and integer sums, tolerance-level reassociation for fp sums.
+
+The reduction monoid itself (combine/init/fold) is the shared
+:class:`~repro.core.fuse.ReduceSpec` definition.
 """
 
 from __future__ import annotations
@@ -15,28 +26,19 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .field import Field  # noqa: F401  (re-exported reduction operand type)
+from .fuse import ReduceSpec
 from .plan import plan_for_launch
 from .target import TargetConfig
 
 __all__ = ["target_sum", "target_max"]
 
-_MONOIDS = {
-    "sum": (lambda a, b: a + b, lambda shape, dt: jnp.zeros(shape, dt), jnp.sum),
-    "max": (
-        lambda a, b: jnp.maximum(a, b),
-        lambda shape, dt: jnp.full(shape, -jnp.inf, dt),
-        jnp.max,
-    ),
-}
-
 
 def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
     config = config or TargetConfig()
-    combine, init, fold = _MONOIDS[op]
+    spec = ReduceSpec(op=op)
     batch = int(getattr(field, "batch", 0))
     # lowering decisions (vvl conformance, interpret fallback, plan policy)
     # come from the planning layer, like every other launch
@@ -44,38 +46,50 @@ def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
     if plan.engine == "jnp":
         # batched: (batch, ncomp, nsites) -> (batch, ncomp); the per-row
         # fold is the same whole-lattice fold as the single-Field path
-        return fold(field.canonical(), axis=-1)
+        return spec.fold(field.canonical(), axis=-1)
 
-    vvl = plan.vvl
+    vvl, rsplit = plan.vvl, plan.rsplit
     nsites, ncomp = field.nsites, field.ncomp
     layout = field.layout
     blk = tuple(layout.block_shape(ncomp, vvl))
     bmap = layout.block_index_map()
-    if batch:
-        # leading batch grid axis: each batch row accumulates its own
-        # (ncomp, vvl) partial in the same site-block order as the
-        # single-Field kernel — per-element bitwise identical
-        grid = (batch, nsites // vvl)
-        in_spec = pl.BlockSpec((1,) + blk,
-                               lambda b, i, _m=bmap: (b,) + tuple(_m(i)))
-        out_spec = pl.BlockSpec((1, ncomp, vvl), lambda b, i: (b, 0, 0))
-        out_shape = jax.ShapeDtypeStruct((batch, ncomp, vvl), field.dtype)
-        blk_axis = 1
+    nblocks = nsites // vvl
+    per = nblocks // rsplit
+    # grid axes, outermost first: (batch?, rsplit?, blocks-per-segment);
+    # each (batch row, split segment) accumulates its own (ncomp, vvl)
+    # partial in the same site-block order as the unsplit kernel
+    if rsplit > 1:
+        in_map = lambda s, i, _m=bmap: tuple(_m(s * per + i))  # noqa: E731
+        out_blk, out_map = (1, ncomp, vvl), lambda s, i: (s, 0, 0)
+        acc_shape = (rsplit, ncomp, vvl)
     else:
-        grid = (nsites // vvl,)
-        in_spec = pl.BlockSpec(blk, bmap)
-        out_spec = pl.BlockSpec((ncomp, vvl), lambda i: (0, 0))
-        out_shape = jax.ShapeDtypeStruct((ncomp, vvl), field.dtype)
-        blk_axis = 0
+        in_map = bmap
+        out_blk, out_map = (ncomp, vvl), lambda i: (0, 0)
+        acc_shape = (ncomp, vvl)
+    if batch:
+        grid = ((batch, rsplit, per) if rsplit > 1 else (batch, nblocks))
+        in_spec = pl.BlockSpec(
+            (1,) + blk, lambda b, *idx, _m=in_map: (b,) + tuple(_m(*idx)))
+        out_spec = pl.BlockSpec(
+            (1,) + out_blk, lambda b, *idx, _m=out_map: (b,) + tuple(_m(*idx)))
+        out_shape = jax.ShapeDtypeStruct((batch,) + acc_shape, field.dtype)
+    else:
+        grid = (rsplit, per) if rsplit > 1 else (nblocks,)
+        in_spec = pl.BlockSpec(blk, in_map)
+        out_spec = pl.BlockSpec(out_blk, out_map)
+        out_shape = jax.ShapeDtypeStruct(acc_shape, field.dtype)
+    blk_axis = len(grid) - 1
 
     def kern(x_ref, acc_ref):
         @pl.when(pl.program_id(blk_axis) == 0)
         def _init():
-            acc_ref[...] = init(acc_ref.shape, acc_ref.dtype)
+            acc_ref[...] = spec.init(acc_ref.shape, acc_ref.dtype)
 
         x = x_ref[...][0] if batch else x_ref[...]
         chunk = layout.block_to_canonical(x, ncomp, vvl)
-        acc_ref[...] = combine(acc_ref[...], chunk[None] if batch else chunk)
+        while chunk.ndim < len(acc_ref.shape):
+            chunk = chunk[None]
+        acc_ref[...] = spec.combine(acc_ref[...], chunk)
 
     partial = pl.pallas_call(
         kern,
@@ -86,7 +100,10 @@ def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
         interpret=plan.interpret,
         name=f"target_{op}",
     )(field.data)
-    return fold(partial, axis=-1)
+    folded = spec.fold(partial, axis=-1)
+    if rsplit > 1:  # stage-2 combine over the split-segment rows
+        folded = spec.combine_partials(folded, axis=-2)
+    return folded
 
 
 def target_sum(field, config: Optional[TargetConfig] = None) -> jax.Array:

@@ -204,6 +204,25 @@ def build_reduce_specs(
     return shapes, specs
 
 
+def build_split_reduce_specs(
+    out_names: Sequence[str],
+    out_specs: Mapping[str, Tuple[int, object]],
+    rsplit: int,
+) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
+    """(out_shape, BlockSpec) per terminal-reduction accumulator under a
+    split-reduction plan (``LoweringPlan.rsplit > 1``): a ``(rsplit,
+    ncomp, 1)`` stage-1 partial buffer whose rows are selected by the
+    split grid axis — each of the ``rsplit`` grid segments accumulates
+    its own row, and the tiny stage-2 combine folds the rows in segment
+    order after the call (core.fuse)."""
+    shapes, specs = [], []
+    for k in out_names:
+        ncomp, dtype = out_specs[k]
+        shapes.append(jax.ShapeDtypeStruct((rsplit, ncomp, 1), dtype))
+        specs.append(pl.BlockSpec((1, ncomp, 1), lambda s, i: (s, 0, 0)))
+    return shapes, specs
+
+
 def build_in_specs(
     in_meta: Sequence[Tuple[int, Layout]], vvl: int
 ) -> List[pl.BlockSpec]:

@@ -59,8 +59,12 @@ __all__ = [
 DEFAULT_PATH = ".targetdp_tune.json"
 ENV_VAR = "TARGETDP_TUNE_PATH"
 # bumped to 2 when plans gained the "overlap" halo strategy: older tables
-# (version 1 wrote a "version" key, no "schema_version") load as empty
-SCHEMA_VERSION = 2
+# (version 1 wrote a "version" key, no "schema_version") load as empty.
+# bumped to 3 when plans gained the split-reduction axis ``rsplit``:
+# persisted plan JSON must name the axis (a version-2 entry predates the
+# tolerance-vs-bitwise reduction contract), so version-2 tables load as a
+# clean miss — every lookup misses, the tuner re-sweeps and re-stamps.
+SCHEMA_VERSION = 3
 
 _TABLE: Optional[Dict[str, dict]] = None
 _TABLE_PATH: Optional[str] = None
@@ -270,7 +274,9 @@ def plan_candidates_for(
     also what benchmarks use to time default-vs-tuned.  Stencil sweeps with
     an aligned AoSoA input include native-block (``view="block"``) twins,
     so a persisted winner can flip the hot halo'd launches to the native
-    AoSoA lowering per backend."""
+    AoSoA lowering per backend.  Graphs ending in a terminal reduction
+    additionally sweep split-reduction (``rsplit``) twins, so a persisted
+    winner can flip the reduction to the two-stage partial lowering."""
     lattice = _interior_lattice(graph, ins, outputs, halo)
     nsites = 1
     for s in lattice:
@@ -281,7 +287,8 @@ def plan_candidates_for(
     return plan_mod.candidate_plans(
         config, nsites=nsites, layouts=layouts, stencil=graph.has_stencil,
         lattice=lattice, halo=halo, max_candidates=max_candidates,
-        block_view=block_view_for(graph, ins, outputs, halo), batch=batch)
+        block_view=block_view_for(graph, ins, outputs, halo), batch=batch,
+        reduce=bool(graph._reduce_outputs()))
 
 
 def autotune_graph(

@@ -208,9 +208,10 @@ def _main_decode(args):
 def _main_solve(args):
     from repro.apps.milc import driver, fields
 
-    cfg = driver.MilcConfig(lattice=(4, 4, 4, 8), kappa=0.10, tol=1e-8,
-                            max_iter=args.steps,
-                            target=TargetConfig(args.engine, vvl=128))
+    cfg = driver.MilcConfig(
+        lattice=(4, 4, 4, 8), kappa=0.10, tol=1e-8, max_iter=args.steps,
+        target=TargetConfig(args.engine, vvl=128,
+                            plan_policy=args.plan_policy))
     server = SolveServer(cfg.target, slots=args.slots, tol=cfg.tol,
                          max_iter=cfg.max_iter)
     shapes = [(4, 4, 4, 8), (4, 4, 8, 8)]
@@ -247,6 +248,12 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--plan-policy", default="default",
+                    choices=["default", "tuned"],
+                    help="lowering-plan policy for serving launches: "
+                         "'tuned' picks persisted autotune winners "
+                         "(rsplit split reductions included) from the "
+                         "TARGETDP_TUNE_PATH table")
     args = ap.parse_args()
     if args.solve:
         _main_solve(args)

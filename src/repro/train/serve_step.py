@@ -47,9 +47,16 @@ def build_cg_serve_step(u, kappa: float, config, *, tol: float,
     launch for the whole slot batch.  Converged/empty slots ride along
     bitwise frozen, so the scheduler can drain and refill them between
     calls without perturbing in-flight solves (apps.milc.cg semantics)."""
-    from repro.apps.milc.cg import batched_cg_iteration, make_fused_normal
+    from repro.apps.milc.cg import batched_cg_iteration, wilson_normal_graph
 
-    apply_a_dot = make_fused_normal(u, float(kappa), config)
+    # the serving unit is a bound launch: graph + config + outputs fixed
+    # at build time, only the solve vector (and its layout) vary per call
+    bound = wilson_normal_graph(float(kappa)).bind(
+        config=config, outputs=("ap", "pap"))
+
+    def apply_a_dot(p):
+        out = bound({"p": p, "u": u}, out_layouts={"ap": p.layout})
+        return p.with_data(out["ap"].data), out["pap"].sum(axis=-1)
 
     def step(state):
         return batched_cg_iteration(state, apply_a_dot, config=config,

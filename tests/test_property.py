@@ -238,3 +238,46 @@ def test_reduction_linear_property(seed):
     lhs = np.asarray(target_sum(fz, cfgt))
     rhs = 2 * np.asarray(target_sum(fx, cfgt)) - 3 * np.asarray(target_sum(fy, cfgt))
     np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@given(
+    sal=st.sampled_from([1, 2, 4, 8]),
+    nblk=st.sampled_from([2, 3, 4, 6, 8, 12, 16]),
+    pick=st.integers(0, 5),
+    seed=st.integers(0, 100),
+)
+def test_split_reduction_matches_unsplit_property(sal, nblk, pick, seed):
+    """Split-reduction contract over random geometries and factors: for any
+    (sal, nblocks) and any rsplit dividing the block count, the split
+    target_sum is within fp tolerance of the unsplit one and bitwise
+    deterministic across repeat launches, and target_max and integer sums
+    are bitwise exact (their monoids are associative on the nose)."""
+    from repro.core import target_max
+
+    nsites = sal * nblk
+    lat = (nsites,)
+    lay = aosoa(sal) if sal > 1 else SOA
+    factors = [r for r in plan_mod.divisors(nblk) if r > 1]
+    r = factors[pick % len(factors)]
+    p1 = TargetConfig("pallas", plan_policy=LoweringPlan(
+        "pallas", vvl=sal, rsplit=1, interpret=True))
+    pr = TargetConfig("pallas", plan_policy=LoweringPlan(
+        "pallas", vvl=sal, rsplit=r, interpret=True))
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(2, nsites)).astype(np.float32)
+    fx = Field.from_canonical("x", jnp.asarray(x), lat, lay)
+    s1, sr = target_sum(fx, p1), target_sum(fx, pr)
+    np.testing.assert_allclose(np.asarray(sr), np.asarray(s1),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sr),
+                                  np.asarray(target_sum(fx, pr)))
+    np.testing.assert_array_equal(np.asarray(target_max(fx, pr)),
+                                  np.asarray(target_max(fx, p1)))
+
+    xi = rng.integers(-1000, 1000, size=(2, nsites)).astype(np.int32)
+    fi = Field.from_canonical("xi", jnp.asarray(xi), lat, lay)
+    np.testing.assert_array_equal(np.asarray(target_sum(fi, pr)),
+                                  xi.sum(axis=1))
+    np.testing.assert_array_equal(np.asarray(target_max(fi, pr)),
+                                  xi.max(axis=1))

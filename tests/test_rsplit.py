@@ -1,0 +1,327 @@
+"""Split reductions (the ``rsplit`` plan axis): two-stage partial lowering
+== unsplit within fp tolerance (bitwise for max and integer sums), bitwise
+deterministic across repeat launches, candidate/tuner integration, the
+public ReduceSpec monoid, and the bind()/BoundLaunch API."""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AOS, BatchedField, BoundLaunch, Field, LaunchGraph, LoweringPlan,
+    ReduceSpec, SOA, TargetConfig, aosoa, target_max, target_sum, tune,
+)
+from repro.core import plan as plan_mod
+
+LAT = (4, 4, 8)  # 128 sites
+LAYOUTS = [AOS, SOA, aosoa(16)]  # sal 16 conforms to the vvl=16 test plans
+
+
+def _mk(name, ncomp, lay, rng, lat=LAT, dtype=np.float32):
+    arr = rng.normal(size=(ncomp, *lat)).astype(dtype)
+    return arr, Field.from_numpy(name, arr, lat, lay)
+
+
+def _cfg(plan):
+    return TargetConfig("pallas", plan_policy=plan)
+
+
+def _plan(rsplit, *, vvl=16, bx=0):
+    if bx:
+        return LoweringPlan("pallas", bx=bx, rsplit=rsplit, interpret=True)
+    return LoweringPlan("pallas", vvl=vvl, rsplit=rsplit, interpret=True)
+
+
+def _dot_graph(ncomp=3):
+    return (LaunchGraph("rs_dot")
+            .add(lambda v: {"t": v["x"] * v["y"]},
+                 {"x": "x", "y": "y"}, {"t": ncomp})
+            .add_reduce("t", op="sum", name="dot"))
+
+
+# -- fused lowering: split == unsplit -----------------------------------------
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+@pytest.mark.parametrize("rsplit", [2, 4, 8])
+def test_fused_site_local_split_matches_unsplit(lay, rsplit, rng):
+    x, fx = _mk("x", 3, lay, rng)
+    y, fy = _mk("y", 3, lay, rng)
+    g = _dot_graph()
+    ins = {"x": fx, "y": fy}
+    base = g.launch(ins, config=_cfg(_plan(1)), outputs=("t", "dot"))
+    out = g.launch(ins, config=_cfg(_plan(rsplit)), outputs=("t", "dot"))
+    # the field output is not reassociated: bitwise across the split axis
+    np.testing.assert_array_equal(out["t"].to_numpy(), base["t"].to_numpy())
+    np.testing.assert_allclose(np.asarray(out["dot"]),
+                               np.asarray(base["dot"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["dot"]),
+                               (x * y).reshape(3, -1).sum(axis=1), rtol=1e-4)
+    # deterministic: a fixed split factor reproduces its bits on relaunch
+    again = g.launch(ins, config=_cfg(_plan(rsplit)), outputs=("dot",))
+    np.testing.assert_array_equal(np.asarray(out["dot"]),
+                                  np.asarray(again["dot"]))
+
+
+def test_fused_split_max_is_bitwise_exact(rng):
+    _, fx = _mk("x", 3, SOA, rng)
+    g = (LaunchGraph("rs_max")
+         .add(lambda v: {"t": v["x"] * v["x"]}, {"x": "x"}, {"t": 3})
+         .add_reduce("t", op="max", name="tmax"))
+    base = g.launch({"x": fx}, config=_cfg(_plan(1)), outputs=("tmax",))
+    out = g.launch({"x": fx}, config=_cfg(_plan(4)), outputs=("tmax",))
+    # max is idempotent-insensitive to reassociation: bitwise, not approx
+    np.testing.assert_array_equal(np.asarray(out["tmax"]),
+                                  np.asarray(base["tmax"]))
+
+
+@pytest.mark.parametrize("rsplit", [2, 4])
+def test_fused_stencil_split_matches_unsplit(rsplit, rng):
+    x, fx = _mk("x", 3, SOA, rng)
+
+    def lap(v, gather):
+        return {"z": gather("x", (1, 0, 0)) + gather("x", (-1, 0, 0))
+                - 2.0 * v["x"]}
+
+    g = (LaunchGraph("rs_lap")
+         .add_stencil(lap, {"x": "x"}, {"z": 3}, width=1)
+         .add_reduce("z", op="sum", name="zsum"))
+    base = g.launch({"x": fx}, config=_cfg(_plan(1, bx=1)),
+                    outputs=("z", "zsum"))
+    out = g.launch({"x": fx}, config=_cfg(_plan(rsplit, bx=1)),
+                   outputs=("z", "zsum"))
+    np.testing.assert_array_equal(out["z"].to_numpy(), base["z"].to_numpy())
+    np.testing.assert_allclose(np.asarray(out["zsum"]),
+                               np.asarray(base["zsum"]), rtol=1e-4,
+                               atol=1e-5)
+    again = g.launch({"x": fx}, config=_cfg(_plan(rsplit, bx=1)),
+                     outputs=("zsum",))
+    np.testing.assert_array_equal(np.asarray(out["zsum"]),
+                                  np.asarray(again["zsum"]))
+
+
+def test_batched_split_matches_per_element(rng):
+    xs = rng.normal(size=(3, 3, *LAT)).astype(np.float32)
+    ys = rng.normal(size=(3, 3, *LAT)).astype(np.float32)
+    bx = BatchedField.stack([Field.from_numpy("x", a, LAT, SOA) for a in xs])
+    by = BatchedField.stack([Field.from_numpy("y", a, LAT, SOA) for a in ys])
+    g = _dot_graph()
+    out = g.launch({"x": bx, "y": by}, config=_cfg(_plan(4)),
+                   outputs=("dot",))["dot"]
+    assert np.asarray(out).shape == (3, 3)
+    for i in range(3):
+        single = g.launch(
+            {"x": Field.from_numpy("x", xs[i], LAT, SOA),
+             "y": Field.from_numpy("y", ys[i], LAT, SOA)},
+            config=_cfg(_plan(4)), outputs=("dot",))["dot"]
+        np.testing.assert_array_equal(np.asarray(out)[i], np.asarray(single))
+
+
+# -- standalone target_sum / target_max ---------------------------------------
+
+@pytest.mark.parametrize("lay", LAYOUTS, ids=lambda l: l.name)
+def test_standalone_split_sum_within_tolerance(lay, rng):
+    x, fx = _mk("x", 3, lay, rng)
+    s1 = target_sum(fx, _cfg(_plan(1)))
+    s4 = target_sum(fx, _cfg(_plan(4)))
+    np.testing.assert_allclose(np.asarray(s4), np.asarray(s1), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(s4),
+                                  np.asarray(target_sum(fx, _cfg(_plan(4)))))
+
+
+def test_standalone_split_exact_for_max_and_integers(rng):
+    x, fx = _mk("x", 3, SOA, rng)
+    np.testing.assert_array_equal(
+        np.asarray(target_max(fx, _cfg(_plan(4)))),
+        np.asarray(target_max(fx, _cfg(_plan(1)))))
+    di = rng.integers(-100, 100, size=(3, 128)).astype(np.int32)
+    fi = Field.from_canonical("xi", jnp.asarray(di), LAT, SOA)
+    # integer addition is associative: the split sum is bitwise the unsplit
+    np.testing.assert_array_equal(
+        np.asarray(target_sum(fi, _cfg(_plan(2)))), di.sum(axis=1))
+    np.testing.assert_array_equal(
+        np.asarray(target_max(fi, _cfg(_plan(2)))), di.max(axis=1))
+
+
+# -- ReduceSpec: the public reduction monoid ----------------------------------
+
+def test_reduce_spec_contract():
+    s = ReduceSpec(op="sum")
+    assert float(s.combine(jnp.float32(2), jnp.float32(3))) == 5.0
+    assert np.all(np.asarray(s.init((2, 3), jnp.float32)) == 0.0)
+    m = ReduceSpec(op="max")
+    # dtype-aware init: integer max must start at iinfo.min, not -inf
+    assert int(np.asarray(m.init((1,), jnp.int32))[0]) == np.iinfo(np.int32).min
+    assert np.isneginf(np.asarray(m.init((1,), jnp.float32))[0])
+    parts = jnp.asarray([[1.0, 5.0], [2.0, -3.0]])
+    np.testing.assert_array_equal(np.asarray(m.combine_partials(parts)),
+                                  [2.0, 5.0])
+    np.testing.assert_array_equal(np.asarray(s.fold(parts, axis=0)),
+                                  [3.0, 2.0])
+    with pytest.raises(ValueError):
+        ReduceSpec(op="prod")
+
+
+def test_graph_reduce_specs_resolve_op_and_source():
+    g = _dot_graph()
+    specs = g.reduce_specs()
+    assert set(specs) == {"dot"}
+    assert specs["dot"].op == "sum" and specs["dot"].source == "t"
+    assert specs["dot"].ncomp == 3
+    # the legacy tuple view stays consistent with the dataclass view
+    assert g.reduce_info() == {"dot": ("t", "sum")}
+
+
+# -- plan axis: describe/json/validate/candidates -----------------------------
+
+def test_describe_and_json_name_rsplit():
+    p = _plan(4)
+    assert "rs4" in p.describe()
+    assert "rs" not in _plan(1).describe()
+    j = p.to_json()
+    assert j["rsplit"] == 4
+    assert LoweringPlan.from_json(j) == p
+
+
+def test_validate_rejects_bad_rsplit():
+    with pytest.raises(ValueError, match="rsplit"):
+        LoweringPlan("jnp", rsplit=2).validate()
+    with pytest.raises(ValueError):
+        LoweringPlan("pallas", vvl=16, rsplit=3, interpret=True).validate(
+            nsites=128, layouts=[SOA])  # 8 blocks, 3 does not divide
+    with pytest.raises(ValueError):
+        LoweringPlan("pallas", bx=1, rsplit=3, interpret=True).validate(
+            nsites=128, layouts=[SOA], lattice=LAT, stencil=True)
+    with pytest.raises(ValueError):
+        LoweringPlan("pallas", rsplit=0).validate()
+
+
+def test_candidate_rsplit_twins_gated_on_reduce():
+    cfg = TargetConfig("pallas", vvl=128)
+    with_red = plan_mod.candidate_plans(cfg, nsites=128, layouts=[SOA],
+                                        stencil=False, reduce=True)
+    without = plan_mod.candidate_plans(cfg, nsites=128, layouts=[SOA],
+                                       stencil=False, reduce=False)
+    assert any(c.rsplit > 1 for c in with_red)
+    assert all(c.rsplit == 1 for c in without)
+    st_red = plan_mod.candidate_plans(cfg, nsites=128, layouts=[SOA],
+                                      stencil=True, lattice=LAT, reduce=True)
+    assert any(c.rsplit > 1 for c in st_red)
+    for c in with_red + st_red:
+        c.validate(nsites=128, layouts=[SOA], lattice=LAT, stencil=c.bx > 0)
+
+
+def test_sub_lattice_plan_resets_rsplit():
+    cfg = TargetConfig("pallas", vvl=64)
+    outer = LoweringPlan("pallas", bx=1, rsplit=4, interpret=True)
+    sub = plan_mod.sub_lattice_plan(outer, cfg, (2, 4, 8))
+    assert sub.rsplit == 1  # the overlap slabs are already the split
+
+
+# -- bind(): the bound-launch API ---------------------------------------------
+
+def test_bind_matches_launch_and_overrides(rng):
+    _, fx = _mk("x", 3, SOA, rng)
+    _, fy = _mk("y", 3, SOA, rng)
+    g = _dot_graph()
+    ins = {"x": fx, "y": fy}
+    bound = g.bind(config=_cfg(_plan(4)), outputs=("t", "dot"))
+    assert isinstance(bound, BoundLaunch)
+    ref = g.launch(ins, config=_cfg(_plan(4)), outputs=("t", "dot"))
+    out = bound(ins)
+    np.testing.assert_array_equal(out["t"].to_numpy(), ref["t"].to_numpy())
+    np.testing.assert_array_equal(np.asarray(out["dot"]),
+                                  np.asarray(ref["dot"]))
+    # per-call overrides win over the bound defaults
+    over = bound(ins, config=_cfg(_plan(1)), outputs=("dot",))
+    assert set(over) == {"dot"}
+    np.testing.assert_allclose(np.asarray(over["dot"]),
+                               np.asarray(ref["dot"]), rtol=1e-5)
+    # per-call out_layouts merge on top of the bound mapping
+    bound_l = g.bind(config=_cfg(_plan(1)), outputs=("t",),
+                     out_layouts={"t": SOA})
+    assert bound_l(ins)["t"].layout == SOA
+    assert bound_l(ins, out_layouts={"t": AOS})["t"].layout == AOS
+
+
+def test_bound_launch_scalars_pass_through(rng):
+    _, fx = _mk("x", 3, SOA, rng)
+    _, fy = _mk("y", 3, SOA, rng)
+    g = LaunchGraph("rs_fma").add(
+        lambda v: {"o": v["y"] + v["a"] * v["x"]},
+        {"x": "x", "y": "y", "a": "a"}, {"o": 3})
+    bound = g.bind(config=TargetConfig("pallas", vvl=64), outputs=("o",))
+    out = bound({"x": fx, "y": fy}, scalars={"a": 0.5})["o"]
+    want = g.launch({"x": fx, "y": fy}, scalars={"a": 0.5},
+                    config=TargetConfig("pallas", vvl=64))["o"]
+    np.testing.assert_array_equal(out.to_numpy(), want.to_numpy())
+
+
+# -- tuned rsplit winner drives a real solve ----------------------------------
+
+@pytest.fixture()
+def tune_env(tmp_path, monkeypatch):
+    path = tmp_path / "tune_table.json"
+    monkeypatch.setenv(tune.ENV_VAR, str(path))
+    tune.clear_table_cache()
+    tune.reset_stats()
+    yield path
+    tune.clear_table_cache()
+
+
+def test_tuned_rsplit_cg_converges_to_default_solution(tune_env):
+    """Acceptance: a persisted rsplit>1 winner for the fused normal
+    operator drives the MILC CG solve under plan_policy="tuned" to the
+    same solution as the default plan within documented tolerance, and
+    bitwise-reproducibly across repeat runs."""
+    from repro.apps.milc import MilcConfig, init_problem, solve
+    from repro.apps.milc.cg import wilson_normal_graph
+
+    tgt = TargetConfig("pallas", vvl=256)
+    cfg = MilcConfig(lattice=(4, 4, 4, 4), kappa=0.10, tol=1e-8,
+                     max_iter=200, target=tgt)
+    u, b = init_problem(cfg, seed=0)
+    g = wilson_normal_graph(float(cfg.kappa))
+    cands = tune.plan_candidates_for(g, {"p": b, "u": u}, config=tgt,
+                                     outputs=("ap", "pap"))
+    split = [c for c in cands if c.rsplit > 1]
+    assert split, "reduce graph sweep must offer rsplit twins"
+    key = g.plan_key({"p": b, "u": u}, config=tgt, outputs=("ap", "pap"))
+    tune.record(key, split[0])
+    tune.clear_table_cache()
+    assert tune.lookup(key) == split[0]
+
+    res_default = solve(cfg, u, b)
+    tuned_cfg = dataclasses.replace(
+        cfg, target=dataclasses.replace(tgt, plan_policy="tuned"))
+    tune.reset_stats()
+    res_tuned = solve(tuned_cfg, u, b)
+    assert tune.stats()["hits"] > 0, "tuned solve never consulted the table"
+    x_def = res_default.x.to_numpy()
+    x_tun = res_tuned.x.to_numpy()
+    # same solution within the documented split-reduction tolerance
+    rel = np.linalg.norm(x_tun - x_def) / np.linalg.norm(x_def)
+    assert rel < 1e-4, f"tuned-rsplit solution drifted: rel={rel}"
+    assert float(res_tuned.residual) <= cfg.tol
+    # bitwise-reproducible: the tuned solve replays to identical bits
+    res_again = solve(tuned_cfg, u, b)
+    np.testing.assert_array_equal(res_again.x.to_numpy(), x_tun)
+    assert int(res_again.iterations) == int(res_tuned.iterations)
+
+
+def test_persisted_rsplit_round_trips_through_table(tune_env, rng):
+    """The tune-table JSON names the rsplit axis and a lookup reproduces
+    the exact plan (describe included)."""
+    _, fx = _mk("x", 3, SOA, rng)
+    _, fy = _mk("y", 3, SOA, rng)
+    g = _dot_graph()
+    plan = _plan(4)
+    key = g.plan_key({"x": fx, "y": fy}, config=TargetConfig("pallas"))
+    tune.record(key, plan)
+    raw = json.loads(tune_env.read_text())
+    assert raw["entries"][key]["plan"]["rsplit"] == 4
+    tune.clear_table_cache()
+    got = tune.lookup(key)
+    assert got == plan and "rs4" in got.describe()

@@ -223,6 +223,31 @@ def test_unknown_schema_version_degrades_to_misses(tune_env, rng):
     assert json.loads(tune_env.read_text())["schema_version"] == tune.SCHEMA_VERSION
 
 
+def test_schema_version_2_table_is_a_clean_miss(tune_env, rng):
+    """A version-2 table (pre-rsplit: its plans predate the split-reduction
+    axis and the tolerance-vs-bitwise reduction contract) loads as a clean
+    miss: lookups return None, and a re-tune sweeps and re-stamps the file
+    at the current version with plans that name ``rsplit``."""
+    fx = _field(rng)
+    cfg = TargetConfig("pallas", vvl=64)
+    g = _graph()
+    key = g.plan_key({"x": fx}, config=cfg)
+    v2_plan = {k: v for k, v in LoweringPlan("pallas", vvl=64).to_json().items()
+               if k != "rsplit"}
+    tune_env.write_text(json.dumps(
+        {"schema_version": 2, "entries": {key: {"plan": v2_plan}}}))
+    tune.clear_table_cache()
+    assert tune.load_table() == {}
+    assert tune.lookup(key) is None
+    tune.reset_stats()
+    plan, info = tune.autotune_graph(g, {"x": fx}, config=cfg, iters=1,
+                                     warmup=0, max_candidates=2)
+    assert not info["cached"] and tune.stats()["sweep_launches"] > 0
+    raw = json.loads(tune_env.read_text())
+    assert raw["schema_version"] == tune.SCHEMA_VERSION
+    assert "rsplit" in raw["entries"][info["key"]]["plan"]
+
+
 def test_malformed_entry_is_a_miss_not_a_crash(tune_env, rng):
     """Valid JSON but a structurally broken entry (missing plan, bogus
     engine) must behave like a miss: tuned-policy launches fall back to
