@@ -468,6 +468,187 @@ def layout_stencil_sweep(lattice=(8, 14, 16), milc_lattice=(8, 8, 8, 8),
     return rows, metrics
 
 
+def _stencil_vmem_views(graph, ins, outs):
+    """(in_views, out_views) for the VMEM footprint model — the same
+    derivation LaunchGraph.launch feeds the planner."""
+    rings = graph.halo_widths(tuple(outs))
+    prod = graph._produced()
+    red = set(graph._reduce_outputs())
+    first = next(iter(ins.values()))
+    in_views = tuple(
+        (f.ncomp, rings.get(n, 0), np.dtype(str(f.dtype)).itemsize)
+        for n, f in ins.items())
+    out_views = tuple(
+        (int(prod[o][0]), np.dtype(str(prod[o][1] or first.dtype)).itemsize)
+        for o in outs if o not in red)
+    return in_views, out_views
+
+
+def tile_stencil_sweep(lattice=(8, 14, 16), milc_lattice=(8, 8, 8, 8),
+                       engine="pallas"):
+    """``--tile-sweep``: the tiled y/z lowering (``LoweringPlan.by``/``bz``
+    + double-buffered tile DMA on a real TPU) against whole-staging on the
+    fused stencil chains — the launches whose per-program VMEM bounds the
+    shard size.  Two checks per chain, both CI-gated:
+
+    * identity: the tiled launch's field outputs are **bitwise** equal to
+      the whole-staged launch and its fp sum reductions tolerance-equal
+      (per-tile fold order — the rsplit contract).  The wall-clock
+      regression bound is measured on the *single-tile* plan (by/bz =
+      whole axes: same program count through the tiled code path), which
+      isolates the lowering overhead; the multi-tile twin's timing is
+      reported unbounded — on interpret/CPU more programs cost linearly
+      (tiles are a capacity lever here; the DMA overlap win needs a real
+      TPU).
+    * capacity: a VMEM byte budget sized *below* the chain's whole-staged
+      footprint makes ``candidate_plans`` reject every untiled pallas
+      candidate (logged with the footprint estimate) while the default
+      policy auto-tiles and the launch **runs to completion**, bit-identical
+      to the unbudgeted run — the "shard bounded by tile, not lattice"
+      acceptance demo.
+
+    Returns (rows, metrics): metrics maps chain -> {whole_s, tiled_s, plan
+    labels, fields_bitwise, reductions_close, budget_demo}."""
+    from repro.core import plan as plan_mod
+    from repro.core import tune
+    from repro.kernels.lb_propagation.ops import collide_propagate_graph
+
+    tgt = TargetConfig(engine, vvl=128)
+    rng = np.random.default_rng(0)
+    dist_np = (1.0 + 0.1 * rng.normal(size=(19, *lattice))).astype(np.float32)
+    force_np = (0.01 * rng.normal(size=(3, *lattice))).astype(np.float32)
+    cfg4 = MilcConfig(lattice=milc_lattice, kappa=0.1, target=tgt)
+    u4, b4 = init_problem(cfg4, seed=0)
+
+    def mid_div(n):  # a proper divisor that actually tiles (n>1 dims)
+        divs = [d for d in range(1, n + 1) if n % d == 0]
+        return divs[-2] if len(divs) > 1 else 0
+
+    cases = [
+        ("lb_step", collide_propagate_graph(0.8),
+         {"dist": Field.from_numpy("dist", dist_np, lattice, SOA),
+          "force": Field.from_numpy("force", force_np, lattice, SOA)},
+         ("dist2",), lattice),
+        ("wilson_normal", wilson_normal_graph(cfg4.kappa),
+         {"p": b4, "u": u4}, ("ap", "pap"), milc_lattice),
+    ]
+    rows, metrics = [], {}
+    for name, graph, ins, outs, lat in cases:
+        whole = tune.plan_candidates_for(
+            graph, ins, config=tgt, outputs=outs)[0]
+        tiled = dataclasses.replace(
+            whole, by=mid_div(lat[1]), bz=mid_div(lat[2]))
+        # whole-axis tiles: one program per slab, same as untiled, but
+        # through the tiled code path — the overhead the gate bounds
+        tiled1 = dataclasses.replace(whole, by=lat[1], bz=lat[2])
+        in_views, out_views = _stencil_vmem_views(graph, ins, outs)
+        fp_whole = plan_mod.estimate_vmem_bytes(
+            whole, lattice=lat, in_views=in_views, out_views=out_views)
+        fp_tiled = plan_mod.estimate_vmem_bytes(
+            tiled, lattice=lat, in_views=in_views, out_views=out_views)
+
+        def run(plan, _g=graph, _i=ins, _o=outs):
+            return jax.tree_util.tree_leaves(
+                _g.launch(_i, config=tgt, outputs=_o, plan=plan))
+
+        t_wh, t_t1 = _time_interleaved(run, whole, tiled1)
+        _, t_ti = _time_interleaved(run, whole, tiled)
+        a = graph.launch(ins, config=tgt, outputs=outs, plan=whole)
+        fields_bitwise, reds_close = True, True
+        for plan in (tiled, tiled1):
+            b = graph.launch(ins, config=tgt, outputs=outs, plan=plan)
+            for o in outs:
+                if isinstance(a[o], Field):
+                    fields_bitwise = fields_bitwise and bool(np.array_equal(
+                        np.asarray(a[o].data), np.asarray(b[o].data)))
+                else:  # fp reduction: per-tile fold => tolerance contract
+                    reds_close = reds_close and bool(np.allclose(
+                        np.asarray(a[o]), np.asarray(b[o]),
+                        rtol=1e-5, atol=1e-7))
+
+        # capacity demo: budget below the whole-staged footprint
+        budget = max(fp_whole // 2, fp_tiled + 1)
+        cfg_b = dataclasses.replace(tgt, vmem_bytes=budget)
+        cands = tune.plan_candidates_for(
+            graph, ins, config=cfg_b, outputs=outs)
+        untiled_rejected = all(
+            (c.by or c.bz) for c in cands if c.engine == "pallas")
+        auto = cands[0]
+        try:  # default policy under the budget: must run to completion
+            c = graph.launch(ins, config=cfg_b, outputs=outs)
+            runs = True
+            demo_bitwise = all(
+                bool(np.array_equal(np.asarray(a[o].data),
+                                    np.asarray(c[o].data)))
+                for o in outs if isinstance(a[o], Field))
+        except Exception as e:  # surfaced through the gate, not a crash
+            runs, demo_bitwise = False, False
+            print(f"budget demo launch failed for {name}: {e}",
+                  file=sys.stderr)
+        metrics[name] = {
+            "whole_s": t_wh, "tiled_s": t_ti, "tiled1_s": t_t1,
+            "whole_plan": whole.describe(footprint=fp_whole),
+            "tiled_plan": tiled.describe(footprint=fp_tiled),
+            "tiled1_plan": tiled1.describe(),
+            "fields_bitwise": fields_bitwise,
+            "reductions_close": reds_close,
+            "budget_demo": {
+                "vmem_bytes": budget,
+                "untiled_rejected": bool(untiled_rejected),
+                "auto_plan": auto.describe(),
+                "auto_tiled": bool(auto.by or auto.bz),
+                "runs": runs,
+                "fields_bitwise": demo_bitwise,
+            },
+        }
+        rows.append(csv_row(f"fig3_tile/{name}_whole", t_wh * 1e6,
+                            f"plan={whole.describe(footprint=fp_whole)}"))
+        rows.append(csv_row(
+            f"fig3_tile/{name}_tiled1", t_t1 * 1e6,
+            f"plan={tiled1.describe()};bitwise={fields_bitwise}"))
+        rows.append(csv_row(
+            f"fig3_tile/{name}_tiled", t_ti * 1e6,
+            f"plan={tiled.describe(footprint=fp_tiled)};"
+            f"bitwise={fields_bitwise}"))
+        rows.append(csv_row(
+            f"fig3_tile/{name}_budget_demo", 0.0,
+            f"vmem_bytes={budget};auto_plan={auto.describe()};runs={runs}"))
+    return rows, metrics
+
+
+def gate_tile(metrics, tolerance):
+    """The tile-sweep CI gate: tiled lowering must be bitwise identical on
+    fields, tolerance-equal on fp reductions, within the wall-clock bound,
+    and the over-budget demo must reject untiled candidates yet run to
+    completion through the auto-tiled default."""
+    failures = []
+    for name, m in metrics.items():
+        if not m["fields_bitwise"]:
+            failures.append(
+                f"{name}: tiled field outputs differ bitwise from "
+                f"whole-staging ({m['tiled_plan']} vs {m['whole_plan']})")
+        if not m["reductions_close"]:
+            failures.append(
+                f"{name}: tiled reductions exceed the fp tolerance "
+                f"contract ({m['tiled_plan']})")
+        if tolerance is not None and m["tiled1_s"] > m["whole_s"] * (1.0 + tolerance):
+            failures.append(
+                f"{name}: tiled lowering overhead at equal program count "
+                f"{m['tiled1_s']*1e6:.1f}us > whole-staged "
+                f"{m['whole_s']*1e6:.1f}us * (1+{tolerance:.2f})")
+        d = m["budget_demo"]
+        if not d["untiled_rejected"]:
+            failures.append(
+                f"{name}: an untiled pallas candidate survived the "
+                f"{d['vmem_bytes']}B budget sweep")
+        if not (d["auto_tiled"] and d["runs"] and d["fields_bitwise"]):
+            failures.append(
+                f"{name}: over-budget demo did not run tiled to completion "
+                f"bit-identically (auto_plan={d['auto_plan']}, "
+                f"runs={d['runs']}, bitwise={d['fields_bitwise']})")
+    return failures
+
+
 def gate_layout_identity(metrics):
     """The layout-sweep CI gate: every native-block launch must be bitwise
     identical to its staged-nd twin — the view is a data-movement knob,
@@ -536,11 +717,24 @@ def main(argv=None):
                     help="sweep the fused stencil chains across "
                          "SoA/AoS/AoSoA{4,8,16}, native-block vs staged-nd "
                          "side by side, gated on bit-identity")
+    ap.add_argument("--tile-sweep", action="store_true",
+                    help="tiled (by/bz) vs whole-staged fused stencil "
+                         "chains, gated on bit-identity and the over-budget "
+                         "auto-tiling demo")
+    ap.add_argument("--tile-gate", type=float, default=None, metavar="TOL",
+                    help="with --tile-sweep: exit 1 on identity/demo "
+                         "failure or if a tiled launch is slower than "
+                         "whole-staging beyond TOL (e.g. 0.10)")
     args = ap.parse_args(argv)
     sizes = (dict(lattice=(8, 8, 8), milc_lattice=(4, 4, 4, 4))
              if args.smoke else {})
     rows, metrics, failures = [], {}, []
-    if args.layout_sweep:
+    if args.tile_sweep:
+        tsizes = (dict(lattice=(4, 14, 16), milc_lattice=(4, 4, 4, 4))
+                  if args.smoke else {})
+        rows, metrics = tile_stencil_sweep(engine=args.engine, **tsizes)
+        failures += gate_tile(metrics, args.tile_gate)
+    elif args.layout_sweep:
         # lattices keep the halo'd inner planes SAL-tileable up to AoSoA16
         lsizes = (dict(lattice=(4, 14, 16), milc_lattice=(4, 4, 4, 4))
                   if args.smoke else {})
@@ -567,14 +761,16 @@ def main(argv=None):
     for r in rows:
         print(r)
     if args.json:
-        mode = ("layout-sweep" if args.layout_sweep
+        mode = ("tile-sweep" if args.tile_sweep
+                else "layout-sweep" if args.layout_sweep
                 else "tune" if args.tune else "fused")
+        tol = (args.tile_gate if args.tile_sweep
+               else args.tune_gate if args.tune else args.gate)
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "metrics": metrics,
                        "engine": args.engine, "smoke": args.smoke,
                        "mode": mode,
-                       "gate": {"tolerance": (args.tune_gate if args.tune
-                                              else args.gate),
+                       "gate": {"tolerance": tol,
                                 "failures": failures}}, f, indent=2)
     if failures:
         print("PERF REGRESSION GATE FAILED:", *failures, sep="\n  ",

@@ -13,6 +13,13 @@ every Table-1 ridge point (C4).
 ``--json PATH`` writes the rows plus structured per-kernel metrics in the
 same top-level schema as fig3 (``rows`` / ``metrics`` / ``gate``), so the
 ``BENCH_*.json`` trajectory tooling covers the bandwidth sweep too.
+
+The ``fig4_tile/*`` rows extend the roofline to tiled lowerings
+(``LoweringPlan.by``/``bz``): at the tile the planner itself picks under a
+half-footprint VMEM budget, they record bytes moved per tile against the
+whole-staging lowering — what tiling buys (per-program footprint bounded
+by the tile, not the lattice) and what it costs (halo overfetch where
+adjacent tile windows overlap).
 """
 
 from __future__ import annotations
@@ -25,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.ludwig import gradients as LG
+from repro.core import plan as plan_mod
+from repro.core.stencil import tile_boxes
 from repro.kernels.lb_collision import ref as lbref
 from repro.kernels.lb_propagation import ref as propref
 from repro.kernels.wilson_dslash import ref as wdref
@@ -33,6 +42,55 @@ try:
     from .common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
 except ImportError:  # run as a script: python benchmarks/fig4_bandwidth.py
     from common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
+
+
+def _tile_roofline(name, lattice, in_views, out_views, rows, metrics):
+    """Tiled-launch roofline row: bytes moved per tile vs whole-staging.
+
+    Pure geometry — ``tile_boxes`` enumerates the cover and the planner's
+    own VMEM model (``estimate_vmem_bytes``) prices the footprints, at the
+    (by, bz) ``choose_tiles`` picks under a budget of half the untiled
+    footprint.  No launch runs; these rows track the *traffic contract* of
+    the tiled lowering across the perf trajectory."""
+    bx = 1
+    whole = plan_mod.LoweringPlan("pallas", bx=bx)
+    fp_whole = plan_mod.estimate_vmem_bytes(
+        whole, lattice=lattice, in_views=in_views, out_views=out_views)
+    by, bz = plan_mod.choose_tiles(
+        lattice, bx, in_views=in_views, out_views=out_views,
+        vmem_bytes=fp_whole // 2)
+    tiled = plan_mod.LoweringPlan("pallas", bx=bx, by=by, bz=bz)
+    fp_tiled = plan_mod.estimate_vmem_bytes(
+        tiled, lattice=lattice, in_views=in_views, out_views=out_views)
+    boxes = tile_boxes(lattice, bx, by, bz)
+    exts = [e for _, e in boxes[0]]
+    # per-tile DMA payload: one halo'd window per input + the output tile
+    tile_in = sum(ncomp * int(np.prod([e + 2 * r for e in exts])) * isz
+                  for ncomp, r, isz in in_views)
+    tile_out = sum(ncomp * int(np.prod(exts)) * isz
+                   for ncomp, isz in out_views)
+    whole_in = sum(ncomp * int(np.prod([s + 2 * r for s in lattice])) * isz
+                   for ncomp, r, isz in in_views)
+    useful_in = sum(ncomp * int(np.prod(lattice)) * isz
+                    for ncomp, _, isz in in_views)
+    # adjacent tile windows overlap by the halo ring, so total tile
+    # traffic overfetches the minimal (whole-staged) input bytes
+    overfetch = len(boxes) * tile_in / max(useful_in, 1)
+    metrics[f"tile_{name}"] = {
+        "tile": [bx, by, bz],
+        "tiles": len(boxes),
+        "bytes_per_tile": tile_in + tile_out,
+        "bytes_whole_staged": whole_in,
+        "vmem_tiled": fp_tiled,
+        "vmem_whole": fp_whole,
+        "overfetch_vs_useful": overfetch,
+    }
+    rows.append(csv_row(
+        f"fig4_tile/{name}", 0.0,
+        f"tile={bx}x{by or lattice[1]}x{bz or lattice[2]};"
+        f"tiles={len(boxes)};bytes_per_tile={tile_in + tile_out};"
+        f"bytes_whole_staged={whole_in};vmem_tiled={fp_tiled};"
+        f"vmem_whole={fp_whole};overfetch_vs_useful={overfetch:.2f}"))
 
 
 def _cost(fn, *args):
@@ -95,6 +153,15 @@ def main(argv=None):
             f"oi_fpb={oi:.2f};useful_bytes={useful};hlo_bytes={hbytes:.0f};"
             f"achievable_bw_frac={frac:.2f};"
             f"memory_bound_on_v5e={oi < ridge_point('tpu-v5e')}"))
+    # tiled-launch roofline: views mirror what launch() feeds the planner
+    # (dist width-1 + width-0 force for the LB stencil; width-2 spinor +
+    # gauge for the fused M^dag M)
+    tile_cases = {
+        "lb_stencil": (lat, ((19, 1, 4), (3, 0, 4)), ((19, 4),)),
+        "wilson_normal": (lat4, ((24, 2, 4), (72, 2, 4)), ((24, 4),)),
+    }
+    for name, (tlat, iv, ov) in tile_cases.items():
+        _tile_roofline(name, tlat, iv, ov, rows, metrics)
     for r in rows:
         print(r)
     if args.json:

@@ -36,6 +36,13 @@ boundary slabs run once the halos land — comms hidden behind compute), or
 `run_steps` drives the step through core.schedule.StepPipeline (donated
 double-buffers, pipelined dispatch) for multi-timestep runs.
 
+Shard size is bounded by *tile* size, not lattice size: when a shard's
+whole-staged footprint exceeds the VMEM budget (``TargetConfig.vmem_bytes``
+or ``$TARGETDP_VMEM_BYTES``), the planning layer tiles the y/z axes of the
+fused LB launch (``LoweringPlan.by``/``bz``, double-buffered tile DMA on a
+real TPU) — production-size local volumes run with no driver changes here,
+and the overlap scheduler's sub-launches inherit the tiles.
+
 Layouts: every Field a step builds carries ``cfg.layout`` (the paper's
 per-architecture layout switch), including the halo'd inputs of the fused
 LB launch — so a tuned table whose winner is the native-AoSoA stencil

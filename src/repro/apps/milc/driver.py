@@ -26,6 +26,12 @@ local lattice stays SAL-tileable (falling back to SOA otherwise,
 ``tileable_layout``), so a tuned native-AoSoA stencil plan
 (``LoweringPlan.view == "block"``) reaches the fused per-iteration
 operator under ``cfg.target.plan_policy="tuned"`` with no driver edits.
+The same goes for tiled plans (``LoweringPlan.by``/``bz``): when a
+shard's whole-staged M^dag M footprint exceeds the VMEM budget
+(``TargetConfig.vmem_bytes`` / ``$TARGETDP_VMEM_BYTES``), the planning
+layer tiles the y/z axes of the fused operator — per-device local volume
+is bounded by the tile, not the lattice, which is what lets the paper's
+fig 5 lattice sizes fit a device's pipeline.
 """
 
 from __future__ import annotations

@@ -115,6 +115,7 @@ from .target import (
     build_reduce_specs,
     build_slab_out_specs,
     build_split_reduce_specs,
+    build_tiled_out_specs,
 )
 
 __all__ = [
@@ -243,12 +244,21 @@ def _block_geometry(
     out_layouts: Mapping[str, Layout],
     field_outputs: Sequence[str],
     lattice: Tuple[int, ...],
+    tiled: bool = False,
 ) -> Tuple[List[Tuple[int, ...]], List[bool]]:
     """Per-input halo'd lattices and native-AoSoA staging flags for a
     stencil lowering.  Under ``view="block"`` this is the launch-time form
     of ``core.plan.block_view_ok``: raises ValueError (naming the offending
     value) when an AoSoA input/output is not block-aligned or when nothing
-    in the launch is AoSoA at all."""
+    in the launch is AoSoA at all.
+
+    ``tiled`` (LoweringPlan.by/.bz set) applies the same discipline per
+    tile: *input* alignment is unchanged — native windows still slice whole
+    x-planes on the block axis, the y/z tile is cut after the VMEM unpack,
+    so SAL-aligned tile edges come for free — but native AoSoA *outputs*
+    degrade to canonical tile writes (a y/z tile is not a contiguous block
+    run), so the output-alignment check does not apply and an AoSoA input
+    is required for the view to pay at all."""
     # in "pre"/"overlap" mode the caller's lattices already carry the halo
     hlats = [
         tuple(s + (2 * ring if halo == "periodic" else 0) for s in lat)
@@ -272,6 +282,14 @@ def _block_geometry(
                 f"view='staged-nd' or a conforming sal "
                 f"(core.plan.block_view_ok)")
         native_in[idx] = True
+    if tiled:
+        if not aosoa_in_play:
+            raise ValueError(
+                "view='block' under a tiled plan (by/bz) lowers AoSoA "
+                "*inputs* natively (tiled outputs always write canonical "
+                "tiles), but no input layout of this launch is AoSoA — "
+                "use view='staged-nd'")
+        return hlats, native_in
     if not aosoa_in_play and not any(
             out_layouts[o].kind is LayoutKind.AOSOA for o in field_outputs):
         raise ValueError(
@@ -796,6 +814,18 @@ class LaunchGraph:
                 nc = src_nc
             out_info[o] = (int(nc), jnp.dtype(dt or first.dtype))
 
+        # per-site staging shapes for the VMEM budget model: what the
+        # planner needs to estimate a candidate's per-program footprint
+        # (and auto-tile y/z when whole-staging would blow the budget)
+        vmem_views = None
+        if stencil:
+            vmem_views = (
+                tuple((ins[n].ncomp, r, jnp.dtype(ins[n].dtype).itemsize)
+                      for n, r in zip(ordered_ins, in_rings)),
+                tuple((out_info[o][0], out_info[o][1].itemsize)
+                      for o in field_outputs),
+            )
+
         # -- planning: every lowering decision comes from a LoweringPlan ----
         all_layouts = ([ins[n].layout for n in ordered_ins]
                        + [out_layouts[o] for o in field_outputs])
@@ -817,7 +847,8 @@ class LaunchGraph:
         if plan is None:  # default policy, or tuned-table miss
             plan = plan_mod.default_plan(
                 config, nsites=nsites, layouts=all_layouts,
-                stencil=stencil, lattice=lattice, halo=halo)
+                stencil=stencil, lattice=lattice, halo=halo,
+                vmem_views=vmem_views)
         else:
             plan = plan_mod.adapt_plan(plan, stencil=stencil, halo=halo)
             try:
@@ -833,7 +864,8 @@ class LaunchGraph:
                         [(ins[n].ncomp, ins[n].layout) for n in ordered_ins],
                         [ins[n].lattice for n in ordered_ins],
                         in_rings, halo, plan.view, out_layouts,
-                        field_outputs, lattice)
+                        field_outputs, lattice,
+                        tiled=bool(plan.by or plan.bz))
             except ValueError:
                 if not from_table:
                     raise
@@ -847,7 +879,8 @@ class LaunchGraph:
                     plan.describe(), self.name, lattice, exc_info=True)
                 plan = plan_mod.default_plan(
                     config, nsites=nsites, layouts=all_layouts,
-                    stencil=stencil, lattice=lattice, halo=halo)
+                    stencil=stencil, lattice=lattice, halo=halo,
+                    vmem_views=vmem_views)
 
         if stencil and plan.halo == "overlap":
             # split schedule: interior + boundary sub-launches (each a
@@ -899,6 +932,10 @@ class LaunchGraph:
                 rsplit=plan.rsplit,
                 batch=batch,
                 in_batched=in_batched,
+                by=plan.by,
+                bz=plan.bz,
+                in_dtypes=tuple(jnp.dtype(ins[n].dtype)
+                                for n in ordered_ins),
             )
             if stencil:  # only the stencil lowering is view-sensitive
                 build_kw["view"] = plan.view
@@ -1102,7 +1139,14 @@ class LaunchGraph:
         rsplit: int = 1,
         batch: int = 0,
         in_batched: Sequence[bool] = (),
+        by: int = 0,
+        bz: int = 0,
+        in_dtypes: Sequence[object] = (),
     ) -> Callable:
+        # by/bz/in_dtypes only drive the stencil (_build_nd) lowering;
+        # plan.validate() rejects tiles on site-local chains, so they are
+        # always 0/() here — accepted so launch() can share one build_kw
+        del by, bz, in_dtypes
         run_stages = self._run_stages
         nsites = int(math.prod(lattice))
         red_spec = self.reduce_specs()
@@ -1213,7 +1257,8 @@ class LaunchGraph:
                 part = partials[o][:, None].astype(out_info[o][1])
                 while part.ndim < len(r.shape):
                     part = part[None]
-                _accumulate(r, spec.combine, spec.init, part, axis=red_axis)
+                _accumulate(r, spec.combine, spec.init, part,
+                            axes=(red_axis,))
 
         def fn(datas, svals):
             _STATS["traces"] += 1
@@ -1273,6 +1318,9 @@ class LaunchGraph:
         rsplit: int = 1,
         batch: int = 0,
         in_batched: Sequence[bool] = (),
+        by: int = 0,
+        bz: int = 0,
+        in_dtypes: Sequence[object] = (),
     ) -> Callable:
         run_nd = self._run_stages_nd
         site_ndim = len(lattice)
@@ -1342,14 +1390,32 @@ class LaunchGraph:
         # an aligned AoSoA output is packed in VMEM and written as native
         # blocks.  Non-AoSoA values take the staged path either way (SOA
         # staging is a view, AoS a transpose).
+        #
+        # A *tiled* plan (by/bz > 0) appends one sequential grid axis per
+        # tiled lattice dim after the x-slab axis, iterating fastest — each
+        # program computes one (bx, by, bz) tile from a halo'd tile window.
+        # On the interpret/off-TPU fallback the inputs still stage whole
+        # (the window is a dynamic_slice of VMEM-staged data, bitwise
+        # identical to the untiled lowering); on a real TPU the inputs stay
+        # in HBM and each tile window is DMA'd into one of two VMEM scratch
+        # slots while the previous tile computes (double-buffered
+        # prefetch), so per-program VMEM is bounded by the tile, not the
+        # lattice.
         nslabs = lattice[0] // bx
         per = nslabs // rsplit
+        tiled = bool(by or bz)
+        nty = (lattice[1] // by) if by else 1
+        ntz = (lattice[2] // bz) if bz else 1
         site_grid = (rsplit, per) if rsplit > 1 else (nslabs,)
+        if by:
+            site_grid += (nty,)
+        if bz:
+            site_grid += (ntz,)
         grid = ((batch,) + site_grid) if batch else site_grid
         nin, nsc = len(ordered_ins), len(ordered_scalars)
         hlats, native_in = _block_geometry(
             ordered_ins, in_meta, in_lats, in_rings, halo, view,
-            out_layouts, field_outputs, lattice)
+            out_layouts, field_outputs, lattice, tiled=tiled)
         stage_shapes = []
         for (ncomp, lay), hlat, nat in zip(in_meta, hlats, native_in):
             if nat:
@@ -1358,7 +1424,15 @@ class LaunchGraph:
             else:
                 stage_shapes.append((ncomp,) + hlat)
         in_specs = build_halo_in_specs(stage_shapes)
-        if view == VIEW_BLOCK:
+        if tiled:
+            # disjoint (bx, by, bz) tiles are directly expressible as
+            # Blocked windows; native AoSoA *outputs* degrade to canonical
+            # tile writes (a y/z tile is not a contiguous block run)
+            out_shapes, out_block_specs = build_tiled_out_specs(
+                field_outputs, out_info, lattice, bx, by, bz
+            )
+            native_out = [False] * len(field_outputs)
+        elif view == VIEW_BLOCK:
             # _block_geometry already rejected misaligned AoSoA outputs
             out_shapes, out_block_specs, native_out = build_block_out_specs(
                 field_outputs, out_info, out_layouts, lattice, bx
@@ -1394,49 +1468,33 @@ class LaunchGraph:
         nfield = len(field_outputs)
         inner_int = int(math.prod(lattice[1:]))
         name = self.name
-        red_axis = len(grid) - 1
+        axis0 = 1 if batch else 0
+        # accumulator rows initialize at the first program of *all* axes
+        # addressing one row: the x-slab axis plus any trailing tile axes
+        # (batch and split-segment axes select separate buffer rows)
+        acc_axes = tuple(range(axis0 + (1 if rsplit > 1 else 0), len(grid)))
 
-        def fused_kernel(*refs):
-            in_refs = refs[:nin]
-            sc_refs = refs[nin : nin + nsc]
-            out_refs = refs[nin + nsc : nin + nsc + nfield]
-            acc_refs = refs[nin + nsc + nfield :]
-            axis0 = 1 if batch else 0
-            if rsplit > 1:  # x-slab index rebased from the split grid axes
-                i = pl.program_id(axis0) * per + pl.program_id(axis0 + 1)
-            else:
-                i = pl.program_id(axis0)
-            xs = i * bx
-            values = {}
-            for n, (ncomp, lay), hlat, ring, nat, bat, r in zip(
-                    ordered_ins, in_meta, hlats, in_rings, native_in,
-                    in_batched, in_refs):
-                # full halo'd stage (VMEM); batched refs carry a leading
-                # length-1 batch-row axis
-                arr = r[...][0] if (batch and bat) else r[...]
-                rows = bx + 2 * ring
-                if nat:
-                    # block-coordinate rebase: each x-plane of the halo'd
-                    # lattice is row_blocks whole short arrays, so the
-                    # window [xs, xs + rows) is a contiguous run on the
-                    # block axis; the canonical nd window is recovered by
-                    # the AoSoA unpack on VMEM-resident data (transpose of
-                    # a (nblk, ncomp, sal) tile stack — never through HBM)
-                    row_blocks = int(math.prod(hlat[1:])) // lay.sal
-                    tile = jax.lax.dynamic_slice(
-                        arr,
-                        (xs * row_blocks, 0, 0),
-                        (rows * row_blocks, ncomp, lay.sal),
-                    )
-                    window = tile.transpose(1, 0, 2).reshape(
-                        (ncomp, rows) + hlat[1:])
+        def tile_tail(ys, zs, ring, hlat):
+            """(starts, sizes) of a program's halo'd window on the lattice
+            dims after x: tiled dims cut a (tile + 2*ring) window at the
+            tile origin, untiled dims cover the whole halo'd extent."""
+            starts, sizes = [], []
+            for d in range(1, site_ndim):
+                if d == 1 and by:
+                    starts.append(ys)
+                    sizes.append(by + 2 * ring)
+                elif d == 2 and bz:
+                    starts.append(zs)
+                    sizes.append(bz + 2 * ring)
                 else:
-                    window = jax.lax.dynamic_slice(
-                        arr,
-                        (0, xs) + (0,) * (site_ndim - 1),
-                        (ncomp, rows) + hlat[1:],
-                    )
-                values[n] = (window, ring)
+                    starts.append(0)
+                    sizes.append(hlat[d])
+            return starts, sizes
+
+        def finish_tile(values, sc_refs, out_refs, acc_refs):
+            """Shared kernel tail: scalars in, stages, tile writes,
+            reduction accumulation — identical for the staged fallback
+            and the DMA-pipelined kernel (bitwise-identity lever)."""
             for n, r in zip(ordered_scalars, sc_refs):
                 values[n] = (r[...][0] if batch else r[...], None)
             values, partials = run_nd(values, site_ndim)
@@ -1454,7 +1512,151 @@ class LaunchGraph:
                 part = partials[o][:, None].astype(out_info[o][1])
                 while part.ndim < len(r.shape):
                     part = part[None]
-                _accumulate(r, spec.combine, spec.init, part, axis=red_axis)
+                _accumulate(r, spec.combine, spec.init, part, axes=acc_axes)
+
+        def fused_kernel(*refs):
+            in_refs = refs[:nin]
+            sc_refs = refs[nin : nin + nsc]
+            out_refs = refs[nin + nsc : nin + nsc + nfield]
+            acc_refs = refs[nin + nsc + nfield :]
+            if rsplit > 1:  # x-slab index rebased from the split grid axes
+                i = pl.program_id(axis0) * per + pl.program_id(axis0 + 1)
+                tax = axis0 + 2
+            else:
+                i = pl.program_id(axis0)
+                tax = axis0 + 1
+            jt = 0
+            if by:
+                jt = pl.program_id(tax)
+                tax += 1
+            kt = pl.program_id(tax) if bz else 0
+            xs = i * bx
+            ys = jt * by
+            zs = kt * bz
+            values = {}
+            for n, (ncomp, lay), hlat, ring, nat, bat, r in zip(
+                    ordered_ins, in_meta, hlats, in_rings, native_in,
+                    in_batched, in_refs):
+                # full halo'd stage (VMEM); batched refs carry a leading
+                # length-1 batch-row axis
+                arr = r[...][0] if (batch and bat) else r[...]
+                rows = bx + 2 * ring
+                tstarts, tsizes = tile_tail(ys, zs, ring, hlat)
+                if nat:
+                    # block-coordinate rebase: each x-plane of the halo'd
+                    # lattice is row_blocks whole short arrays, so the
+                    # window [xs, xs + rows) is a contiguous run on the
+                    # block axis; the canonical nd window is recovered by
+                    # the AoSoA unpack on VMEM-resident data (transpose of
+                    # a (nblk, ncomp, sal) tile stack — never through HBM).
+                    # Under a tiled plan the y/z tile is then cut from the
+                    # unpacked canonical window — tile edges never split a
+                    # short array, so view="block" composes with any
+                    # dividing by/bz (the per-tile block_view_ok
+                    # discipline)
+                    row_blocks = int(math.prod(hlat[1:])) // lay.sal
+                    tile = jax.lax.dynamic_slice(
+                        arr,
+                        (xs * row_blocks, 0, 0),
+                        (rows * row_blocks, ncomp, lay.sal),
+                    )
+                    window = tile.transpose(1, 0, 2).reshape(
+                        (ncomp, rows) + hlat[1:])
+                    if tiled:
+                        window = jax.lax.dynamic_slice(
+                            window, (0, 0, *tstarts),
+                            (ncomp, rows, *tsizes))
+                else:
+                    window = jax.lax.dynamic_slice(
+                        arr,
+                        (0, xs, *tstarts),
+                        (ncomp, rows, *tsizes),
+                    )
+                values[n] = (window, ring)
+            finish_tile(values, sc_refs, out_refs, acc_refs)
+
+        # Double-buffered DMA pipeline (tiled pallas on a real TPU only):
+        # inputs stay in HBM (memory_space=ANY) and each program DMAs its
+        # halo'd tile window into one of two VMEM scratch slots, starting
+        # the copy for tile t+1 before waiting on tile t's — grid axes are
+        # sequential on TPU, so tile t+1's transfer overlaps tile t's
+        # compute.  Gated off under interpret (no async-copy semantics),
+        # rsplit/batch (extra grid axes ahead of the tile axes would need
+        # their own linearization), and native AoSoA inputs (block-rebased
+        # windows are staged whole).  Everything downstream of the window
+        # (finish_tile) is shared with the fallback, so the pipeline is a
+        # pure data-movement change.
+        use_dma = (
+            tiled and not interpret and rsplit == 1 and not batch
+            and not any(native_in)
+            and jax.default_backend() == "tpu"
+        )
+        n_lin = nslabs * nty * ntz
+        win_shapes = []
+        for (ncomp, lay), hlat, ring in zip(in_meta, hlats, in_rings):
+            _, tsz = tile_tail(0, 0, ring, hlat)
+            win_shapes.append((ncomp, bx + 2 * ring) + tuple(tsz))
+
+        def dma_kernel(*refs):
+            from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+            in_refs = refs[:nin]
+            sc_refs = refs[nin : nin + nsc]
+            out_refs = refs[nin + nsc : nin + nsc + nfield]
+            nred = len(red_outputs)
+            acc_refs = refs[nin + nsc + nfield : nin + nsc + nfield + nred]
+            bufs = refs[nin + nsc + nfield + nred :
+                        nin + nsc + nfield + nred + nin]
+            sems = refs[nin + nsc + nfield + nred + nin :]
+            tax = 1
+            jt = 0
+            if by:
+                jt = pl.program_id(tax)
+                tax += 1
+            kt = pl.program_id(tax) if bz else 0
+            i = pl.program_id(0)
+            # linear tile index: the grid iterates the z-tile axis fastest
+            t = (i * nty + jt) * ntz + kt
+
+            def copy(tl, slot, idx):
+                """Async-copy descriptor for input idx's halo'd window of
+                linear tile tl into scratch slot ``slot``."""
+                ii = tl // (nty * ntz)
+                jj = (tl // ntz) % nty
+                kk = tl % ntz
+                ring = in_rings[idx]
+                hlat = hlats[idx]
+                src = [slice(None), pl.ds(ii * bx, bx + 2 * ring)]
+                for d in range(1, site_ndim):
+                    if d == 1 and by:
+                        src.append(pl.ds(jj * by, by + 2 * ring))
+                    elif d == 2 and bz:
+                        src.append(pl.ds(kk * bz, bz + 2 * ring))
+                    else:
+                        src.append(slice(0, hlat[d]))
+                return pltpu.make_async_copy(
+                    in_refs[idx].at[tuple(src)],
+                    bufs[idx].at[slot],
+                    sems[idx].at[slot],
+                )
+
+            slot = jax.lax.rem(t, 2)
+
+            @pl.when(t == 0)
+            def _warm_up():
+                for ix in range(nin):
+                    copy(t, slot, ix).start()
+
+            @pl.when(t + 1 < n_lin)
+            def _prefetch():
+                for ix in range(nin):
+                    copy(t + 1, 1 - slot, ix).start()
+
+            values = {}
+            for ix, (n, ring) in enumerate(zip(ordered_ins, in_rings)):
+                copy(t, slot, ix).wait()
+                values[n] = (bufs[ix][slot], ring)
+            finish_tile(values, sc_refs, out_refs, acc_refs)
 
         def stage_in(n, meta, lat, ring, nat, d):
             if not nat:
@@ -1477,16 +1679,35 @@ class LaunchGraph:
                         stage_in(_n, _m, _l, _r, _na, x))(d))
                 else:
                     staged.append(stage_in(n, meta, lat, ring, nat, d))
+            kernel = fused_kernel
+            call_kw = dict(in_specs=in_specs)
+            if use_dma:
+                from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+                kernel = dma_kernel
+                # inputs stay in HBM; two window slots + one DMA
+                # semaphore pair of scratch per input
+                call_kw["in_specs"] = (
+                    [pl.BlockSpec(memory_space=pltpu.ANY)
+                     for _ in range(nin)] + list(in_specs[nin:])
+                )
+                dts = in_dtypes or tuple(
+                    jnp.float32 for _ in range(nin))
+                call_kw["scratch_shapes"] = (
+                    [pltpu.VMEM((2,) + w, jnp.dtype(dt))
+                     for w, dt in zip(win_shapes, dts)]
+                    + [pltpu.SemaphoreType.DMA((2,)) for _ in range(nin)]
+                )
             call = pl.pallas_call(
-                fused_kernel,
+                kernel,
                 grid=grid,
-                in_specs=in_specs,
                 out_specs=(
                     out_block_specs if len(out_block_specs) > 1 else out_block_specs[0]
                 ),
                 out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
                 interpret=interpret,
                 name=name,
+                **call_kw,
             )
             res = call(*staged, *svals)
             if len(out_shapes) == 1:
@@ -1560,12 +1781,15 @@ def _split_specs(specs, per: int) -> List[pl.BlockSpec]:
     on single-lattice BlockSpecs: the site-block/x-slab index is rebased
     to ``s * per + i``, so split segment ``s`` covers blocks
     [s*per, (s+1)*per) — the same block order as the unsplit grid, just
-    regrouped into rsplit stage-1 partials."""
+    regrouped into rsplit stage-1 partials.  Trailing grid coordinates
+    (the y/z tile axes of a tiled stencil plan) pass through unchanged,
+    so the split axis composes with tiling."""
     out = []
     for spec in specs:
         shape, m = tuple(spec.block_shape), spec.index_map
         out.append(pl.BlockSpec(
-            shape, lambda s, i, _m=m, _p=per: tuple(_m(s * _p + i))))
+            shape,
+            lambda s, i, *rest, _m=m, _p=per: tuple(_m(s * _p + i, *rest))))
     return out
 
 
@@ -1592,13 +1816,19 @@ def _batch_shapes(shapes, batch: int) -> List[jax.ShapeDtypeStruct]:
             for s in shapes]
 
 
-def _accumulate(ref, combine, init, partial, axis: int = 0):
+def _accumulate(ref, combine, init, partial, axes: Sequence[int] = (0,)):
     """Grid-sequential accumulation into a constant-index-map buffer (the
-    fused analogue of core.reduce's partial-sum kernel).  ``axis`` is the
-    site-block grid axis (1 when a leading batch axis is present: each
-    batch row initializes at its own first site block)."""
+    fused analogue of core.reduce's partial-sum kernel).  ``axes`` are the
+    grid axes that together address one accumulator row — the site-block
+    (or x-slab) axis plus any trailing y/z tile axes of a tiled stencil
+    plan; batch and split-segment axes are excluded because their rows are
+    separate buffer blocks selected by the BlockSpec.  The row initializes
+    at the program where *every* listed axis is 0 (its first visit)."""
+    cond = pl.program_id(axes[0]) == 0
+    for a in axes[1:]:
+        cond = jnp.logical_and(cond, pl.program_id(a) == 0)
 
-    @pl.when(pl.program_id(axis) == 0)
+    @pl.when(cond)
     def _init():
         ref[...] = init(ref.shape, ref.dtype)
 

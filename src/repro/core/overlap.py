@@ -140,7 +140,11 @@ def _window(f, box: Box, ring: int):
 def _sub_plan(outer: LoweringPlan, config, box_lat: Tuple[int, ...]) -> LoweringPlan:
     """The per-slab plan: the outer (overlap) plan rebased onto the slab's
     lattice with halo='pre' (boundary slabs are thin, so the x-slab may
-    shrink) — the planning layer owns the slab choice."""
+    shrink) — the planning layer owns the slab choice.  A tiled outer plan
+    (by/bz) keeps its y/z tiles on every sub-launch whose sub-lattice they
+    still divide (the interior always qualifies when tiles divide the
+    shard; thin boundary slabs may fall back to whole-axis), so sharded
+    ``halo="overlap"`` runs compose with >VMEM tiling."""
     return plan_mod.sub_lattice_plan(outer, config, box_lat, halo="pre")
 
 

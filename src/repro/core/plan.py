@@ -55,7 +55,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import logging
 import math
+import os
 from typing import Optional, Sequence, Tuple
 
 from .layout import Layout, LayoutKind
@@ -65,6 +67,7 @@ __all__ = [
     "divisors",
     "choose_vvl",
     "choose_slab",
+    "choose_tiles",
     "resolve_vvl",
     "sal_alignment",
     "block_view_ok",
@@ -73,7 +76,17 @@ __all__ = [
     "sub_lattice_plan",
     "candidate_plans",
     "graph_plan_key",
+    "tile_extents",
+    "estimate_vmem_bytes",
+    "resolved_vmem_bytes",
 ]
+
+log = logging.getLogger(__name__)
+
+# environment override for the per-program VMEM byte budget (see
+# resolved_vmem_bytes); an unset/empty value means "unbounded", which keeps
+# every default plan bit-identical to the pre-budget heuristics
+VMEM_ENV = "TARGETDP_VMEM_BYTES"
 
 VIEW_BLOCK = "block"
 VIEW_STAGED_ND = "staged-nd"
@@ -129,14 +142,29 @@ def choose_vvl(nsites: int, preferred: int = 128, multiple_of: int = 1) -> int:
 
 
 @functools.lru_cache(maxsize=4096)
-def choose_slab(x_dim: int, inner_sites: int, vvl: int) -> int:
+def choose_slab(
+    x_dim: int,
+    inner_sites: int,
+    vvl: int,
+    site_bytes: int = 0,
+    vmem_bytes: Optional[int] = None,
+) -> int:
     """Sites-per-program for a stencil (x-slab) grid: the largest divisor
     ``bx`` of the leading lattice dim whose slab (bx * inner_sites sites)
-    stays within the vvl budget.  The stencil analogue of choose_vvl — when
+    stays within the budget.  The stencil analogue of choose_vvl — when
     vvl does not divide the interior block (inner_sites ∤ vvl) the slab
     shrinks to the best conforming divisor instead of raising, and a single
-    x-plane (bx=1) is always valid."""
+    x-plane (bx=1) is always valid.
+
+    The budget is ``max(vvl, inner_sites)`` sites (the pre-budget heuristic,
+    bit-identical when no byte budget is in play), additionally capped by an
+    explicit VMEM byte budget when one is configured: ``site_bytes`` is the
+    per-site traffic of the launch (sum of input+output ncomp*itemsize) and
+    ``vmem_bytes`` the budget (``TargetConfig.vmem_bytes`` /
+    ``$TARGETDP_VMEM_BYTES``)."""
     budget = max(int(vvl), inner_sites)
+    if vmem_bytes and site_bytes:
+        budget = min(budget, max(vmem_bytes // site_bytes, 1))
     best = 1
     for bx in divisors(x_dim):
         if bx * inner_sites <= budget:
@@ -185,6 +213,116 @@ def block_view_ok(
     return True
 
 
+def tile_extents(
+    lattice: Sequence[int], bx: int, by: int = 0, bz: int = 0
+) -> Tuple[int, ...]:
+    """Per-dim tile extents of a (possibly) tiled stencil program: ``bx``
+    planes on the leading dim, ``by``/``bz`` on the next two when set (0 =
+    whole axis), every further dim whole.  The tiles with these extents
+    cover the lattice exactly and disjointly (validate() enforces the
+    divisibility that makes that true)."""
+    ext = [bx or lattice[0]]
+    if len(lattice) > 1:
+        ext.append(by or lattice[1])
+    if len(lattice) > 2:
+        ext.append(bz or lattice[2])
+    ext.extend(lattice[3:])
+    return tuple(ext)
+
+
+def resolved_vmem_bytes(config) -> Optional[int]:
+    """The per-program VMEM byte budget in effect: an explicit
+    ``TargetConfig.vmem_bytes`` wins, else ``$TARGETDP_VMEM_BYTES``, else
+    None (unbounded — the pre-budget behavior, so default plans stay
+    bit-identical unless a budget is actually configured)."""
+    vb = getattr(config, "vmem_bytes", None)
+    if vb is not None:
+        return int(vb) or None
+    env = os.environ.get(VMEM_ENV, "")
+    if env:
+        try:
+            return int(env) or None
+        except ValueError:
+            log.warning("ignoring non-integer $%s=%r", VMEM_ENV, env)
+    return None
+
+
+def estimate_vmem_bytes(
+    plan: "LoweringPlan",
+    *,
+    lattice: Sequence[int],
+    in_views: Sequence[Tuple[int, int, int]],
+    out_views: Sequence[Tuple[int, int]] = (),
+) -> int:
+    """Model the per-program VMEM footprint of a stencil launch in bytes.
+
+    in_views    (ncomp, halo ring, dtype itemsize) per external input
+    out_views   (ncomp, dtype itemsize) per field output
+
+    Untiled plans stage every input *whole* (the halo'd array is resident
+    for the launch) plus one output slab per program.  Tiled plans hold two
+    halo'd tile windows per input (the double-buffered DMA slots pipelining
+    tile t+1 against tile t) plus one output tile — which is what bounds a
+    shard by the tile, not the lattice."""
+    bx = plan.bx or lattice[0]
+    tiled = bool(plan.by or plan.bz)
+    total = 0
+    for ncomp, ring, isz in in_views:
+        if tiled:
+            win = [bx + 2 * ring]
+            if len(lattice) > 1:
+                win.append((plan.by or lattice[1]) + 2 * ring)
+            if len(lattice) > 2:
+                win.append((plan.bz or lattice[2]) + 2 * ring)
+            win.extend(s + 2 * ring for s in lattice[3:])
+            total += 2 * ncomp * int(math.prod(win)) * isz
+        else:
+            total += ncomp * int(
+                math.prod(s + 2 * ring for s in lattice)) * isz
+    tile_sites = int(math.prod(tile_extents(lattice, bx, plan.by, plan.bz)))
+    for ncomp, isz in out_views:
+        total += ncomp * tile_sites * isz
+    return total
+
+
+def choose_tiles(
+    lattice: Sequence[int],
+    bx: int,
+    *,
+    in_views: Sequence[Tuple[int, int, int]],
+    out_views: Sequence[Tuple[int, int]],
+    vmem_bytes: int,
+) -> Tuple[int, int]:
+    """Pick the largest (by, bz) tile whose estimated footprint fits the
+    byte budget, preferring to keep the minor (z) axis whole — tile windows
+    stay contiguous along the fast axis, which is what the DMA engine
+    wants.  Returns (0, 0) when untiled whole-staging already fits, and the
+    finest legal tile (best effort) when even it exceeds the budget."""
+
+    def fp(by, bz):
+        probe = LoweringPlan("pallas", bx=bx, by=by, bz=bz)
+        return estimate_vmem_bytes(
+            probe, lattice=lattice, in_views=in_views, out_views=out_views)
+
+    if fp(0, 0) <= vmem_bytes:
+        return (0, 0)
+    bys = [d for d in divisors(lattice[1])] if len(lattice) > 1 else [0]
+    bzs = [d for d in divisors(lattice[2])] if len(lattice) > 2 else [0]
+    pairs = [(by, bz) for by in bys for bz in bzs]
+    # largest tile first; prefer whole-z (bz == lattice[2]) on ties
+    pairs.sort(key=lambda p: ((p[0] or 1) * (p[1] or 1), p[1] or 1),
+               reverse=True)
+    for by, bz in pairs:
+        by_eff = 0 if (len(lattice) > 1 and by == lattice[1]) else by
+        bz_eff = 0 if (len(lattice) > 2 and bz == lattice[2]) else bz
+        if not (by_eff or bz_eff):
+            continue  # the untiled probe already failed
+        if fp(by_eff, bz_eff) <= vmem_bytes:
+            return (by_eff, bz_eff)
+    return (1 if len(lattice) > 1 and lattice[1] > 1 else 0,
+            1 if len(lattice) > 2 and lattice[2] > 1 else 0)
+
+
 def resolve_vvl(config, nsites: int, layouts: Sequence[Layout]) -> int:
     """config.vvl when it fits, else the best choose_vvl fallback.
 
@@ -220,6 +358,21 @@ class LoweringPlan:
     # rsplit; tolerance-equal (not bitwise) to rsplit=1 for fp sums, exact
     # for max and integer sums.  Pallas engine only.
     rsplit: int = 1
+    # y/z tile extents for the halo'd stencil grid (pallas engine only).
+    # 0 = whole axis: the pre-tiling x-slab lowering, so every persisted
+    # plan (and every hand-built plan that never set them) lowers exactly
+    # as before — no tune-table schema bump needed.  When set, each dim's
+    # extent must divide the lattice extent, the grid gains a trailing
+    # (sequential, fastest-iterating) tile axis per set extent, and each
+    # program computes one (bx, by, bz) tile from a halo'd tile window —
+    # on a real TPU the window is DMA'd into a double-buffered VMEM
+    # scratch slot while the previous tile computes, so per-program VMEM
+    # is bounded by the tile, not the lattice.  Field outputs stay bitwise
+    # identical to the untiled lowering; terminal fp-sum reductions are
+    # tolerance-equal (per-tile partials fold in tile order — the same
+    # contract as rsplit), exact for max and integer sums.
+    by: int = 0
+    bz: int = 0
 
     # -- serialization (core.tune persists plans as JSON) ----------------------
 
@@ -231,12 +384,21 @@ class LoweringPlan:
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
 
-    def describe(self) -> str:
-        """Short human/table label: the knob that distinguishes candidates."""
+    def describe(self, footprint: Optional[int] = None) -> str:
+        """Short human/table label: the knob that distinguishes candidates.
+        ``footprint`` (bytes, from :func:`estimate_vmem_bytes`) appends the
+        estimated per-program VMEM footprint — the tuner's over-budget skip
+        log and the benchmarks pass it; plain labels stay stable."""
         suffix = "/overlap" if self.halo == "overlap" else ""
+        fp = f" [~{footprint / 1024:.0f}KiB/prog]" if footprint else ""
         if self.engine != "pallas":
-            return self.engine + suffix
+            return self.engine + suffix + fp
         knob = f"bx={self.bx}" if self.bx else f"vvl={self.vvl}"
+        # the y/z tile axes are named whenever they are in play, like
+        # rsplit: a tuned tiled winner must be identifiable in persisted
+        # timing labels; untiled labels stay byte-stable
+        tile = ((f"/ty{self.by}" if self.by else "")
+                + (f"/tz{self.bz}" if self.bz else ""))
         # stencil plans carry the canonical-view knob (native AoSoA blocks
         # vs staged-nd); site-local plans are always "block", untagged so
         # persisted timing labels stay stable
@@ -245,8 +407,8 @@ class LoweringPlan:
         # tuned rsplit>1 winner must be identifiable in the persisted
         # timing labels (its results are tolerance-, not bitwise-equal)
         rs = f"/rs{self.rsplit}" if self.rsplit > 1 else ""
-        return (f"pallas/{knob}{view}{rs}"
-                + ("/interpret" if self.interpret else "") + suffix)
+        return (f"pallas/{knob}{tile}{view}{rs}"
+                + ("/interpret" if self.interpret else "") + suffix + fp)
 
     # -- validation -------------------------------------------------------------
 
@@ -275,14 +437,42 @@ class LoweringPlan:
                 "(add a stencil stage or use the default halo)")
         if self.rsplit < 1:
             raise ValueError(f"rsplit must be >= 1, got {self.rsplit}")
+        if self.by < 0 or self.bz < 0:
+            raise ValueError(
+                f"tile extents must be >= 0 (0 = whole axis), got "
+                f"by={self.by} bz={self.bz}")
         if self.engine == "jnp":
             if self.rsplit > 1:
                 raise ValueError(
                     "rsplit > 1 splits the pallas reduction grid into "
                     "stage-1 partial segments; the jnp engine folds "
                     "whole-lattice arrays and has no grid to split")
+            if self.by or self.bz:
+                raise ValueError(
+                    "by/bz tile the pallas stencil grid; the jnp engine "
+                    "folds whole-lattice arrays and has no grid to tile")
             return self
         if stencil:
+            if self.by and lattice is not None:
+                if len(lattice) < 2:
+                    raise ValueError(
+                        f"by={self.by} tiles the second lattice dim, but "
+                        f"the lattice {lattice} has no y axis")
+                if lattice[1] % self.by:
+                    raise ValueError(
+                        f"by={self.by} must divide the y lattice dim "
+                        f"{lattice[1]} so the tile cover is exact and "
+                        f"disjoint")
+            if self.bz and lattice is not None:
+                if len(lattice) < 3:
+                    raise ValueError(
+                        f"bz={self.bz} tiles the third lattice dim, but "
+                        f"the lattice {lattice} has no z axis")
+                if lattice[2] % self.bz:
+                    raise ValueError(
+                        f"bz={self.bz} must divide the z lattice dim "
+                        f"{lattice[2]} so the tile cover is exact and "
+                        f"disjoint")
             if self.bx < 1:
                 raise ValueError(
                     f"stencil lowering needs an x-slab bx >= 1, got plan "
@@ -313,6 +503,11 @@ class LoweringPlan:
             if self.bx:
                 raise ValueError(
                     f"site-local lowering takes no x-slab (bx={self.bx})")
+            if self.by or self.bz:
+                raise ValueError(
+                    f"site-local lowering takes no y/z tiles "
+                    f"(by={self.by}, bz={self.bz}); tiles partition the "
+                    f"halo'd stencil grid")
             if nsites is not None and nsites % self.vvl:
                 raise ValueError(
                     f"vvl={self.vvl} must divide nsites={nsites} "
@@ -366,6 +561,14 @@ def adapt_plan(plan: LoweringPlan, *, stencil: bool, halo: str) -> LoweringPlan:
 
 # -- planners ------------------------------------------------------------------
 
+def _site_bytes(vmem_views) -> int:
+    """Per-site traffic (bytes) of a launch from its (in_views, out_views)
+    footprint descriptor — the coarse per-site cost choose_slab caps by."""
+    in_views, out_views = vmem_views
+    return (sum(ncomp * isz for ncomp, _ring, isz in in_views)
+            + sum(ncomp * isz for ncomp, isz in out_views))
+
+
 def default_plan(
     config,
     *,
@@ -374,11 +577,21 @@ def default_plan(
     stencil: bool = False,
     lattice: Optional[Tuple[int, ...]] = None,
     halo: str = "periodic",
+    vmem_views=None,
 ) -> LoweringPlan:
     """The heuristic plan — bit-identical to the pre-plan inline decisions:
     jnp lowers whole-lattice; pallas site-local takes the largest conforming
     vvl divisor; pallas stencil takes the largest conforming x-slab within
-    the config.vvl budget; interpret falls back automatically off-TPU."""
+    the config.vvl budget; interpret falls back automatically off-TPU.
+
+    When a VMEM byte budget is configured (``TargetConfig.vmem_bytes`` /
+    ``$TARGETDP_VMEM_BYTES``) and the launch passes its footprint
+    descriptor ``vmem_views = (in_views, out_views)`` (see
+    :func:`estimate_vmem_bytes`), a stencil plan whose whole-staging
+    footprint exceeds the budget auto-tiles: the largest (by, bz) tile that
+    fits is chosen, so a lattice too large to stage whole still launches —
+    shard size bounded by the tile, not the lattice.  Without a budget the
+    result is byte-identical to the pre-budget heuristics."""
     engine = config.engine
     if engine == "jnp":
         return LoweringPlan(
@@ -390,9 +603,17 @@ def default_plan(
     if stencil:
         if lattice is None:
             raise ValueError("stencil plans need the lattice shape")
-        bx = choose_slab(lattice[0], int(math.prod(lattice[1:])), config.vvl)
+        budget = resolved_vmem_bytes(config)
+        site_bytes = _site_bytes(vmem_views) if (budget and vmem_views) else 0
+        bx = choose_slab(lattice[0], int(math.prod(lattice[1:])), config.vvl,
+                         site_bytes, budget if site_bytes else None)
+        by = bz = 0
+        if budget and vmem_views:
+            by, bz = choose_tiles(
+                lattice, bx, in_views=vmem_views[0],
+                out_views=vmem_views[1], vmem_bytes=budget)
         return LoweringPlan("pallas", vvl=0, bx=bx, interpret=interpret,
-                            halo=halo, view=VIEW_STAGED_ND)
+                            halo=halo, view=VIEW_STAGED_ND, by=by, bz=bz)
     vvl = resolve_vvl(config, nsites, layouts)
     return LoweringPlan("pallas", vvl=vvl, bx=0, interpret=interpret,
                         halo=halo, view=VIEW_BLOCK)
@@ -438,17 +659,32 @@ def sub_lattice_plan(
     relayout happens at assembly.  ``rsplit`` likewise drops to 1: the
     scheduler already combines per-slab reduction partials through the
     stage-2 combine (the slabs *are* the split), and a thin boundary slab's
-    block count rarely keeps the outer split factor's divisibility."""
+    block count rarely keeps the outer split factor's divisibility.
+
+    The y/z tile extents ``by``/``bz`` are *inherited* whenever they still
+    divide the sub-lattice (the interior box keeps the outer tiling, so a
+    >VMEM shard stays tiled under ``halo="overlap"``); a tile that no
+    longer divides — thin boundary slabs, usually — drops to 0 (whole
+    axis), which is always within budget for slab-thin sub-lattices."""
+
+    def _tiles(lat):
+        by = plan.by if (plan.by and len(lat) > 1
+                         and lat[1] % plan.by == 0) else 0
+        bz = plan.bz if (plan.bz and len(lat) > 2
+                         and lat[2] % plan.bz == 0) else 0
+        return by, bz
+
     if plan.engine != "pallas":
         return dataclasses.replace(plan, halo=halo, rsplit=1)
+    by, bz = _tiles(lattice)
     if plan.bx >= 1 and lattice[0] % plan.bx == 0:
         return dataclasses.replace(plan, halo=halo, view=VIEW_STAGED_ND,
-                                   rsplit=1)
+                                   rsplit=1, by=by, bz=bz)
     bx = choose_slab(
         lattice[0], int(math.prod(lattice[1:])),
         max(int(getattr(config, "vvl", 128)), 1))
     return dataclasses.replace(plan, halo=halo, bx=bx, view=VIEW_STAGED_ND,
-                               rsplit=1)
+                               rsplit=1, by=by, bz=bz)
 
 
 def _rsplit_factors(nblocks: int, cap: int = 16, k: int = 2):
@@ -484,6 +720,7 @@ def candidate_plans(
     block_view: Optional[bool] = None,
     batch: int = 0,
     reduce: bool = False,
+    vmem_views=None,
 ) -> Tuple[LoweringPlan, ...]:
     """Enumerate valid plans for the autotuner sweep, deterministically.
 
@@ -535,16 +772,48 @@ def candidate_plans(
     rsplit winner is the first plan axis whose results are
     tolerance-equal rather than bitwise-equal to the default for fp sums
     (deterministic for the fixed factor; exact for max and integer
-    sums)."""
+    sums).
+
+    Stencil lattices with a y (and z) axis additionally get up to two
+    tiled twins — the default slab with its y axis split (and with y+z
+    split), so the tuner sweeps the tiled lowering and persists tiled
+    winners.  When a VMEM byte budget is configured and the launch passes
+    ``vmem_views`` (see :func:`estimate_vmem_bytes`), any candidate whose
+    estimated per-program footprint exceeds the budget is dropped and
+    logged with the estimate; if *no* untiled slab fits, the set degrades
+    to tiled-only candidates — the budget-exceeding lattice still gets a
+    sweepable, launchable plan set."""
     default = default_plan(config, nsites=nsites, layouts=layouts,
-                           stencil=stencil, lattice=lattice, halo=halo)
+                           stencil=stencil, lattice=lattice, halo=halo,
+                           vmem_views=vmem_views)
     if default.engine != "pallas":
         return (default,)
     if stencil:
         inner = int(math.prod(lattice[1:]))
         budget = max(int(config.vvl), inner)
+        vmem_budget = resolved_vmem_bytes(config)
+        untiled_default = (default if not (default.by or default.bz)
+                           else dataclasses.replace(default, by=0, bz=0))
+
+        def over_budget(c):
+            if not (vmem_budget and vmem_views):
+                return False
+            fp = estimate_vmem_bytes(c, lattice=lattice,
+                                     in_views=vmem_views[0],
+                                     out_views=vmem_views[1])
+            if fp <= vmem_budget:
+                return False
+            log.info(
+                "candidate %s skipped: estimated per-program VMEM %d B "
+                "exceeds budget %d B", c.describe(footprint=fp), fp,
+                vmem_budget)
+            return True
+
         bxs = [bx for bx in divisors(lattice[0])
-               if bx * inner <= 8 * budget] or [default.bx]
+               if bx * inner <= 8 * budget
+               and not over_budget(dataclasses.replace(untiled_default,
+                                                       bx=bx))]
+        bxs = bxs or ([] if (default.by or default.bz) else [default.bx])
         if devices is None:
             import jax
             devices = jax.device_count()
@@ -558,23 +827,36 @@ def candidate_plans(
         red_twins = []
         if reduce:
             base = default
-            if lattice[0] // base.bx < 2 and min(bxs) < base.bx:
+            if bxs and lattice[0] // base.bx < 2 and min(bxs) < base.bx:
                 base = dataclasses.replace(default, bx=min(bxs))
             red_twins = [dataclasses.replace(base, rsplit=r)
                          for r in _rsplit_factors(lattice[0] // base.bx)]
+        # tiled twins: the default slab with y split (and with y+z split),
+        # skipping extents with nothing to split and over-budget tiles
+        tile_twins = []
+        if len(lattice) > 1 and len(divisors(lattice[1])) > 1:
+            t1 = dataclasses.replace(default, by=divisors(lattice[1])[-2],
+                                     bz=0)
+            tile_twins.append(t1)
+            if len(lattice) > 2 and len(divisors(lattice[2])) > 1:
+                tile_twins.append(dataclasses.replace(
+                    t1, bz=divisors(lattice[2])[-2]))
+        tile_twins = [t for t in tile_twins
+                      if t != default and not over_budget(t)]
         n_twins = ((2 if with_overlap else 0) + (2 if block_view else 0)
-                   + len(red_twins))
+                   + len(red_twins) + len(tile_twins))
         k = max(1, max_candidates - n_twins)
         spread_bxs = _spread(bxs, k)
-        cands = [dataclasses.replace(default, bx=bx) for bx in spread_bxs]
-        twin_bxs = sorted({default.bx, spread_bxs[-1]})[:2]
+        cands = [dataclasses.replace(untiled_default, bx=bx)
+                 for bx in spread_bxs]
+        twin_bxs = sorted({default.bx, *spread_bxs[-1:]})[:2]
         if with_overlap:
             cands += [dataclasses.replace(default, bx=bx, halo="overlap")
                       for bx in twin_bxs]
         if block_view:
             cands += [dataclasses.replace(default, bx=bx, view=VIEW_BLOCK)
                       for bx in twin_bxs]
-        cands += red_twins
+        cands += red_twins + tile_twins
     else:
         align = sal_alignment(layouts)
         cap = 8 * max(int(config.vvl), 128)

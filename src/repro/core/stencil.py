@@ -9,7 +9,7 @@ stencil kernels in repro.kernels.
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,53 @@ __all__ = [
     "halo_pad",
     "halo_pad_physical",
     "shifted_window",
+    "tile_boxes",
 ]
+
+
+def tile_boxes(
+    lattice: Sequence[int], bx: int, by: int = 0, bz: int = 0,
+) -> List[Tuple[Tuple[int, int], ...]]:
+    """Enumerate the tile cover of a tiled stencil lowering
+    (``LoweringPlan`` bx/by/bz): a list of boxes, one per pallas program,
+    each a per-dim ``(start, extent)`` tuple over the *interior* lattice.
+    ``by``/``bz`` of 0 mean whole-axis (the untiled default); extents must
+    divide their dims, so the cover is exact and disjoint by construction.
+    Enumeration order matches the grid's sequential iteration (x-slab
+    outermost, z-tiles fastest) — the order tile DMA and reduction
+    accumulation visit the lattice.
+    """
+    lattice = tuple(int(s) for s in lattice)
+    exts = []
+    for d, s in enumerate(lattice):
+        if d == 0:
+            exts.append(int(bx))
+        elif d == 1 and by:
+            exts.append(int(by))
+        elif d == 2 and bz:
+            exts.append(int(bz))
+        else:
+            exts.append(s)
+    counts = []
+    for d, e in enumerate(exts):
+        if e <= 0 or lattice[d] % e:
+            raise ValueError(
+                f"tile extent {e} does not divide lattice[{d}]={lattice[d]}")
+        counts.append(lattice[d] // e)
+    boxes = []
+    idx = [0] * len(lattice)
+    total = 1
+    for c in counts:
+        total *= c
+    for _ in range(total):
+        boxes.append(tuple((idx[d] * exts[d], exts[d])
+                           for d in range(len(lattice))))
+        for d in reversed(range(len(lattice))):  # z fastest
+            idx[d] += 1
+            if idx[d] < counts[d]:
+                break
+            idx[d] = 0
+    return boxes
 
 
 def shift_periodic(x_nd: jax.Array, disp: Sequence[int]) -> jax.Array:

@@ -91,17 +91,29 @@ class TargetConfig:
                              by the launch's plan key, falling back to the
                              default heuristics on a miss;
                  a LoweringPlan — use exactly this plan (validated per launch).
+    vmem_bytes   per-program VMEM byte budget for stencil lowering.  None
+                 defers to $TARGETDP_VMEM_BYTES, and an unset/0 budget means
+                 unbounded — the pre-budget behavior, default plans stay
+                 bit-identical.  With a budget, a stencil launch whose
+                 whole-staging footprint exceeds it auto-tiles the y/z axes
+                 (LoweringPlan.by/.bz) so per-program VMEM is bounded by the
+                 tile, and the tuner skips (and logs) over-budget candidates.
     """
 
     engine: str = "jnp"
     vvl: int = 128
     interpret: Optional[bool] = None
     plan_policy: Union[str, LoweringPlan] = "default"
+    vmem_bytes: Optional[int] = None
 
     def resolved_interpret(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return not _on_tpu()
+
+    def resolved_vmem_bytes(self) -> Optional[int]:
+        from .plan import resolved_vmem_bytes
+        return resolved_vmem_bytes(self)
 
 
 def build_halo_in_specs(
@@ -120,7 +132,9 @@ def build_halo_in_specs(
     specs = []
     for shp in shapes:
         zeros = (0,) * len(shp)
-        specs.append(pl.BlockSpec(shp, lambda i, _z=zeros: _z))
+        # variadic: the site grid may carry trailing y/z tile axes
+        # (LoweringPlan.by/.bz) — whole-staged inputs are tile-invariant
+        specs.append(pl.BlockSpec(shp, lambda *_i, _z=zeros: _z))
     return specs
 
 
@@ -200,7 +214,8 @@ def build_reduce_specs(
     for k in out_names:
         ncomp, dtype = out_specs[k]
         shapes.append(jax.ShapeDtypeStruct((ncomp, 1), dtype))
-        specs.append(pl.BlockSpec((ncomp, 1), lambda i: (0, 0)))
+        # variadic: revisited by every program of the (possibly tiled) grid
+        specs.append(pl.BlockSpec((ncomp, 1), lambda *_i: (0, 0)))
     return shapes, specs
 
 
@@ -219,7 +234,53 @@ def build_split_reduce_specs(
     for k in out_names:
         ncomp, dtype = out_specs[k]
         shapes.append(jax.ShapeDtypeStruct((rsplit, ncomp, 1), dtype))
-        specs.append(pl.BlockSpec((1, ncomp, 1), lambda s, i: (s, 0, 0)))
+        # variadic beyond the split axis: the per-segment site axis may
+        # carry trailing tile axes; the buffer row follows the segment only
+        specs.append(pl.BlockSpec((1, ncomp, 1), lambda s, *_i: (s, 0, 0)))
+    return shapes, specs
+
+
+def build_tiled_out_specs(
+    out_names: Sequence[str],
+    out_specs: Mapping[str, Tuple[int, object]],
+    lattice: Tuple[int, ...],
+    bx: int,
+    by: int,
+    bz: int,
+) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
+    """(out_shape, BlockSpec) per interior nd output of a *tiled* stencil
+    graph (``LoweringPlan.by``/``.bz``): canonical ``(ncomp, X, Y, Z, ...)``
+    arrays blocked into disjoint ``(bx, by, bz)`` tiles.  Unlike the
+    overlapping input windows, output tiles are exactly expressible as
+    disjoint Blocked windows — the index map consumes one grid coordinate
+    per *active* tile axis (x always; y iff ``by``; z iff ``bz``), matching
+    the trailing tile axes core.fuse appends to the site grid."""
+    nd = len(lattice)
+    tail = []
+    for d in range(1, nd):
+        if d == 1 and by:
+            tail.append(by)
+        elif d == 2 and bz:
+            tail.append(bz)
+        else:
+            tail.append(lattice[d])
+    tail = tuple(tail)
+
+    def idx(i, *tiles):
+        out = [0, i]
+        t = iter(tiles)
+        for d in range(1, nd):
+            if (d == 1 and by) or (d == 2 and bz):
+                out.append(next(t))
+            else:
+                out.append(0)
+        return tuple(out)
+
+    shapes, specs = [], []
+    for k in out_names:
+        ncomp, dtype = out_specs[k]
+        shapes.append(jax.ShapeDtypeStruct((ncomp,) + tuple(lattice), dtype))
+        specs.append(pl.BlockSpec((ncomp, bx) + tail, idx))
     return shapes, specs
 
 

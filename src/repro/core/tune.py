@@ -36,6 +36,7 @@ import time
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from . import plan as plan_mod
 from .plan import LoweringPlan
@@ -284,11 +285,34 @@ def plan_candidates_for(
     layouts = [f.layout for f in ins.values()]
     batch = max((int(getattr(f, "batch", 0)) for f in ins.values()),
                 default=0)
+    vmem_views = None
+    if graph.has_stencil:
+        # per-site staging shapes for the VMEM budget model — same
+        # derivation LaunchGraph.launch feeds default_plan, so the sweep
+        # filters (and logs) exactly the candidates a launch would reject
+        outs = tuple(outputs) if outputs is not None else None
+        rings = graph.halo_widths(outs)
+        first = next(iter(ins.values()))
+        prod = graph._produced()
+        red = set(graph._reduce_outputs())
+        names = outs if outs is not None else tuple(prod)
+        out_views = []
+        for o in names:
+            if o in red or o not in prod:
+                continue
+            nc, dt = prod[o]
+            out_views.append(
+                (int(nc), jnp.dtype(dt or first.dtype).itemsize))
+        vmem_views = (
+            tuple((f.ncomp, rings.get(n, 0), jnp.dtype(f.dtype).itemsize)
+                  for n, f in ins.items()),
+            tuple(out_views),
+        )
     return plan_mod.candidate_plans(
         config, nsites=nsites, layouts=layouts, stencil=graph.has_stencil,
         lattice=lattice, halo=halo, max_candidates=max_candidates,
         block_view=block_view_for(graph, ins, outputs, halo), batch=batch,
-        reduce=bool(graph._reduce_outputs()))
+        reduce=bool(graph._reduce_outputs()), vmem_views=vmem_views)
 
 
 def autotune_graph(
@@ -356,6 +380,7 @@ def autotune_graph(
            meta={"graph": getattr(graph, "name", "?"),
                  "backend": jax.default_backend(),
                  "lattice": list(lattice),
+                 "vmem_bytes": plan_mod.resolved_vmem_bytes(config),
                  "failed": failed_desc},
            save=save, path=path)
     return best, {"key": key, "cached": False, "timings_us": timings_us,

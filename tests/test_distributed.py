@@ -313,3 +313,75 @@ np.testing.assert_allclose(base, want["dist2"].canonical_nd(),
                            rtol=1e-5, atol=1e-6)
 print("native block sharded OK")
 """)
+
+
+@pytest.mark.slow
+def test_tiled_lowering_sharded_bit_identical():
+    """Acceptance (tiled y/z lowering): the sharded fused LB step under a
+    tiled plan (LoweringPlan.by/bz — per-shard VMEM bounded by the tile,
+    not the lattice) is bit-identical to the untiled whole-staging plan on
+    8 fake devices, for both the halo='pre' single launch and the
+    halo='overlap' split schedule (sub-launches inherit the tiles through
+    sub_lattice_plan), and matches the single-shard jnp oracle."""
+    run_script(COMMON + """
+import dataclasses
+from repro.core import Field, SOA, TargetConfig
+from repro.core import halo as halo_mod
+from repro.core.overlap import overlap_launch
+from repro.core.plan import LoweringPlan
+from repro.kernels.lb_propagation.ops import collide_propagate_graph
+from repro.lattice import Domain
+
+LAT = (16, 8, 8)  # mesh (4, 2): local interior (4, 4, 8)
+dom = Domain(global_shape=LAT, mesh=mesh,
+             dim_axes=("data", "model", None), halo=1)
+rng = np.random.default_rng(0)
+dist = (1.0 + 0.1 * rng.normal(size=(19, *LAT))).astype(np.float32)
+force = (0.01 * rng.normal(size=(3, *LAT))).astype(np.float32)
+g = collide_propagate_graph(0.8)
+tgt = TargetConfig("pallas", vvl=64)
+untiled = LoweringPlan("pallas", bx=1, interpret=True)
+tiles = [(2, 0), (0, 4), (2, 4)]  # divide the (4, 4, 8) local interior
+
+def pad(x):
+    return jnp.pad(x, [(0, 0)] + [(1, 1)] * 3, mode="wrap")
+
+def local(d_nd, f_nd, plan, halo):
+    dF = Field.from_canonical("dist", pad(d_nd), pad(d_nd).shape[1:], SOA)
+    fF = Field.from_canonical("force", pad(f_nd), pad(f_nd).shape[1:], SOA)
+    plan = dataclasses.replace(plan, halo=halo)
+    if halo == "pre":
+        dF = halo_mod.exchange_field(dF, dom.decomposed, width=1)
+        fF = halo_mod.exchange_field(fF, dom.decomposed, width=1)
+        out = g.launch({"dist": dF, "force": fF}, config=tgt,
+                       outputs=("dist2",), halo="pre", plan=plan)
+    else:
+        out = overlap_launch(g, {"dist": dF, "force": fF},
+                             decomposed=dom.decomposed, config=tgt,
+                             outputs=("dist2",), halo="overlap", plan=plan)
+    return out["dist2"].canonical_nd()
+
+sh = dom.sharding()
+spec = dom.spec()
+d = jax.device_put(jnp.asarray(dist), sh)
+f = jax.device_put(jnp.asarray(force), sh)
+results = {}
+for by, bz in [(0, 0)] + tiles:
+    plan = dataclasses.replace(untiled, by=by, bz=bz)
+    for halo in ("pre", "overlap"):
+        fn = jax.jit(shard_map(
+            lambda a, b, _p=plan, _h=halo: local(a, b, _p, _h),
+            mesh=mesh, in_specs=(spec, spec), out_specs=spec))
+        results[(by, bz, halo)] = np.asarray(fn(d, f))
+base = results[(0, 0, "pre")]
+for k, v in results.items():
+    np.testing.assert_array_equal(v, base, err_msg=str(k))
+# single-shard jnp oracle (periodic == the wrap+exchange decomposition)
+distF = Field.from_canonical("dist", jnp.asarray(dist), LAT, SOA)
+forceF = Field.from_canonical("force", jnp.asarray(force), LAT, SOA)
+want = g.launch({"dist": distF, "force": forceF},
+                config=TargetConfig("jnp"), outputs=("dist2",))
+np.testing.assert_allclose(base, want["dist2"].canonical_nd(),
+                           rtol=1e-5, atol=1e-6)
+print("tiled sharded OK")
+""")
