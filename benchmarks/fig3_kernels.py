@@ -616,6 +616,116 @@ def tile_stencil_sweep(lattice=(8, 14, 16), milc_lattice=(8, 8, 8, 8),
     return rows, metrics
 
 
+def telemetry_trace(path, lattice=(32, 32, 32), engine="jnp", iters=20,
+                    warmup=3):
+    """``--trace``: the telemetry gate on the fused LB collide->propagate
+    step (one Ludwig LB step = one fused halo'd launch), exporting a
+    Perfetto-loadable Chrome trace of the run to ``path``.
+
+    Three checks feed the CI gate (``--trace-gate``):
+
+    * overhead — the SAME cached launch timed with per-launch telemetry
+      off vs on (``TargetConfig.telemetry``) in interleaved best-of
+      rounds, the tuner's estimator, so machine drift cannot favour one
+      arm.  The span path must cost <= the gate tolerance (default 1%)
+      relative.  The 32^3 jnp row is fixed even under ``--smoke``: the
+      span path costs ~10us host-side per launch but launch-to-launch
+      wall noise is +-20-30us (profiled: all in block_until_ready, both
+      arms hitting the same cached executable), so the row must be long
+      enough (~12ms) that 1% clears BOTH — on 8^3-16^3 rows the
+      comparison is timer noise, not a measurement.
+    * bitwise — the telemetry-on output equals the telemetry-off output
+      bit for bit (spans are host-side only; enabling observability may
+      never perturb the computation).
+    * schema — every recorded ``launch/`` span carries the full
+      plan/engine/lattice/cache/bytes/roofline field set the README
+      Observability glossary documents.
+
+    Returns (rows, metrics)."""
+    from repro.core import telemetry
+    from repro.kernels.lb_propagation.ops import collide_propagate_graph
+
+    tgt = TargetConfig(engine, vvl=128)
+    rng = np.random.default_rng(0)
+    dist = Field.from_numpy(
+        "dist",
+        (1.0 + 0.1 * rng.normal(size=(19, *lattice))).astype(np.float32),
+        lattice, SOA)
+    force = Field.from_numpy(
+        "force", (0.01 * rng.normal(size=(3, *lattice))).astype(np.float32),
+        lattice, SOA)
+    ins = {"dist": dist, "force": force}
+    graph = collide_propagate_graph(0.8)
+    cfg_off = dataclasses.replace(tgt, telemetry=False)
+    cfg_on = dataclasses.replace(tgt, telemetry=True)
+
+    def run(cfg):
+        return graph.launch(ins, config=cfg, outputs=("dist2",))["dist2"].data
+
+    telemetry.reset()
+    out_off = np.asarray(run(cfg_off))
+    out_on = np.asarray(run(cfg_on))
+    bitwise = bool(np.array_equal(out_off, out_on))
+
+    t_off, t_on = _time_interleaved(run, cfg_off, cfg_on, iters=iters,
+                                    warmup=warmup)
+    overhead = t_on / t_off - 1.0
+
+    spans = telemetry.events("launch/")
+    required = ("plan", "engine", "lattice", "cache", "bytes_fused",
+                "bytes_unfused", "gbps_achieved", "roofline_frac",
+                "roofline_placement")
+    missing = sorted({f for s in spans for f in required
+                      if f not in s["attrs"]})
+    telemetry.export_chrome_trace(path)
+    with open(path) as f:
+        n_trace = len(json.load(f)["traceEvents"])
+
+    metrics = {"lb_step": {
+        "off_s": t_off, "on_s": t_on, "overhead_frac": overhead,
+        "bitwise_equal": bitwise, "launch_spans": len(spans),
+        "schema_missing": missing, "trace_path": path,
+        "trace_events": n_trace,
+    }}
+    rows = [
+        csv_row("fig3_trace/lb_step_telemetry_off", t_off * 1e6, ""),
+        csv_row("fig3_trace/lb_step_telemetry_on", t_on * 1e6,
+                f"overhead={overhead * 100:+.2f}%;bitwise={bitwise};"
+                f"launch_spans={len(spans)}"),
+        csv_row("fig3_trace/chrome_trace", 0.0,
+                f"path={path};events={n_trace}"),
+    ]
+    print(telemetry.format_report())
+    return rows, metrics
+
+
+def gate_trace(metrics, tolerance):
+    """The trace CI gate: enabling telemetry must cost <= ``tolerance``
+    relative on the launch row, never change a bit of the output, and
+    every launch span must carry the documented schema."""
+    failures = []
+    for name, m in metrics.items():
+        if tolerance is not None and m["overhead_frac"] > tolerance:
+            failures.append(
+                f"{name}: telemetry-on {m['on_s']*1e6:.1f}us > "
+                f"telemetry-off {m['off_s']*1e6:.1f}us * "
+                f"(1+{tolerance:.2f}) — span overhead "
+                f"{m['overhead_frac']*100:+.2f}%")
+        if not m["bitwise_equal"]:
+            failures.append(
+                f"{name}: telemetry-on output differs bitwise from "
+                f"telemetry-off — observability perturbed the launch")
+        if not m["launch_spans"]:
+            failures.append(f"{name}: no launch/ spans were recorded")
+        if m["schema_missing"]:
+            failures.append(
+                f"{name}: launch spans missing schema fields "
+                f"{m['schema_missing']}")
+        if not m["trace_events"]:
+            failures.append(f"{name}: exported Chrome trace is empty")
+    return failures
+
+
 def gate_tile(metrics, tolerance):
     """The tile-sweep CI gate: tiled lowering must be bitwise identical on
     fields, tolerance-equal on fp reductions, within the wall-clock bound,
@@ -725,11 +835,24 @@ def main(argv=None):
                     help="with --tile-sweep: exit 1 on identity/demo "
                          "failure or if a tiled launch is slower than "
                          "whole-staging beyond TOL (e.g. 0.10)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="telemetry mode: time the fused LB step with "
+                         "spans off vs on, write a Perfetto-loadable "
+                         "Chrome trace to PATH, and gate on overhead, "
+                         "bitwise identity and launch-span schema")
+    ap.add_argument("--trace-gate", type=float, default=0.01, metavar="TOL",
+                    help="with --trace: max relative span overhead on the "
+                         "launch row (default 0.01)")
     args = ap.parse_args(argv)
     sizes = (dict(lattice=(8, 8, 8), milc_lattice=(4, 4, 4, 4))
              if args.smoke else {})
     rows, metrics, failures = [], {}, []
-    if args.tile_sweep:
+    if args.trace:
+        # the trace row keeps its 32^3 lattice under --smoke: the <=1%
+        # overhead gate needs a launch long enough to resolve the span cost
+        rows, metrics = telemetry_trace(args.trace, engine=args.engine)
+        failures += gate_trace(metrics, args.trace_gate)
+    elif args.tile_sweep:
         tsizes = (dict(lattice=(4, 14, 16), milc_lattice=(4, 4, 4, 4))
                   if args.smoke else {})
         rows, metrics = tile_stencil_sweep(engine=args.engine, **tsizes)
@@ -761,10 +884,12 @@ def main(argv=None):
     for r in rows:
         print(r)
     if args.json:
-        mode = ("tile-sweep" if args.tile_sweep
+        mode = ("trace" if args.trace
+                else "tile-sweep" if args.tile_sweep
                 else "layout-sweep" if args.layout_sweep
                 else "tune" if args.tune else "fused")
-        tol = (args.tile_gate if args.tile_sweep
+        tol = (args.trace_gate if args.trace
+               else args.tile_gate if args.tile_sweep
                else args.tune_gate if args.tune else args.gate)
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "metrics": metrics,

@@ -2,11 +2,17 @@
 engines and three layouts — targetDP-JAX in 40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --trace quickstart.json
+    # then load quickstart.json at https://ui.perfetto.dev — every fused
+    # launch is a span tagged with its plan, cache hit/miss, modeled HBM
+    # bytes and live roofline placement
 """
+
+import argparse
 
 import numpy as np
 
-from repro.core import AOS, SOA, Field, LaunchGraph, TargetConfig, aosoa, kernel, launch, target_sum
+from repro.core import AOS, SOA, Field, LaunchGraph, TargetConfig, aosoa, kernel, launch, target_sum, telemetry
 
 
 # __targetEntry__ void scale(double* field): the kernel body is written
@@ -109,7 +115,15 @@ def fused_stencil_reduction_demo(lattice=(8, 8, 8), engine="pallas"):
           f"converged in {it + 1} iters, |r|^2/|b|^2 = {rr_new / b2:.2e}")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry and write a Chrome trace "
+                         "(Perfetto-loadable) of every launch to PATH")
+    args = ap.parse_args(argv)
+    if args.trace:
+        telemetry.enable()
+        telemetry.configure_logging()
     lattice = (16, 16, 16)
     rng = np.random.default_rng(0)
     host_field = rng.normal(size=(3, *lattice)).astype(np.float32)
@@ -135,6 +149,9 @@ def main():
         fused_stencil_reduction_demo(engine=engine)
 
     print("same source, every layout x engine: portable (paper C1/C2)")
+    if args.trace:
+        print(telemetry.format_report())
+        print(f"chrome trace: {telemetry.export_chrome_trace(args.trace)}")
 
 
 if __name__ == "__main__":

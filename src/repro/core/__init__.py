@@ -20,6 +20,9 @@ Multi-step pipelines   ->  core.schedule (StepPipeline: donated
                                           double-buffers, async dispatch)
 Version gates          ->  core.compat   (shard_map / make_mesh across jax
                                           releases)
+Telemetry              ->  core.telemetry (counters/spans/gauges, JSONL +
+                                          Chrome-trace export, live
+                                          roofline placement per launch)
 """
 
 from .layout import (  # noqa: F401
@@ -52,3 +55,4 @@ from .memspace import (  # noqa: F401
 )
 from .reduce import target_max, target_sum  # noqa: F401
 from . import halo, stencil  # noqa: F401
+from . import telemetry  # noqa: F401

@@ -101,6 +101,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import plan as plan_mod
+from . import telemetry
 from .field import BatchedField, Field
 from .layout import Layout, LayoutKind
 from .plan import VIEW_BLOCK, LoweringPlan
@@ -134,7 +135,9 @@ log = logging.getLogger(__name__)
 _CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
 _CACHE_CAP = 256
 
-_STATS = {"traces": 0, "pallas_calls": 0, "cache_hits": 0, "cache_misses": 0}
+# launch-cache counters now live in the core.telemetry registry under the
+# "fuse." prefix; stats()/reset_stats() below are back-compat shims over it
+_STAT_KEYS = ("traces", "pallas_calls", "cache_hits", "cache_misses")
 
 # reduction monoids, keyed by op name (the single source ReduceSpec wraps)
 _RED_COMBINE = {"sum": lambda a, b: a + b, "max": jnp.maximum}
@@ -144,13 +147,13 @@ _RED_FOLD = {"sum": jnp.sum, "max": jnp.max}
 def stats() -> Dict[str, int]:
     """Launch-cache counters: traces (jit trace-time executions of a fused
     callable), pallas_calls (pallas_call constructions — one per fused pallas
-    trace), cache_hits/cache_misses."""
-    return dict(_STATS)
+    trace), cache_hits/cache_misses.  Thin view over the ``fuse.*``
+    counters of :mod:`repro.core.telemetry` (same keys as ever)."""
+    return {k: telemetry.counter_value(f"fuse.{k}") for k in _STAT_KEYS}
 
 
 def reset_stats() -> None:
-    for k in _STATS:
-        _STATS[k] = 0
+    telemetry.reset_counters("fuse.")
 
 
 def clear_cache() -> None:
@@ -343,6 +346,10 @@ class LaunchGraph:
     def __init__(self, name: str = "fused"):
         self.name = name
         self._stages: List[_Stage] = []
+        # telemetry: bytes_moved is a per-shape constant but a full graph
+        # walk — memoized so the launch span costs O(dict lookup), keeping
+        # the enabled path under the CI <=1% overhead gate
+        self._bytes_memo: Dict[tuple, Dict[str, int]] = {}
 
     def __repr__(self):  # pragma: no cover - cosmetic
         names = [s.kernel.name if s.kernel else f"reduce:{s.op}"
@@ -893,6 +900,22 @@ class LaunchGraph:
         engine, interpret = plan.engine, plan.interpret
         vvl, bx = plan.vvl, plan.bx
 
+        # launch span (core.telemetry): host-side only — attrs are strings
+        # and ints, the traced computation is untouched.  The disabled path
+        # costs one predicate; plan.describe() is only built when recording.
+        t_override = getattr(config, "telemetry", None)
+        tspan = (telemetry.span(
+            f"launch/{self.name}",
+            override=t_override,
+            plan=plan.describe(),
+            engine=engine,
+            lattice=str(tuple(lattice)),
+            batch=batch,
+            halo=halo,
+            from_tuned_table=from_table,
+        ) if telemetry.enabled(t_override)
+            else telemetry.NULL_SPAN)
+
         in_batched = tuple(bool(in_batch[n]) for n in ordered_ins)
         key = (
             plan,
@@ -911,7 +934,8 @@ class LaunchGraph:
         )
         fn = _CACHE.get(key)
         if fn is None:
-            _STATS["cache_misses"] += 1
+            telemetry.inc("fuse.cache_misses")
+            tspan.set(cache="miss")
             build = self._build_nd if stencil else self._build_flat
             build_kw = dict(
                 engine=engine,
@@ -944,7 +968,8 @@ class LaunchGraph:
             while len(_CACHE) > _CACHE_CAP:
                 _CACHE.popitem(last=False)
         else:
-            _STATS["cache_hits"] += 1
+            telemetry.inc("fuse.cache_hits")
+            tspan.set(cache="hit")
             _CACHE.move_to_end(key)
 
         datas = tuple(ins[n].data for n in ordered_ins)
@@ -968,6 +993,24 @@ class LaunchGraph:
                 for n in ordered_scalars
             )
         results = fn(datas, svals)
+        if tspan:
+            # modeled HBM bytes (the fig3/fig4 counting) over the measured
+            # wall interval -> achieved GB/s + live roofline placement
+            itemsize = jnp.dtype(first.dtype).itemsize
+            bkey = (tuple((n, ins[n].ncomp) for n in ordered_ins), nsites,
+                    outputs, itemsize)
+            bm = self._bytes_memo.get(bkey)
+            if bm is None:
+                bm = self._bytes_memo[bkey] = self.bytes_moved(
+                    {n: ins[n].ncomp for n in ordered_ins}, nsites,
+                    outputs=outputs, itemsize=itemsize)
+            bfac = max(batch, 1)
+            tspan.set(
+                bytes_fused=bm["fused"] * bfac,
+                bytes_unfused=bm["unfused"] * bfac,
+                **telemetry.roofline_placement(
+                    bm["fused"] * bfac, tspan.elapsed))
+            tspan.end()
 
         out: Dict[str, Union[Field, jax.Array]] = {}
         ordered_out = list(field_outputs) + list(red_outputs)
@@ -1179,12 +1222,12 @@ class LaunchGraph:
                     tuple(0 if b else None for b in in_batched), 0))
 
                 def fn(datas, svals):
-                    _STATS["traces"] += 1
+                    telemetry.inc("fuse.traces")
                     return vone(datas, svals)
             else:
 
                 def fn(datas, svals):
-                    _STATS["traces"] += 1
+                    telemetry.inc("fuse.traces")
                     return one(datas, svals)
 
             return jax.jit(fn)
@@ -1261,8 +1304,8 @@ class LaunchGraph:
                             axes=(red_axis,))
 
         def fn(datas, svals):
-            _STATS["traces"] += 1
-            _STATS["pallas_calls"] += 1
+            telemetry.inc("fuse.traces")
+            telemetry.inc("fuse.pallas_calls")
             call = pl.pallas_call(
                 fused_kernel,
                 grid=grid,
@@ -1363,12 +1406,12 @@ class LaunchGraph:
                     tuple(0 if b else None for b in in_batched), 0))
 
                 def fn(datas, svals):
-                    _STATS["traces"] += 1
+                    telemetry.inc("fuse.traces")
                     return vone(datas, svals)
             else:
 
                 def fn(datas, svals):
-                    _STATS["traces"] += 1
+                    telemetry.inc("fuse.traces")
                     return one(datas, svals)
 
             return jax.jit(fn)
@@ -1667,8 +1710,8 @@ class LaunchGraph:
             return d  # "pre": the caller's physical array, staged as-is
 
         def fn(datas, svals):
-            _STATS["traces"] += 1
-            _STATS["pallas_calls"] += 1
+            telemetry.inc("fuse.traces")
+            telemetry.inc("fuse.pallas_calls")
             staged = []
             for n, meta, lat, ring, nat, bat, d in zip(
                     ordered_ins, in_meta, in_lats, in_rings, native_in,

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 
 from . import halo as halo_mod
 from . import plan as plan_mod
+from . import telemetry
 from .field import BatchedField, Field
 from .layout import SOA
 from .plan import LoweringPlan
@@ -203,9 +204,16 @@ def _split_launch(
 
     # dependency order: the interior sub-launch first — it reads only
     # locally-owned sites, so XLA may run it concurrently with the halo
-    # exchange the boundary sub-launches depend on.
-    results = [(interior_box, launch_box(interior_box, ins_interior))]
-    results += [(box, launch_box(box, ins_boundary)) for box in boundary]
+    # exchange the boundary sub-launches depend on.  The interior/boundary
+    # spans make the split schedule visible as a trace (core.telemetry);
+    # the nested launch/* spans are the sub-launches themselves.
+    gname = getattr(graph, "name", "?")
+    with telemetry.span("overlap/interior", graph=gname,
+                        box=str(interior_box)):
+        results = [(interior_box, launch_box(interior_box, ins_interior))]
+    for box in boundary:
+        with telemetry.span("overlap/boundary", graph=gname, box=str(box)):
+            results.append((box, launch_box(box, ins_boundary)))
 
     batch = max((int(getattr(ins_boundary[n], "batch", 0)) for n in ext),
                 default=0)
@@ -344,17 +352,26 @@ def overlap_launch(
     ext = [n for n in graph.external_inputs() if n in ins]
 
     # exchange every input by its ring over the decomposed dims (the
-    # dimension-ordered exchange of core.halo, so corners land correctly)
+    # dimension-ordered exchange of core.halo, so corners land correctly).
+    # The exchange span brackets the ppermute issue — against the
+    # interior sub-launch span below, the overlap win is a visible trace
+    # gap, not an assertion.
     ex_ins: Dict[str, Field] = {}
-    for n in ext:
-        f = ins[n]
-        r = rings.get(n, 0)
-        if n not in exchanged:
-            # layout-preserving: AoSoA-backed shards come back as AoSoA, so
-            # a native-block plan's "pre" fallback launch stages them as-is
-            ex_ins[n] = halo_mod.exchange_field(f, decomposed, width=r)
-        else:
-            ex_ins[n] = f
+    with telemetry.span(
+            "overlap/exchange", graph=getattr(graph, "name", "?"),
+            inputs=",".join(n for n in ext if n not in exchanged),
+            pre_exchanged=",".join(n for n in ext if n in exchanged),
+            dims=str([d - 1 for (d, _, _) in decomposed])):
+        for n in ext:
+            f = ins[n]
+            r = rings.get(n, 0)
+            if n not in exchanged:
+                # layout-preserving: AoSoA-backed shards come back as
+                # AoSoA, so a native-block plan's "pre" fallback launch
+                # stages them as-is
+                ex_ins[n] = halo_mod.exchange_field(f, decomposed, width=r)
+            else:
+                ex_ins[n] = f
 
     if halo is None:
         strategy, plan = _resolve_strategy(

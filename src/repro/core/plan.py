@@ -807,6 +807,9 @@ def candidate_plans(
                 "candidate %s skipped: estimated per-program VMEM %d B "
                 "exceeds budget %d B", c.describe(footprint=fp), fp,
                 vmem_budget)
+            from . import telemetry
+            telemetry.event("tune/pruned", plan=c.describe(), footprint=fp,
+                            budget=vmem_budget, reason="vmem-budget")
             return True
 
         bxs = [bx for bx in divisors(lattice[0])

@@ -35,6 +35,8 @@ from typing import Callable, Optional, Tuple
 
 import jax
 
+from . import telemetry
+
 __all__ = ["StepPipeline"]
 
 
@@ -86,13 +88,21 @@ class StepPipeline:
         if not isinstance(state, tuple):
             state = (state,)
         fn = self._fn(len(state))
+        name = getattr(self._step, "__name__", "step")
         for i in range(steps):
-            out = fn(*state)
+            # per-step span (core.telemetry): the dispatch interval of each
+            # pipelined step — what run_timed's single run-level number
+            # used to hide.  Async dispatch means the span measures enqueue
+            # time once the device queue fills; the final step's span plus
+            # the block below bound the drain.
+            with telemetry.span(f"pipeline/{name}", step=i):
+                out = fn(*state)
             state = out if isinstance(out, tuple) else (out,)
             if on_step is not None:
                 on_step(i, state)
         if block:
-            jax.block_until_ready(state)
+            with telemetry.span(f"pipeline/{name}.block", steps=steps):
+                jax.block_until_ready(state)
         return state
 
     def run_timed(

@@ -98,6 +98,11 @@ class TargetConfig:
                  whole-staging footprint exceeds it auto-tiles the y/z axes
                  (LoweringPlan.by/.bz) so per-program VMEM is bounded by the
                  tile, and the tuner skips (and logs) over-budget candidates.
+    telemetry    per-launch override of the core.telemetry span recording:
+                 None defers to the process switch ($TARGETDP_TELEMETRY /
+                 telemetry.enable()); True/False force it for launches made
+                 with this config.  Spans are host-side only — flipping this
+                 never changes a single bit of any launch output.
     """
 
     engine: str = "jnp"
@@ -105,6 +110,7 @@ class TargetConfig:
     interpret: Optional[bool] = None
     plan_policy: Union[str, LoweringPlan] = "default"
     vmem_bytes: Optional[int] = None
+    telemetry: Optional[bool] = None
 
     def resolved_interpret(self) -> bool:
         if self.interpret is not None:

@@ -31,6 +31,7 @@ Usage::
 from __future__ import annotations
 
 import json
+import logging
 import os
 import time
 from typing import Dict, Mapping, Optional, Sequence, Tuple
@@ -39,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from . import plan as plan_mod
+from . import telemetry
 from .plan import LoweringPlan
 
 __all__ = [
@@ -67,22 +69,25 @@ ENV_VAR = "TARGETDP_TUNE_PATH"
 # clean miss — every lookup misses, the tuner re-sweeps and re-stamps.
 SCHEMA_VERSION = 3
 
+log = logging.getLogger(__name__)
+
 _TABLE: Optional[Dict[str, dict]] = None
 _TABLE_PATH: Optional[str] = None
 
 # sweep_launches counts timed candidate launches (incl. warmup): the
 # "no re-sweep on a warm table" probe.  lookups/hits instrument the
-# plan_policy="tuned" path.
-_STATS = {"sweep_launches": 0, "lookups": 0, "hits": 0, "tunes": 0}
+# plan_policy="tuned" path.  The counters live in the core.telemetry
+# registry under the "tune." prefix; stats()/reset_stats() are the
+# back-compat shims over it (same keys as ever).
+_STAT_KEYS = ("sweep_launches", "lookups", "hits", "tunes")
 
 
 def stats() -> Dict[str, int]:
-    return dict(_STATS)
+    return {k: telemetry.counter_value(f"tune.{k}") for k in _STAT_KEYS}
 
 
 def reset_stats() -> None:
-    for k in _STATS:
-        _STATS[k] = 0
+    telemetry.reset_counters("tune.")
 
 
 # -- the persisted table -------------------------------------------------------
@@ -139,7 +144,7 @@ def lookup(key: str, path: Optional[str] = None) -> Optional[LoweringPlan]:
     back to the default heuristics on a miss).  A structurally malformed
     entry (hand-edited table, truncated write, schema drift) is treated as
     a miss — tuning must never break a launch."""
-    _STATS["lookups"] += 1
+    telemetry.inc("tune.lookups")
     entry = load_table(path).get(key)
     if entry is None:
         return None
@@ -151,7 +156,7 @@ def lookup(key: str, path: Optional[str] = None) -> Optional[LoweringPlan]:
         plan.validate(stencil=plan.bx > 0 or plan.halo == "overlap")
     except (KeyError, TypeError, ValueError):
         return None
-    _STATS["hits"] += 1
+    telemetry.inc("tune.hits")
     return plan
 
 
@@ -191,33 +196,53 @@ def _sweep(graph, ins, launch_kw, cands, iters: int, warmup: int):
     counts in the sweep_launches probe.
 
     Returns (times, failed): candidate -> best seconds / candidate ->
-    error repr."""
+    error repr.  Telemetry: one ``tune/candidate`` span per candidate and
+    timed round, a ``tune/failed`` instant per failure, and failures
+    logged through the ``repro.core.tune`` logger."""
     def run(plan):
         out = graph.launch(ins, plan=plan, **launch_kw)
         jax.block_until_ready(jax.tree_util.tree_leaves(out))
-        _STATS["sweep_launches"] += 1
+        telemetry.inc("tune.sweep_launches")
+
+    gname = getattr(graph, "name", "?")
+
+    def fail(cand, e):
+        failed[cand] = repr(e)
+        log.warning("tune sweep: candidate %s failed for graph %r: %r",
+                    cand.describe(), gname, e)
+        telemetry.event("tune/failed", graph=gname, plan=cand.describe(),
+                        reason=repr(e))
 
     times: Dict[LoweringPlan, float] = {}
     failed: Dict[LoweringPlan, str] = {}
+    sweep_span = telemetry.span("tune/sweep", graph=gname,
+                                candidates=len(cands))
     for cand in cands:
-        try:
-            for _ in range(warmup):
-                run(cand)
-        except Exception as e:  # noqa: BLE001 - any lowering failure
-            failed[cand] = repr(e)
+        with telemetry.span("tune/candidate", graph=gname,
+                            plan=cand.describe(), phase="warmup"):
+            try:
+                for _ in range(warmup):
+                    run(cand)
+            except Exception as e:  # noqa: BLE001 - any lowering failure
+                fail(cand, e)
     for _ in range(max(1, iters)):
         for cand in cands:
             if cand in failed:
                 continue
+            cspan = telemetry.span("tune/candidate", graph=gname,
+                                   plan=cand.describe(), phase="timed")
             try:
                 t0 = time.perf_counter()
                 run(cand)
                 dt = time.perf_counter() - t0
             except Exception as e:  # noqa: BLE001
-                failed[cand] = repr(e)
+                cspan.end(error=repr(e))
+                fail(cand, e)
                 times.pop(cand, None)
                 continue
+            cspan.end(best_us=dt * 1e6)
             times[cand] = min(times.get(cand, dt), dt)
+    sweep_span.end(timed=len(times), failed=len(failed))
     return times, failed
 
 
@@ -362,7 +387,7 @@ def autotune_graph(
 
     launch_kw = dict(config=config, outputs=outputs, scalars=scalars,
                      out_layouts=out_layouts, halo=halo)
-    _STATS["tunes"] += 1
+    telemetry.inc("tune.tunes")
     times, failed = _sweep(graph, ins, launch_kw, cands, iters, warmup)
     if not times:
         raise RuntimeError(

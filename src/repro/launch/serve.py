@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BatchedField, Field, TargetConfig
+from repro.core import BatchedField, Field, TargetConfig, telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +67,9 @@ class _Bucket:
         self.slot_rid: list = [None] * slots
         self.state = None  # lazily shaped from the first admitted source
         self.iterations_run = 0
+        # telemetry: per-shape-bucket metric names + in-flight request spans
+        self.label = "x".join(map(str, u.lattice))
+        self._req_spans: Dict[int, object] = {}
 
     # -- slot state ------------------------------------------------------
 
@@ -101,6 +104,13 @@ class _Bucket:
             it=st.it.at[slot].set(0),
         )
         self.slot_rid[slot] = req.rid
+        telemetry.inc("serve.admitted")
+        # admission->harvest latency span, closed by _harvest; admit_tick
+        # is the bucket tick count BEFORE this tick's masked iteration, so
+        # harvest_tick - admit_tick == the request's active iterations
+        self._req_spans[req.rid] = telemetry.begin_span(
+            "serve/request", rid=req.rid, bucket=self.label, slot=slot,
+            admit_tick=self.iterations_run)
 
     def _harvest(self, slot: int) -> SolveOutcome:
         st = self.state
@@ -111,6 +121,11 @@ class _Bucket:
             residual=float(st.rr[slot] / st.b2[slot]),
         )
         self.slot_rid[slot] = None
+        telemetry.inc("serve.harvested")
+        rspan = self._req_spans.pop(out.rid, None)
+        if rspan is not None:
+            rspan.end(harvest_tick=self.iterations_run,
+                      iterations=out.iterations, residual=out.residual)
         return out
 
     # -- scheduler tick --------------------------------------------------
@@ -125,13 +140,22 @@ class _Bucket:
         this tick."""
         from repro.apps.milc.cg import batched_cg_active
 
+        # queue depth sampled before admission, occupancy after: the
+        # oracle drain test replays exactly this schedule
+        telemetry.sample(f"serve.queue_depth.{self.label}", len(self.queue))
         for slot in range(self.slots):
             if self.slot_rid[slot] is None and self.queue:
                 self._admit(slot, self.queue.popleft())
-        if not any(r is not None for r in self.slot_rid):
+        occupied = sum(r is not None for r in self.slot_rid)
+        telemetry.sample(f"serve.slot_occupancy.{self.label}", occupied)
+        if not occupied:
             return {}
-        self.state = self.step(self.state)
+        with telemetry.span("serve/tick", bucket=self.label,
+                            tick=self.iterations_run + 1, occupied=occupied):
+            self.state = self.step(self.state)
         self.iterations_run += 1
+        telemetry.inc("serve.ticks")
+        telemetry.inc(f"serve.ticks.{self.label}")
         act = np.asarray(
             batched_cg_active(self.state, tol=self.tol,
                               max_iter=self.max_iter))
@@ -177,10 +201,12 @@ class SolveServer:
         """Tick all buckets round-robin until every queue and slot is
         drained.  Returns {rid: SolveOutcome}."""
         results: Dict[int, SolveOutcome] = {}
-        while any(b.busy for b in self.buckets.values()):
-            for bucket in self.buckets.values():
-                if bucket.busy:
-                    results.update(bucket.tick())
+        with telemetry.span("serve/drain", buckets=len(self.buckets)) as ds:
+            while any(b.busy for b in self.buckets.values()):
+                for bucket in self.buckets.values():
+                    if bucket.busy:
+                        results.update(bucket.tick())
+            ds.set(requests=len(results))
         return results
 
 
@@ -254,13 +280,23 @@ def main():
                          "'tuned' picks persisted autotune winners "
                          "(rsplit split reductions included) from the "
                          "TARGETDP_TUNE_PATH table")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry for the run and write a Chrome "
+                         "trace (load at ui.perfetto.dev) to PATH; also "
+                         "prints the telemetry report snapshot")
     args = ap.parse_args()
+    if args.trace:
+        telemetry.enable()
+        telemetry.configure_logging()
     if args.solve:
         _main_solve(args)
     else:
         if args.arch is None:
             ap.error("--arch is required unless --solve is given")
         _main_decode(args)
+    if args.trace:
+        print(telemetry.format_report())
+        print(f"chrome trace: {telemetry.export_chrome_trace(args.trace)}")
 
 
 if __name__ == "__main__":

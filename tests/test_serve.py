@@ -113,6 +113,91 @@ def test_scheduler_drains_mixed_shapes_bitwise():
         assert out.residual == float(want.residual)
 
 
+def _mixed_shape_server():
+    """The mixed-shape 6-request workload of the drain test, rebuilt from
+    scratch (fresh buckets, fresh queues) so back-to-back runs are
+    independent."""
+    shapes = [LAT, (4, 4, 8, 8)]
+    cfgs, us, reqs = {}, {}, []
+    for i, lat in enumerate(shapes):
+        cfg = _cfg("jnp", lattice=lat)
+        u, _ = driver.init_problem(cfg, seed=i)
+        cfgs[lat], us[lat] = cfg, u
+        for j in range(3):
+            rid = 10 * i + j
+            b = _sources(cfg, 1, seed0=100 + rid)[0]
+            reqs.append(SolveRequest(rid=rid, b=b))
+    server = SolveServer(cfgs[LAT].target, slots=2, tol=cfgs[LAT].tol,
+                         max_iter=cfgs[LAT].max_iter)
+    for lat in shapes:
+        server.register(us[lat], cfgs[lat].kappa)
+    for req in sorted(reqs, key=lambda r: r.rid % 10):
+        server.submit(req)
+    return server
+
+
+def test_drain_telemetry_matches_oracle_trace_and_disabled_is_bitwise():
+    """One drain with telemetry off, one with it on: the admission/harvest
+    counters, per-bucket tick counters, queue-depth/occupancy gauges and
+    per-request admission->harvest spans must replay the scheduler's
+    oracle request trace exactly — and the enabled run's solves must be
+    bitwise identical to the disabled run's (observability never touches
+    the computation)."""
+    from repro.core import telemetry
+
+    telemetry.disable()
+    telemetry.reset()
+    res_off = _mixed_shape_server().run()
+    assert telemetry.events() == []  # disabled: no spans recorded
+    telemetry.reset_counters("serve.")
+
+    telemetry.enable()
+    try:
+        server = _mixed_shape_server()
+        res_on = server.run()
+    finally:
+        telemetry.disable()
+
+    # disabled vs enabled: bitwise identical outcomes
+    assert sorted(res_on) == sorted(res_off)
+    for rid, off in res_off.items():
+        on = res_on[rid]
+        np.testing.assert_array_equal(np.asarray(off.x.data),
+                                      np.asarray(on.x.data))
+        assert off.iterations == on.iterations
+        assert off.residual == on.residual
+
+    n = len(res_on)
+    assert telemetry.counter_value("serve.admitted") == n
+    assert telemetry.counter_value("serve.harvested") == n
+    total_ticks = sum(b.iterations_run for b in server.buckets.values())
+    assert telemetry.counter_value("serve.ticks") == total_ticks
+    for b in server.buckets.values():
+        assert (telemetry.counter_value(f"serve.ticks.{b.label}")
+                == b.iterations_run)
+        # 3 requests through 2 slots: depth starts at 3, drains to 0;
+        # occupancy peaks at the slot count
+        depth = [v for _, v in
+                 telemetry.gauges(f"serve.queue_depth.{b.label}")
+                 [f"serve.queue_depth.{b.label}"]]
+        assert depth[0] == 3 and max(depth) == 3 and depth[-1] == 0
+        occ = [v for _, v in
+               telemetry.gauges(f"serve.slot_occupancy.{b.label}")
+               [f"serve.slot_occupancy.{b.label}"]]
+        assert max(occ) == 2
+
+    # per-request latency spans bracket exactly the active iterations
+    spans = telemetry.events("serve/request")
+    assert len(spans) == n
+    for e in spans:
+        a = e["attrs"]
+        assert a["harvest_tick"] - a["admit_tick"] == a["iterations"]
+        assert a["iterations"] == res_on[a["rid"]].iterations
+    (drain,) = telemetry.events("serve/drain")
+    assert drain["attrs"]["requests"] == n
+    assert len(telemetry.events("serve/tick")) == total_ticks
+
+
 def test_scheduler_rejects_unregistered_shape():
     cfg = _cfg("jnp")
     server = SolveServer(cfg.target)

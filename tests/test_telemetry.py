@@ -1,0 +1,344 @@
+"""core.telemetry: the unified observability registry.  Disabled no-op
+path, gated spans/gauges vs always-on counters, the fuse/tune stats()
+back-compat shims, launch-span schema with cache transitions and live
+roofline placement, per-launch TargetConfig.telemetry override, Chrome
+trace + JSONL export, report snapshots, the unified repro.* logging tree
+(tuner candidate failures, overlap thin-interior fallback, tuned-misfit
+degrade — all caplog-asserted), tune sweep spans and pipeline step spans.
+"""
+
+import json
+import logging
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Field, LaunchGraph, LoweringPlan, SOA, StepPipeline, TargetConfig, fuse,
+    telemetry, tune,
+)
+
+LAT = (4, 4, 8)  # 128 sites
+
+
+@pytest.fixture(autouse=True)
+def clean_telemetry():
+    """Every test starts and ends with telemetry off and empty — span
+    state must never leak between tests (or into other test files)."""
+    telemetry.disable()
+    telemetry.reset()
+    yield
+    telemetry.disable()
+    telemetry.reset()
+
+
+def _scale_body(v):
+    return {"t": 2.0 * v["x"]}
+
+
+def _graph(name="telemetry_probe"):
+    return LaunchGraph(name).add(_scale_body, {"x": "x"}, {"t": 3})
+
+
+def _field(rng):
+    arr = rng.normal(size=(3, *LAT)).astype(np.float32)
+    return Field.from_numpy("x", arr, LAT, SOA)
+
+
+# -- gating --------------------------------------------------------------------
+
+def test_env_parser():
+    assert telemetry._env_enabled("1")
+    assert telemetry._env_enabled(" TRUE ")
+    assert telemetry._env_enabled("on") and telemetry._env_enabled("yes")
+    assert not telemetry._env_enabled(None)
+    assert not telemetry._env_enabled("")
+    assert not telemetry._env_enabled("0")
+    assert not telemetry._env_enabled("off")
+
+
+def test_disabled_spans_are_noop_counters_still_count():
+    s = telemetry.span("probe/x", a=1)
+    assert s is telemetry.NULL_SPAN and not s
+    with telemetry.span("probe/y") as s2:
+        s2.set(k=2).end()
+    telemetry.event("probe/ev", a=1)
+    telemetry.sample("probe.g", 3.0)
+    assert telemetry.events() == []
+    assert telemetry.gauges() == {}
+    # counters are the pre-telemetry stats() probes: never gated
+    telemetry.inc("probe.count", 2)
+    assert telemetry.counter_value("probe.count") == 2
+
+
+def test_enabled_span_records_name_attrs_duration():
+    telemetry.enable()
+    with telemetry.span("probe/work", stage="a") as s:
+        s.set(extra=1)
+    (e,) = telemetry.events("probe/work")
+    assert e["type"] == "span"
+    assert e["attrs"] == {"stage": "a", "extra": 1}
+    assert e["dur"] >= 0.0
+    # an exception inside the span is recorded, not swallowed
+    with pytest.raises(RuntimeError):
+        with telemetry.span("probe/boom"):
+            raise RuntimeError("kaboom")
+    (b,) = telemetry.events("probe/boom")
+    assert "RuntimeError" in b["attrs"]["error"]
+
+
+def test_override_beats_process_switch():
+    # off process-wide, on per call site
+    s = telemetry.span("probe/forced", override=True)
+    assert s is not telemetry.NULL_SPAN
+    s.end()
+    assert len(telemetry.events("probe/forced")) == 1
+    # on process-wide, off per call site
+    telemetry.enable()
+    assert telemetry.span("probe/muted", override=False) is telemetry.NULL_SPAN
+
+
+# -- counter shims -------------------------------------------------------------
+
+def test_stats_shims_exact_keys_and_scoped_reset():
+    fuse.reset_stats()
+    tune.reset_stats()
+    assert sorted(fuse.stats()) == [
+        "cache_hits", "cache_misses", "pallas_calls", "traces"]
+    assert sorted(tune.stats()) == [
+        "hits", "lookups", "sweep_launches", "tunes"]
+    telemetry.inc("fuse.traces")
+    telemetry.inc("tune.lookups")
+    assert fuse.stats()["traces"] == 1
+    assert tune.stats()["lookups"] == 1
+    fuse.reset_stats()  # prefix-scoped: must not touch tune.*
+    assert fuse.stats()["traces"] == 0
+    assert tune.stats()["lookups"] == 1
+
+
+# -- launch spans --------------------------------------------------------------
+
+LAUNCH_SPAN_SCHEMA = (
+    "plan", "engine", "lattice", "batch", "halo", "from_tuned_table",
+    "cache", "bytes_fused", "bytes_unfused", "gbps_achieved",
+    "roofline_ceiling_gbps", "roofline_frac", "roofline_placement",
+)
+
+
+def test_launch_span_schema_cache_transition_and_bitwise(rng):
+    fx = _field(rng)
+    cfg = TargetConfig("jnp")
+    fuse.clear_cache()
+    base = _graph().launch({"x": fx}, config=cfg)["t"].to_numpy()  # disabled
+
+    telemetry.enable()
+    fuse.clear_cache()
+    got = _graph().launch({"x": fx}, config=cfg)["t"].to_numpy()
+    again = _graph().launch({"x": fx}, config=cfg)["t"].to_numpy()
+    # observability never perturbs the computation: bit-for-bit equal
+    np.testing.assert_array_equal(got, base)
+    np.testing.assert_array_equal(again, base)
+
+    spans = telemetry.events("launch/telemetry_probe")
+    assert len(spans) == 2
+    for e in spans:
+        for field in LAUNCH_SPAN_SCHEMA:
+            assert field in e["attrs"], f"launch span missing {field}"
+    assert [e["attrs"]["cache"] for e in spans] == ["miss", "hit"]
+    a = spans[0]["attrs"]
+    assert a["engine"] == "jnp"
+    assert a["lattice"] == str(LAT)
+    assert a["bytes_fused"] > 0 and a["bytes_unfused"] >= a["bytes_fused"]
+    assert a["gbps_achieved"] > 0 and a["roofline_frac"] > 0
+    assert "memory-roof" in a["roofline_placement"]
+    assert a["from_tuned_table"] is False
+
+
+def test_config_telemetry_override_per_launch(rng):
+    fx = _field(rng)
+    # process switch off, per-launch on
+    _graph("cfg_on").launch({"x": fx}, config=TargetConfig(
+        "jnp", telemetry=True))
+    assert len(telemetry.events("launch/cfg_on")) == 1
+    # process switch on, per-launch off
+    telemetry.enable()
+    _graph("cfg_off").launch({"x": fx}, config=TargetConfig(
+        "jnp", telemetry=False))
+    assert telemetry.events("launch/cfg_off") == []
+
+
+# -- export --------------------------------------------------------------------
+
+def test_chrome_trace_export(tmp_path):
+    telemetry.enable()
+    with telemetry.span("probe/a", k="v"):
+        pass
+    telemetry.event("probe/inst", why="x")
+    telemetry.sample("probe.gauge", 1.5)
+    path = telemetry.export_chrome_trace(str(tmp_path / "trace.json"))
+    data = json.loads(open(path).read())
+    evs = data["traceEvents"]
+    assert {"M", "X", "i", "C"} <= {e["ph"] for e in evs}
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["name"] == "probe/a" and x["args"]["k"] == "v"
+    assert x["dur"] >= 0 and x["cat"] == "probe"
+    c = next(e for e in evs if e["ph"] == "C")
+    assert c["name"] == "probe.gauge"
+
+
+def test_jsonl_sinks(tmp_path):
+    live = tmp_path / "live.jsonl"
+    telemetry.enable(jsonl=str(live))
+    with telemetry.span("probe/a"):
+        pass
+    telemetry.disable()  # closes the live sink
+    lines = [json.loads(ln) for ln in live.read_text().splitlines()]
+    assert [ln["name"] for ln in lines] == ["probe/a"]
+
+    telemetry.enable()
+    with telemetry.span("probe/b"):
+        pass
+    batch = tmp_path / "batch.jsonl"
+    telemetry.write_jsonl(str(batch))
+    names = [json.loads(ln)["name"] for ln in batch.read_text().splitlines()]
+    assert "probe/b" in names
+
+
+def test_report_and_format():
+    telemetry.enable()
+    telemetry.inc("probe.count", 3)
+    telemetry.sample("probe.gauge", 2.0)
+    telemetry.sample("probe.gauge", 4.0)
+    for _ in range(2):
+        with telemetry.span("probe/s"):
+            pass
+    r = telemetry.report()
+    assert r["counters"]["probe.count"] == 3
+    assert r["spans"]["probe/s"]["count"] == 2
+    g = r["gauges"]["probe.gauge"]
+    assert (g["min"], g["max"], g["last"]) == (2.0, 4.0, 4.0)
+    txt = telemetry.format_report()
+    assert "probe.count" in txt and "probe/s" in txt
+
+
+def test_roofline_placement_fields():
+    from repro.launch.roofline import HBM_BW
+
+    r = telemetry.roofline_placement(int(HBM_BW), 1.0)  # exactly the roof
+    assert r["gbps_achieved"] == pytest.approx(HBM_BW / 1e9)
+    assert r["roofline_frac"] == pytest.approx(1.0)
+    assert "memory-roof" in r["roofline_placement"]
+    assert telemetry.roofline_placement(100, 0.0)["gbps_achieved"] == 0.0
+
+
+# -- unified logging -----------------------------------------------------------
+
+def test_configure_logging_idempotent():
+    lg = telemetry.configure_logging(level=logging.DEBUG)
+    assert lg.name == "repro"
+    flagged = [h for h in lg.handlers
+               if getattr(h, "_targetdp_telemetry_handler", False)]
+    assert len(flagged) == 1
+    try:
+        lg2 = telemetry.configure_logging(level=logging.INFO)  # re-level only
+        assert lg2 is lg
+        assert [h for h in lg.handlers
+                if getattr(h, "_targetdp_telemetry_handler", False)] == flagged
+        assert lg.level == logging.INFO
+    finally:
+        lg.removeHandler(flagged[0])
+        lg.setLevel(logging.NOTSET)
+
+
+def test_tuned_misfit_degrade_logged_and_recovers(rng, monkeypatch, caplog):
+    """A stale tuned-table plan that cannot validate degrades to the
+    default plan through the repro.core.fuse logger — warned, not fatal,
+    and numerically identical to the default policy."""
+    fx = _field(rng)
+    bad = LoweringPlan("jnp", rsplit=2)  # jnp has no reduction grid to split
+    monkeypatch.setattr(tune, "lookup", lambda key, path=None: bad)
+    want = _graph("degrade_probe").launch(
+        {"x": fx}, config=TargetConfig("jnp"))["t"].to_numpy()
+    with caplog.at_level(logging.WARNING, logger="repro.core.fuse"):
+        got = _graph("degrade_probe").launch(
+            {"x": fx}, config=TargetConfig("jnp", plan_policy="tuned"))[
+                "t"].to_numpy()
+    assert any("falling back to the default plan" in r.message
+               for r in caplog.records)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_overlap_thin_interior_fallback_logs_under_repro_root(rng, caplog):
+    """The overlap thin-interior fallback reaches the unified ``repro``
+    logger tree (configure_logging's single attachment point) as a
+    ``repro.core.overlap`` child record."""
+    from repro.core.stencil import halo_pad
+
+    def body(v, gather):
+        s = v["x"]
+        for d in range(3):
+            for sgn in (1, -1):
+                disp = [0, 0, 0]
+                disp[d] = sgn
+                s = s + gather("x", tuple(disp))
+        return {"z": s}
+
+    g = LaunchGraph("tele_stencil").add_stencil(
+        body, {"x": "x"}, {"z": 3}, width=1)
+    thin = (2, 2, 2)
+    arr = rng.normal(size=(3, *thin)).astype(np.float32)
+    h = halo_pad(jnp.asarray(arr), 1, (1, 2, 3))
+    fx = Field.from_canonical("x", h, tuple(h.shape[1:]), SOA)
+    cfg = TargetConfig("jnp")
+    want = g.launch({"x": fx}, config=cfg, halo="pre")["z"]
+    with caplog.at_level(logging.WARNING, logger="repro"):
+        got = g.launch({"x": fx}, config=cfg, halo="overlap")["z"]
+    recs = [r for r in caplog.records if r.name == "repro.core.overlap"
+            and "falling back to halo='pre'" in r.message]
+    assert recs, "overlap fallback did not log through the repro.* tree"
+    np.testing.assert_array_equal(want.to_numpy(), got.to_numpy())
+
+
+# -- tune sweep spans ----------------------------------------------------------
+
+def test_tune_sweep_spans_and_failure_capture(tmp_path, monkeypatch, rng,
+                                              caplog):
+    monkeypatch.setenv(tune.ENV_VAR, str(tmp_path / "t.json"))
+    tune.clear_table_cache()
+    telemetry.enable()
+    fx = _field(rng)
+    g = _graph("sweep_probe")
+    cfg = TargetConfig("pallas", vvl=64)
+    good = tune.plan_candidates_for(g, {"x": fx}, config=cfg)[0]
+    bad = LoweringPlan("jnp", rsplit=2)  # raises at plan validation
+    with caplog.at_level(logging.WARNING, logger="repro.core.tune"):
+        times, failed = tune._sweep(
+            g, {"x": fx}, {"config": cfg}, (good, bad), 1, 1)
+    assert good in times and bad in failed
+    assert any("failed" in r.message for r in caplog.records)
+    (sweep,) = telemetry.events("tune/sweep")
+    assert sweep["attrs"]["candidates"] == 2
+    assert sweep["attrs"]["failed"] == 1 and sweep["attrs"]["timed"] == 1
+    cands = telemetry.events("tune/candidate")
+    assert any(e["attrs"]["phase"] == "timed" for e in cands)
+    fails = telemetry.events("tune/failed")
+    assert fails and "rsplit" in fails[0]["attrs"]["reason"]
+
+
+# -- pipeline spans ------------------------------------------------------------
+
+def test_pipeline_step_spans():
+    telemetry.enable()
+
+    def incstep(x):
+        return x + 1
+
+    pipe = StepPipeline(incstep, donate=False)
+    (out,) = pipe.run((jnp.zeros(4),), steps=3)
+    np.testing.assert_array_equal(np.asarray(out), 3.0 * np.ones(4))
+    steps = [e for e in telemetry.events("pipeline/incstep")
+             if e["name"] == "pipeline/incstep"]
+    assert [e["attrs"]["step"] for e in steps] == [0, 1, 2]
+    (blk,) = telemetry.events("pipeline/incstep.block")
+    assert blk["attrs"]["steps"] == 3
