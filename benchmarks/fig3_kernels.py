@@ -699,6 +699,162 @@ def telemetry_trace(path, lattice=(32, 32, 32), engine="jnp", iters=20,
     return rows, metrics
 
 
+DTYPE_SWEEP_STORAGE = ("float64", "float32", "bfloat16")
+
+
+def dtype_sweep(lattice=(16, 16, 16), milc_lattice=(8, 8, 8, 8),
+                engine="jnp", lb_steps=3):
+    """``--dtype-sweep``: the mixed-precision storage sweep on the two
+    chains the dtype-policy axis targets — the fused LB step under
+    ``LudwigConfig.storage`` and the full Wilson-CG solve under
+    ``MilcConfig.storage`` (iterative-refinement restarts, see
+    apps/milc/cg.cg_refined) — one row per storage dtype in
+    {float64, float32, bfloat16}.
+
+    Each row reports *per-iteration* wall time and *time-to-solution*
+    (for the solver: measured wall x measured iterations-to-tolerance —
+    narrower storage may need more iterations, which is exactly what the
+    tuner's convergence-aware cost model prices), final rel-L2 against the
+    fp64-storage baseline row, and the modeled fused HBM bytes per
+    application priced at the policy's storage itemsize
+    (``LaunchGraph.bytes_moved(..., dtypes=...)``).
+
+    Honesty note: with ``jax_enable_x64`` off (this container) the
+    float64-storage row is *emulated* — jax truncates the casts to fp32,
+    so its numerics coincide with the float32 row while its modeled bytes
+    still price itemsize 8 (flagged ``emulated_fp64`` in the metrics).
+    The accumulate leg of the policy falls back to compensated (Kahan)
+    fp32 the same way, so the baseline is still the widest-accumulation
+    run the platform can execute.
+
+    Returns (rows, metrics): metrics maps chain -> storage -> row dict
+    for the dtype-sweep CI gate (``gate_dtype``)."""
+    import time as _time
+
+    from repro.apps.ludwig.driver import lb_step_graph
+    from repro.apps.milc.driver import residual_check, solve as milc_solve
+    from repro.core.plan import DtypePolicy
+
+    tgt = TargetConfig(engine, vvl=128)
+    x64 = bool(jax.config.jax_enable_x64)
+    rows, metrics = [], {"lb_step": {}, "wilson_normal_cg": {}}
+
+    def policy(storage):
+        return DtypePolicy(storage=storage, compute="float32",
+                           accumulate="float64")
+
+    # ---- fused LB step: distributions stream through HBM in the storage
+    # dtype; the carried state is cast back each step (driver contract)
+    nsites = int(np.prod(lattice))
+    lb_ref = None
+    for storage in DTYPE_SWEEP_STORAGE:
+        cfg = LudwigConfig(lattice=lattice, target=tgt, storage=storage)
+        state = init_state(cfg, seed=0)
+        state, _ = step_timed(state, cfg)  # warmup/compile
+        t_lb = 0.0
+        for _ in range(lb_steps):
+            state, t = step_timed(state, cfg)
+            t_lb += t["lb_step"] / lb_steps
+        dist = np.asarray(state.dist.canonical(), dtype=np.float64)
+        if lb_ref is None:
+            lb_ref = dist
+        rel = float(np.linalg.norm(dist - lb_ref)
+                    / max(float(np.linalg.norm(lb_ref)), 1e-30))
+        pol = policy(storage)
+        bm = lb_step_graph(cfg).bytes_moved(
+            {"dist": 19, "force": 3}, nsites, outputs=("dist2", "u"),
+            dtypes=pol)
+        metrics["lb_step"][storage] = {
+            "per_iter_s": t_lb,
+            "time_to_solution_s": t_lb * lb_steps,
+            "iterations": lb_steps,
+            "rel_l2_vs_baseline": rel,
+            "bytes_fused": bm["fused"],
+            "storage_itemsize": pol.storage_itemsize(4),
+            "emulated_fp64": storage == "float64" and not x64,
+        }
+        rows.append(csv_row(
+            f"fig3_dtype/lb_step@{storage}", t_lb * 1e6,
+            f"rel_l2={rel:.2e};bytes_fused={bm['fused']};"
+            f"itemsize={pol.storage_itemsize(4)}"))
+
+    # ---- Wilson-CG solve: the per-iteration operator launches move
+    # storage-dtype bytes, refinement restarts recover the tolerance
+    nsites4 = int(np.prod(milc_lattice))
+    x_ref = None
+    for storage in DTYPE_SWEEP_STORAGE:
+        cfg4 = MilcConfig(lattice=milc_lattice, kappa=0.1, tol=1e-10,
+                          target=tgt, storage=storage)
+        u4, b4 = init_problem(cfg4, seed=0)
+        res = milc_solve(cfg4, u4, b4)  # warmup/compile + the solution
+        jax.block_until_ready(res.x.data)
+        t0 = _time.perf_counter()
+        jax.block_until_ready(milc_solve(cfg4, u4, b4).x.data)
+        wall = _time.perf_counter() - t0
+        iters = int(res.iterations)
+        x = np.asarray(res.x.canonical(), dtype=np.float64)
+        if x_ref is None:
+            x_ref = x
+        rel = float(np.linalg.norm(x - x_ref)
+                    / max(float(np.linalg.norm(x_ref)), 1e-30))
+        pol = policy(storage)
+        bm = wilson_normal_graph(cfg4.kappa).bytes_moved(
+            {"p": 24, "u": 72}, nsites4, outputs=("ap", "pap"), dtypes=pol)
+        metrics["wilson_normal_cg"][storage] = {
+            "per_iter_s": wall / max(iters, 1),
+            "time_to_solution_s": wall,
+            "iterations": iters,
+            "rel_l2_vs_baseline": rel,
+            "residual": residual_check(cfg4, u4, b4, res.x),
+            "bytes_fused": bm["fused"],
+            "storage_itemsize": pol.storage_itemsize(4),
+            "emulated_fp64": storage == "float64" and not x64,
+        }
+        rows.append(csv_row(
+            f"fig3_dtype/wilson_normal_cg@{storage}", wall * 1e6,
+            f"iters={iters};per_iter_us={wall / max(iters, 1) * 1e6:.1f};"
+            f"rel_l2={rel:.2e};bytes_fused={bm['fused']};"
+            f"itemsize={pol.storage_itemsize(4)}"))
+    return rows, metrics
+
+
+def gate_dtype(metrics):
+    """The dtype-sweep CI gate: accuracy vs the fp64-storage baseline row
+    and bytes monotonicity.
+
+    * solver rows: rel-L2 <= 1e-6 (fp32 storage) / 1e-3 (bf16 storage) —
+      achievable because iterative refinement recovers the storage
+      quantization each restart;
+    * LB rows: fp32 <= 1e-6, but the LB step has no refinement loop (a
+      single fused kernel whose output is quantized once per step), so
+      its bf16 row is gated at the bf16 storage-quantization bound 1e-2 —
+      the same accuracy gate the tuner applies to bf16 candidates;
+    * modeled fused bytes must strictly shrink with the storage itemsize
+      (8 -> 4 -> 2) — the traffic win the policy exists to buy."""
+    TOL = {"wilson_normal_cg": {"float32": 1e-6, "bfloat16": 1e-3},
+           "lb_step": {"float32": 1e-6, "bfloat16": 1e-2}}
+    failures = []
+    for chain, per in metrics.items():
+        for storage, tol in TOL.get(chain, {}).items():
+            m = per.get(storage)
+            if m is None:
+                failures.append(f"{chain}: missing {storage} row")
+                continue
+            if m["rel_l2_vs_baseline"] > tol:
+                failures.append(
+                    f"{chain}@{storage}: rel-L2 "
+                    f"{m['rel_l2_vs_baseline']:.2e} vs the fp64-storage "
+                    f"baseline exceeds {tol:g}")
+        seq = [(s, per[s]) for s in DTYPE_SWEEP_STORAGE if s in per]
+        for (sa, a), (sb, b) in zip(seq, seq[1:]):
+            if not b["bytes_fused"] < a["bytes_fused"]:
+                failures.append(
+                    f"{chain}: modeled bytes did not shrink with the "
+                    f"storage itemsize ({sa}={a['bytes_fused']} -> "
+                    f"{sb}={b['bytes_fused']})")
+    return failures
+
+
 def gate_trace(metrics, tolerance):
     """The trace CI gate: enabling telemetry must cost <= ``tolerance``
     relative on the launch row, never change a bit of the output, and
@@ -835,6 +991,12 @@ def main(argv=None):
                     help="with --tile-sweep: exit 1 on identity/demo "
                          "failure or if a tiled launch is slower than "
                          "whole-staging beyond TOL (e.g. 0.10)")
+    ap.add_argument("--dtype-sweep", action="store_true",
+                    help="mixed-precision storage sweep (fp64/fp32/bf16) on "
+                         "the fused LB step and the refined Wilson-CG "
+                         "solve, gated on rel-L2 vs the fp64-storage "
+                         "baseline and on modeled bytes shrinking with the "
+                         "storage itemsize")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="telemetry mode: time the fused LB step with "
                          "spans off vs on, write a Perfetto-loadable "
@@ -852,6 +1014,10 @@ def main(argv=None):
         # overhead gate needs a launch long enough to resolve the span cost
         rows, metrics = telemetry_trace(args.trace, engine=args.engine)
         failures += gate_trace(metrics, args.trace_gate)
+    elif args.dtype_sweep:
+        rows, metrics = dtype_sweep(engine=args.engine,
+                                    lb_steps=2 if args.smoke else 3, **sizes)
+        failures += gate_dtype(metrics)
     elif args.tile_sweep:
         tsizes = (dict(lattice=(4, 14, 16), milc_lattice=(4, 4, 4, 4))
                   if args.smoke else {})
@@ -885,10 +1051,12 @@ def main(argv=None):
         print(r)
     if args.json:
         mode = ("trace" if args.trace
+                else "dtype-sweep" if args.dtype_sweep
                 else "tile-sweep" if args.tile_sweep
                 else "layout-sweep" if args.layout_sweep
                 else "tune" if args.tune else "fused")
         tol = (args.trace_gate if args.trace
+               else None if args.dtype_sweep
                else args.tile_gate if args.tile_sweep
                else args.tune_gate if args.tune else args.gate)
         with open(args.json, "w") as f:

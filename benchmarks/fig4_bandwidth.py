@@ -44,22 +44,35 @@ except ImportError:  # run as a script: python benchmarks/fig4_bandwidth.py
     from common import LUDWIG_KERNELS, MILC_KERNELS, csv_row, ridge_point
 
 
-def _tile_roofline(name, lattice, in_views, out_views, rows, metrics):
+def _tile_roofline(name, lattice, in_views, out_views, rows, metrics,
+                   dtypes=None):
     """Tiled-launch roofline row: bytes moved per tile vs whole-staging.
 
     Pure geometry — ``tile_boxes`` enumerates the cover and the planner's
     own VMEM model (``estimate_vmem_bytes``) prices the footprints, at the
     (by, bz) ``choose_tiles`` picks under a budget of half the untiled
     footprint.  No launch runs; these rows track the *traffic contract* of
-    the tiled lowering across the perf trajectory."""
+    the tiled lowering across the perf trajectory.
+
+    ``dtypes`` (a :class:`repro.core.DtypePolicy`) prices every view at
+    the plan's *storage* dtype itemsize — the byte counts, footprints and
+    tile picks below are exactly what the policy-aware planner would see,
+    so the mixed-precision roofline rows stay honest."""
+    if dtypes is not None and dtypes.storage:
+        in_views = tuple((nc, r, dtypes.storage_itemsize(isz))
+                         for nc, r, isz in in_views)
+        out_views = tuple((nc, dtypes.storage_itemsize(isz))
+                          for nc, isz in out_views)
+        name = f"{name}@{dtypes.tag()}"
     bx = 1
-    whole = plan_mod.LoweringPlan("pallas", bx=bx)
+    whole = plan_mod.LoweringPlan("pallas", bx=bx, dtypes=dtypes)
     fp_whole = plan_mod.estimate_vmem_bytes(
         whole, lattice=lattice, in_views=in_views, out_views=out_views)
     by, bz = plan_mod.choose_tiles(
         lattice, bx, in_views=in_views, out_views=out_views,
-        vmem_bytes=fp_whole // 2)
-    tiled = plan_mod.LoweringPlan("pallas", bx=bx, by=by, bz=bz)
+        vmem_bytes=fp_whole // 2, dtypes=dtypes)
+    tiled = plan_mod.LoweringPlan("pallas", bx=bx, by=by, bz=bz,
+                                  dtypes=dtypes)
     fp_tiled = plan_mod.estimate_vmem_bytes(
         tiled, lattice=lattice, in_views=in_views, out_views=out_views)
     boxes = tile_boxes(lattice, bx, by, bz)
@@ -160,8 +173,16 @@ def main(argv=None):
         "lb_stencil": (lat, ((19, 1, 4), (3, 0, 4)), ((19, 4),)),
         "wilson_normal": (lat4, ((24, 2, 4), (72, 2, 4)), ((24, 4),)),
     }
+    # every tile case also gets a mixed-precision twin row: identical
+    # geometry, views priced at the policy's storage itemsize
+    policies = (None,
+                plan_mod.DtypePolicy(storage="float32", compute="float32",
+                                     accumulate="float64"),
+                plan_mod.DtypePolicy(storage="bfloat16", compute="float32",
+                                     accumulate="float64"))
     for name, (tlat, iv, ov) in tile_cases.items():
-        _tile_roofline(name, tlat, iv, ov, rows, metrics)
+        for pol in policies:
+            _tile_roofline(name, tlat, iv, ov, rows, metrics, dtypes=pol)
     for r in rows:
         print(r)
     if args.json:

@@ -67,8 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    Field, LaunchGraph, Layout, SOA, TargetConfig, compat, launch, target_sum,
-    tileable_layout,
+    DtypePolicy, Field, LaunchGraph, Layout, SOA, TargetConfig, compat,
+    launch, target_sum, tileable_layout,
 )
 from repro.kernels.lb_collision import ref as lbref
 from repro.kernels.lb_collision.ops import collide_kernel
@@ -92,6 +92,22 @@ class LudwigConfig:
     dt: float = 1.0
     layout: Layout = SOA
     target: TargetConfig = TargetConfig("jnp", vvl=128)
+    # storage dtype for the fused LB half-step's launch ("" = full
+    # precision): distributions stream through HBM in this dtype, compute
+    # stays fp32 and reductions accumulate wide.  Validated against the
+    # full-precision oracle in tests/test_dtype.py.
+    storage: str = ""
+
+
+def _lb_target(cfg: "LudwigConfig") -> TargetConfig:
+    """The fused LB launch's config: ``cfg.target`` plus the storage-dtype
+    policy when ``cfg.storage`` narrows it."""
+    if not cfg.storage:
+        return cfg.target
+    return dataclasses.replace(
+        cfg.target, dtypes=DtypePolicy(storage=cfg.storage,
+                                       compute="float32",
+                                       accumulate="float64"))
 
 
 @dataclasses.dataclass
@@ -257,14 +273,20 @@ def step(state: LudwigState, cfg: LudwigConfig) -> LudwigState:
     force = _mkfield("force", force_nd, cfg)
 
     # moments + collision + streaming fused: one halo'd launch, dist and
-    # force stream from HBM once, post-collision dist never touches HBM
+    # force stream from HBM once, post-collision dist never touches HBM.
+    # Under cfg.storage the launch reads/writes storage-dtype bytes; the
+    # carried state is cast back so the step's signature stays fixed
+    # (quantization to storage precision already happened in the write).
     lb = lb_step_graph(cfg).bind(
-        config=cfg.target, outputs=("dist2", "u"),
+        config=_lb_target(cfg), outputs=("dist2", "u"),
     )({"dist": state.dist, "force": force})
-    dist2 = dataclasses.replace(lb["dist2"], name=state.dist.name)
+    dist2 = dataclasses.replace(
+        lb["dist2"].with_data(
+            lb["dist2"].data.astype(state.dist.data.dtype)),
+        name=state.dist.name)
 
     u = lb["u"]
-    u_nd = u.canonical_nd()
+    u_nd = u.canonical_nd().astype(q_nd.dtype)
     w_nd = _w_tensor(u_nd)
     adv_nd = stage_advection(q_nd, u_nd)
 
@@ -292,12 +314,15 @@ def step_timed(state: LudwigState, cfg: LudwigConfig) -> Tuple[LudwigState, Dict
     # time the same fused LB launch production step() runs; the row name
     # matches the LUDWIG_KERNELS["lb_step"] traffic model (dist+force read
     # once, dist''+u written; dist' and rho never touch HBM)
-    lb_bound = lb_step_graph(cfg).bind(config=cfg.target,
+    lb_bound = lb_step_graph(cfg).bind(config=_lb_target(cfg),
                                        outputs=("dist2", "u"))
     lb = timed("lb_step", lambda: lb_bound({"dist": state.dist,
                                             "force": force}))
-    dist2 = dataclasses.replace(lb["dist2"], name=state.dist.name)
-    u_nd = lb["u"].canonical_nd()
+    dist2 = dataclasses.replace(
+        lb["dist2"].with_data(
+            lb["dist2"].data.astype(state.dist.data.dtype)),
+        name=state.dist.name)
+    u_nd = lb["u"].canonical_nd().astype(q_nd.dtype)
     w_nd = _w_tensor(u_nd)
     adv_nd = timed("advection", stage_advection, q_nd, u_nd)
     q_new = timed("lc_update", stage_lc_update, state.q, h, w_nd, adv_nd, cfg)

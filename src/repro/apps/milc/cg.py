@@ -88,7 +88,10 @@ def fused_xpay(y: Field, a, x: Field, config: TargetConfig) -> Field:
     )
     out = g.launch({"x": x, "y": y}, scalars={"a": a}, config=config,
                    out_layouts={"out": x.layout})["out"]
-    return x.with_data(out.data)
+    # cast back to the carry dtype: under a storage-dtype policy the launch
+    # writes (and so quantizes) the output in storage precision, but the
+    # while_loop carry must keep a fixed dtype (no-op without a policy)
+    return x.with_data(out.data.astype(x.data.dtype))
 
 
 def cg_update_graph(ncomp: int) -> LaunchGraph:
@@ -126,7 +129,8 @@ def fused_cg_update(x: Field, r: Field, p: Field, ap: Field, alpha,
         outputs=("x_new", "r_new", "rr"),
         out_layouts={"x_new": x.layout, "r_new": r.layout},
     )
-    return x.with_data(out["x_new"].data), r.with_data(out["r_new"].data), out["rr"]
+    return (x.with_data(out["x_new"].data.astype(x.data.dtype)),
+            r.with_data(out["r_new"].data.astype(r.data.dtype)), out["rr"])
 
 
 def masked_cg_update_graph(ncomp: int) -> LaunchGraph:
@@ -158,7 +162,8 @@ def fused_masked_cg_update(x, r, p, ap, alpha, mask, config: TargetConfig):
         outputs=("x_new", "r_new", "rr"),
         out_layouts={"x_new": x.layout, "r_new": r.layout},
     )
-    return (x.with_data(out["x_new"].data), r.with_data(out["r_new"].data),
+    return (x.with_data(out["x_new"].data.astype(x.data.dtype)),
+            r.with_data(out["r_new"].data.astype(r.data.dtype)),
             out["rr"])
 
 
@@ -171,7 +176,7 @@ def fused_masked_xpay(y, a, x, mask, config: TargetConfig):
     )
     out = g.launch({"x": x, "y": y}, scalars={"a": a, "m": mask},
                    config=config, out_layouts={"out": x.layout})["out"]
-    return x.with_data(out.data)
+    return x.with_data(out.data.astype(x.data.dtype))
 
 
 def dot(x: Field, y: Field, config: TargetConfig) -> jnp.ndarray:
@@ -335,6 +340,79 @@ def cg(
     return CGResult(x=x, iterations=it, residual=rr / b2)
 
 
+def cg_refined(
+    apply_a_dot,
+    b: Field,
+    *,
+    config: TargetConfig,
+    tol: float = 1e-8,
+    max_iter: int = 500,
+    refine_k: int = 50,
+    reliable: float = 1e-4,
+    psum_axes: Tuple[str, ...] = (),
+    apply_a_dot_hi=None,
+) -> CGResult:
+    """Iterative-refinement CG: low-precision inner iterations wrapped in
+    precision-recovering restarts (the portable-LQCD production recipe).
+
+    The outer loop keeps the solution ``x`` and the *true* residual
+    ``r = b - A x`` in working precision.  Each outer step runs an inner CG
+    on the correction system ``A d = r`` through ``apply_a_dot`` — whose
+    launches may carry a bf16/fp32-storage :class:`DtypePolicy`, so the
+    bandwidth-heavy iterations move narrow bytes — capped at ``refine_k``
+    iterations or the ``reliable`` relative-residual trigger (the
+    reliable-update stop: the inner recurrence residual is not trusted
+    below that ratio).  The correction ``x += d`` and the true-residual
+    recompute then happen in working precision via ``apply_a_dot_hi``
+    (defaults to ``apply_a_dot``; pass the policy-free operator so the
+    residual is exact — with an fp64 or compensated-fp32 accumulate where
+    fp64 is unavailable).  Converges to the *working*-precision ``tol``
+    even though the inner solves are quantized: each restart measures what
+    the low-precision pass actually achieved and re-aims the next one.
+
+    ``iterations`` in the result counts the total inner iterations (the
+    bandwidth-dominant work), matching :func:`cg`'s accounting.
+    """
+    hi = apply_a_dot_hi or apply_a_dot
+
+    def psum(d):
+        for ax in psum_axes:
+            d = jax.lax.psum(d, ax)
+        return d
+
+    def norm2(f: Field):
+        # working-precision residual norm, independent of any storage
+        # policy on `config` (the gate the outer loop trusts)
+        c = f.canonical().astype(jnp.float32)
+        return psum(jnp.sum(c * c))
+
+    b2 = norm2(b)
+    x0 = b.with_canonical(jnp.zeros_like(b.canonical()))
+
+    def true_residual(x):
+        ax, _ = hi(x)
+        r = b.with_data(b.data - ax.data.astype(b.data.dtype))
+        return r, norm2(r)
+
+    def cond(carry):
+        _x, _r, rr, it = carry
+        return jnp.logical_and(rr / b2 > tol, it < max_iter)
+
+    def body(carry):
+        x, r, rr, it = carry
+        inner = cg(None, r, config=config, tol=reliable,
+                   max_iter=refine_k, psum_axes=psum_axes,
+                   apply_a_dot=apply_a_dot)
+        # x += d in working precision (never through a storage-dtype write)
+        x = x.with_data(x.data + inner.x.data.astype(x.data.dtype))
+        r, rr = true_residual(x)
+        return (x, r, rr, it + inner.iterations)
+
+    x, _r, rr, it = jax.lax.while_loop(
+        cond, body, (x0, b, b2, jnp.int32(0)))
+    return CGResult(x=x, iterations=it, residual=rr / b2)
+
+
 # -- batched CG (multi-simulation serving) --------------------------------------
 
 class BatchedCGState(NamedTuple):
@@ -406,6 +484,34 @@ def batched_cg_iteration(
                           it=state.it + act.astype(state.it.dtype))
 
 
+def batched_cg_refresh(state: BatchedCGState, rhs: BatchedField,
+                       apply_a_dot_hi, *, tol: float, max_iter: int,
+                       refine_every: int) -> BatchedCGState:
+    """Reliable-update restart for the batched loop: on every slot whose
+    active iteration count hits a multiple of ``refine_every``, replace the
+    recurrence residual with the *true* residual ``b - A x`` (computed
+    through the high-precision operator) and restart the search direction
+    there; all other slots are bitwise untouched.  This is what keeps the
+    batched/serve path converging to the working-precision tolerance when
+    the per-iteration launches run under a bf16/fp32-storage policy — the
+    recurrence residual drifts from the truth in low precision, and the
+    periodic exact recompute re-aims the iteration."""
+    act = batched_cg_active(state, tol=tol, max_iter=max_iter)
+    sel = jnp.logical_and(act, state.it % refine_every == 0)
+    ax, _ = apply_a_dot_hi(state.x)
+    rt = (rhs.data.astype(jnp.float32)
+          - ax.data.astype(jnp.float32)).astype(state.r.data.dtype)
+    rr_t = state.r.with_data(rt).canonical().astype(jnp.float32)
+    rr_t = jnp.sum(rr_t * rr_t, axis=(-2, -1)).astype(state.rr.dtype)
+    selb = sel.reshape((-1,) + (1,) * (rt.ndim - 1))
+    return BatchedCGState(
+        x=state.x,
+        r=state.r.with_data(jnp.where(selb, rt, state.r.data)),
+        p=state.p.with_data(jnp.where(selb, rt, state.p.data)),
+        rr=jnp.where(sel, rr_t, state.rr),
+        b2=state.b2, it=state.it)
+
+
 def cg_batched(
     apply_a_dot,
     rhs: BatchedField,
@@ -413,6 +519,8 @@ def cg_batched(
     config: TargetConfig,
     tol: float = 1e-8,
     max_iter: int = 500,
+    refine_every: int = 0,
+    apply_a_dot_hi=None,
 ) -> BatchedCGResult:
     """CG on a stack of independent right-hand sides under one shared
     operator, per-request convergence-masked: every iteration runs one
@@ -420,16 +528,36 @@ def cg_batched(
     and each slot's trajectory is bit-identical to :func:`cg` on that slot
     alone (asserted in tests/test_batch.py).  The loop runs until every
     slot has converged or hit max_iter; slots that finish early ride along
-    frozen."""
+    frozen.
 
+    ``refine_every > 0`` enables reliable-update restarts for
+    mixed-precision configs (see :func:`batched_cg_refresh`): every that
+    many active iterations a slot's residual is recomputed exactly as
+    ``b - A x`` through ``apply_a_dot_hi`` (defaults to ``apply_a_dot``;
+    pass the policy-free operator) and its search direction restarted.
+    With ``refine_every=0`` the loop is bitwise the historical one."""
+    hi = apply_a_dot_hi or apply_a_dot
     state0 = batched_cg_state(rhs, config)
 
     def cond(state):
         return jnp.any(batched_cg_active(state, tol=tol, max_iter=max_iter))
 
+    def trig(state):
+        return jnp.logical_and(
+            batched_cg_active(state, tol=tol, max_iter=max_iter),
+            state.it % refine_every == 0)
+
     def body(state):
-        return batched_cg_iteration(state, apply_a_dot, config=config,
-                                    tol=tol, max_iter=max_iter)
+        state = batched_cg_iteration(state, apply_a_dot, config=config,
+                                     tol=tol, max_iter=max_iter)
+        if refine_every > 0:
+            state = jax.lax.cond(
+                jnp.any(trig(state)),
+                lambda s: batched_cg_refresh(
+                    s, rhs, hi, tol=tol, max_iter=max_iter,
+                    refine_every=refine_every),
+                lambda s: s, state)
+        return state
 
     state = jax.lax.while_loop(cond, body, state0)
     return BatchedCGResult(x=state.x, iterations=state.it,

@@ -43,15 +43,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    BatchedField, Field, Layout, SOA, TargetConfig, compat, overlap_launch,
-    tileable_layout,
+    BatchedField, DtypePolicy, Field, Layout, SOA, TargetConfig, compat,
+    overlap_launch, tileable_layout,
 )
 from repro.core import halo as halo_mod
 from repro.kernels.wilson_dslash.ops import dslash_halo
 from repro.lattice import Domain
 from .cg import (
-    BatchedCGResult, CGResult, cg, cg_batched, dot, make_fused_normal,
-    make_wilson_op, wilson_normal_graph,
+    BatchedCGResult, CGResult, cg, cg_batched, cg_refined, dot,
+    make_fused_normal, make_wilson_op, wilson_normal_graph,
 )
 from . import fields
 
@@ -65,6 +65,38 @@ class MilcConfig:
     hot: float = 0.6           # gauge disorder (1 = hot start)
     layout: Layout = SOA
     target: TargetConfig = TargetConfig("jnp", vvl=128)
+    # mixed precision: storage dtype for the bandwidth-dominant operator
+    # launches ("" = full precision), and the iterative-refinement /
+    # reliable-update knobs that keep the solve correct under it.
+    # refine_k = 0 picks a default (50) whenever storage is narrowed.
+    storage: str = ""
+    refine_k: int = 0
+    reliable: float = 0.0
+
+
+def _storage_target(cfg: MilcConfig) -> TargetConfig:
+    """The operator-launch config: ``cfg.target`` with the storage-dtype
+    policy attached when ``cfg.storage`` narrows it (compute stays fp32,
+    terminal reductions accumulate in fp64 — compensated fp32 where fp64
+    is unavailable)."""
+    if not cfg.storage:
+        return cfg.target
+    return dataclasses.replace(
+        cfg.target, dtypes=DtypePolicy(storage=cfg.storage,
+                                       compute="float32",
+                                       accumulate="float64"))
+
+
+def _hi_target(cfg: MilcConfig) -> TargetConfig:
+    """The reference-operator config for true-residual recomputes: any
+    dtype policy stripped and the deterministic default plans, so the
+    residual the refinement loop trusts is policy-independent."""
+    return dataclasses.replace(cfg.target, plan_policy="default",
+                               dtypes=None)
+
+
+def _refine_k(cfg: MilcConfig) -> int:
+    return cfg.refine_k or (50 if cfg.storage else 0)
 
 
 def init_problem(cfg: MilcConfig, seed: int = 0):
@@ -82,12 +114,26 @@ def solve(cfg: MilcConfig, u: Field, b: Field) -> CGResult:
 
     The operator application runs through the fused dslash+axpy+dot graph
     (one pallas_call), the update chain through the fused axpy+residual-norm
-    graph (one more): two launches per CG iteration."""
+    graph (one more): two launches per CG iteration.
+
+    With ``cfg.storage`` narrowed (or ``cfg.refine_k`` set) the solve runs
+    :func:`repro.apps.milc.cg.cg_refined`: the per-iteration operator
+    launches move storage-dtype bytes while iterative-refinement restarts
+    against the policy-free operator recover the working-precision
+    tolerance."""
     apply_m, apply_mdag, apply_normal = make_wilson_op(u, cfg.kappa, cfg.target)
     rhs = apply_mdag(b)
+    rk = _refine_k(cfg)
+    if rk > 0:
+        return cg_refined(
+            make_fused_normal(u, cfg.kappa, _storage_target(cfg)), rhs,
+            config=cfg.target, tol=cfg.tol, max_iter=cfg.max_iter,
+            refine_k=rk, reliable=cfg.reliable or 1e-4,
+            apply_a_dot_hi=make_fused_normal(u, cfg.kappa, _hi_target(cfg)))
     res = cg(apply_normal, rhs, config=cfg.target, tol=cfg.tol,
              max_iter=cfg.max_iter,
-             apply_a_dot=make_fused_normal(u, cfg.kappa, cfg.target))
+             apply_a_dot=make_fused_normal(u, cfg.kappa,
+                                           _storage_target(cfg)))
     return res
 
 
@@ -108,26 +154,77 @@ def solve_batched(cfg: MilcConfig, u: Field, bs) -> BatchedCGResult:
             [apply_mdag(b) for b in bs.unstack()], name="rhs")
     else:
         rhs = BatchedField.stack([apply_mdag(b) for b in bs], name="rhs")
+    rk = _refine_k(cfg)
     return cg_batched(
-        make_fused_normal(u, cfg.kappa, cfg.target), rhs,
-        config=cfg.target, tol=cfg.tol, max_iter=cfg.max_iter)
+        make_fused_normal(u, cfg.kappa, _storage_target(cfg)), rhs,
+        config=cfg.target, tol=cfg.tol, max_iter=cfg.max_iter,
+        refine_every=rk,
+        apply_a_dot_hi=(make_fused_normal(u, cfg.kappa, _hi_target(cfg))
+                        if rk > 0 else None))
 
 
-def tune_solve_graphs(cfg: MilcConfig, u: Field, b: Field, **tune_kw):
+def solver_cost_model(cfg: MilcConfig, u: Field, b: Field, *,
+                      tol: float = 1e-6, cap: Optional[int] = None):
+    """The convergence-aware tuner cost for the fused normal-operator
+    graph: a callable mapping a candidate plan to its measured
+    iterations-to-tolerance (memoized per plan), so
+    :func:`repro.core.tune.autotune_graph` ranks candidates by
+    time-per-iteration × iterations — time-to-solution — instead of raw
+    launch time.  Dtype-policy candidates are measured through the
+    iterative-refinement solve (how they would actually deploy); full
+    precision candidates through plain CG."""
+    _, apply_mdag, _ = make_wilson_op(u, cfg.kappa, cfg.target)
+    rhs = apply_mdag(b)
+    cap = cap or cfg.max_iter
+    hi_op = make_fused_normal(u, cfg.kappa, _hi_target(cfg))
+    cache = {}
+
+    def iterations(plan):
+        tgt = dataclasses.replace(cfg.target, plan_policy=plan)
+        op = make_fused_normal(u, cfg.kappa, tgt)
+        if plan.dtypes:
+            res = cg_refined(op, rhs, config=cfg.target, tol=tol,
+                             max_iter=cap, refine_k=cfg.refine_k or 50,
+                             reliable=cfg.reliable or 1e-4,
+                             apply_a_dot_hi=hi_op)
+        else:
+            res = cg(None, rhs, config=cfg.target, tol=tol, max_iter=cap,
+                     apply_a_dot=op)
+        return float(max(int(res.iterations), 1))
+
+    def cost(plan):
+        if plan not in cache:
+            cache[plan] = iterations(plan)
+        return cache[plan]
+
+    return cost
+
+
+def tune_solve_graphs(cfg: MilcConfig, u: Field, b: Field,
+                      convergence_cost: bool = False, **tune_kw):
     """Autotune the two launch graphs a CG iteration runs — the fused
     normal-operator application (dslash+dslash+xpay/g5 + <p,Ap>) and the
     fused update chain (+ residual norm) — persisting the winners so a
     later ``cfg.target.plan_policy="tuned"`` solve loads them instead of
-    re-sweeping.  Returns {graph name: (plan, info)}."""
+    re-sweeping.  Returns {graph name: (plan, info)}.
+
+    ``convergence_cost=True`` ranks the normal-operator candidates by
+    measured time-to-solution (:func:`solver_cost_model`) rather than raw
+    launch time — required for a fair sweep once dtype-policy twins are in
+    the candidate set, since a cheaper-per-iteration plan may need more
+    iterations."""
     from repro.core import tune
 
     from .cg import cg_update_graph, wilson_normal_graph
 
     results = {}
     g = wilson_normal_graph(float(cfg.kappa))
+    op_kw = dict(tune_kw)
+    if convergence_cost and "cost_model" not in op_kw:
+        op_kw["cost_model"] = solver_cost_model(cfg, u, b)
     results[g.name] = tune.autotune_graph(
         g, {"p": b, "u": u}, config=cfg.target, outputs=("ap", "pap"),
-        **tune_kw)
+        **op_kw)
     g = cg_update_graph(b.ncomp)
     results[g.name] = tune.autotune_graph(
         g, {"x": b, "r": b, "p": b, "ap": b},

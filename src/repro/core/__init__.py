@@ -29,7 +29,7 @@ from .layout import (  # noqa: F401
     AOS, SOA, Layout, LayoutKind, aosoa, parse_layout, tileable_layout,
 )
 from .field import BatchedField, Field  # noqa: F401
-from .plan import LoweringPlan  # noqa: F401
+from .plan import DtypePolicy, LoweringPlan  # noqa: F401
 from .target import (  # noqa: F401
     TargetConfig,
     TargetKernel,

@@ -124,6 +124,7 @@ __all__ = [
     "BoundLaunch",
     "ReduceSpec",
     "fused_launch",
+    "kahan_fold",
     "reduce_combine",
     "stats",
     "reset_stats",
@@ -229,6 +230,39 @@ def reduce_combine(op: str) -> Callable:
     return ReduceSpec(op=op).combine
 
 
+def kahan_fold(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Compensated (Kahan) summation along ``axis``: a sequential
+    sum-plus-compensation scan whose error is O(eps), independent of the
+    element count — the fp32 stand-in for fp64 accumulation on targets
+    where jax x64 is disabled (``core.plan.resolve_accumulate``).  All
+    other axes are carried elementwise, so a (ncomp, nsites) fold costs
+    one scan of length nsites with (ncomp,) carries."""
+    x = jnp.moveaxis(x, axis, 0)
+
+    def step(carry, xi):
+        s, c = carry
+        y = xi - c
+        t = s + y
+        return (t, (t - s) - y), None
+
+    zero = jnp.zeros(x.shape[1:], x.dtype)
+    (s, _c), _ = jax.lax.scan(step, (zero, zero), x)
+    return s
+
+
+def _kahan_combine(acc: jax.Array, part: jax.Array) -> jax.Array:
+    """Kahan combine for a widened ``(..., ncomp, 2)`` accumulator —
+    column 0 the running sum, column 1 the running compensation — folding
+    a ``(..., ncomp, 1)`` partial in.  This is the cross-block combine of
+    a compensated fused reduction: per-block partials fold plainly in the
+    compute dtype, the grid-sequential accumulation across blocks carries
+    compensation (the hierarchical contract tests/test_dtype.py pins)."""
+    s, c = acc[..., 0:1], acc[..., 1:2]
+    y = part - c
+    t = s + y
+    return jnp.concatenate([t, (t - s) - y], axis=-1)
+
+
 def _hashable(v) -> bool:
     try:
         hash(v)
@@ -310,6 +344,32 @@ def _block_geometry(
             f"— slab rows would split short arrays; use "
             f"view='staged-nd' or a conforming sal")
     return hlats, native_in
+
+
+def _stage_in_cast(storage_dt, compute_dt, in_dtypes):
+    """The DtypePolicy stage-in cast over a launch's input arrays: floating
+    inputs truncate to the storage dtype (the fidelity cost — and the HBM
+    bytes cut — of narrow storage) and upcast to the effective compute
+    dtype for kernel arithmetic; non-float inputs pass through bitwise.
+    Returns None when the policy casts nothing (the bitwise default)."""
+    if storage_dt is None and compute_dt is None:
+        return None
+    cdt = compute_dt or storage_dt
+    floats = tuple(jnp.issubdtype(jnp.dtype(dt), jnp.floating)
+                   for dt in in_dtypes)
+
+    def cast(datas):
+        out = []
+        for d, isf in zip(datas, floats):
+            if isf:
+                if storage_dt is not None and d.dtype != storage_dt:
+                    d = d.astype(storage_dt)
+                if d.dtype != cdt:
+                    d = d.astype(cdt)
+            out.append(d)
+        return tuple(out)
+
+    return cast
 
 
 def _crop_ring(arr: jax.Array, r_from: int, r_to: int) -> jax.Array:
@@ -627,9 +687,13 @@ class LaunchGraph:
         nsites: int,
         outputs: Optional[Sequence[str]] = None,
         itemsize: int = 4,
+        dtypes=None,
     ) -> Dict[str, int]:
         """HBM traffic model of this chain, fused vs unfused (paper Fig. 4
-        counting: reads + writes, itemsize bytes per element).
+        counting: reads + writes, itemsize bytes per element).  ``dtypes``
+        (a :class:`~repro.core.plan.DtypePolicy`) re-prices every element
+        at the policy's *storage* dtype itemsize — the traffic a
+        mixed-precision plan actually contracts to move.
 
         unfused: every stage reads all its inputs from and writes all its
         outputs to HBM — including the per-site reduction input a separate
@@ -639,6 +703,8 @@ class LaunchGraph:
         Stencil halo re-reads are not modelled (halo/interior -> 0 with
         lattice size).  Scalars are ignored.
         """
+        if dtypes is not None and dtypes.storage:
+            itemsize = dtypes.storage_itemsize(itemsize)
         ncomp = dict(ins_ncomp)
         for vname, (nc, _) in self._produced().items():
             ncomp[vname] = 0 if nc is None else nc
@@ -889,6 +955,34 @@ class LaunchGraph:
                     stencil=stencil, lattice=lattice, halo=halo,
                     vmem_views=vmem_views)
 
+        # -- dtype policy: precision becomes a lowering decision ------------
+        # a config-level policy applies when the resolved plan carries none
+        # of its own (a tuned/explicit plan's policy wins); with no policy
+        # anywhere every path below is bitwise the pre-policy code
+        cfg_dtypes = getattr(config, "dtypes", None)
+        if cfg_dtypes and plan.dtypes is None:
+            plan = dataclasses.replace(plan, dtypes=cfg_dtypes)
+        storage_dt = compute_dt = None
+        acc_fold = {}  # red output -> (accumulate jnp dtype, compensated?)
+        if plan.dtypes:
+            pol = plan.dtypes.validate()
+            storage_dt = jnp.dtype(pol.storage) if pol.storage else None
+            compute_dt = jnp.dtype(pol.compute) if pol.compute else None
+            acc_name, acc_comp = plan_mod.resolve_accumulate(pol.accumulate)
+            red_ops = {o: s.op for o, s in self.reduce_specs().items()}
+            for o in outputs:
+                nc, dt = out_info[o]
+                # float-only rule: integer fields and max/integer
+                # reductions are bitwise exempt from the dtype axis
+                if not jnp.issubdtype(dt, jnp.floating):
+                    continue
+                if o in red_names:
+                    if acc_name and red_ops.get(o) == "sum":
+                        out_info[o] = (nc, jnp.dtype(acc_name))
+                        acc_fold[o] = (jnp.dtype(acc_name), acc_comp)
+                elif storage_dt is not None:
+                    out_info[o] = (nc, storage_dt)
+
         if stencil and plan.halo == "overlap":
             # split schedule: interior + boundary sub-launches (each a
             # plain halo="pre" launch through this very machinery)
@@ -960,6 +1054,9 @@ class LaunchGraph:
                 bz=plan.bz,
                 in_dtypes=tuple(jnp.dtype(ins[n].dtype)
                                 for n in ordered_ins),
+                storage_dt=storage_dt,
+                compute_dt=compute_dt,
+                acc_fold=acc_fold,
             )
             if stencil:  # only the stencil lowering is view-sensitive
                 build_kw["view"] = plan.view
@@ -973,12 +1070,18 @@ class LaunchGraph:
             _CACHE.move_to_end(key)
 
         datas = tuple(ins[n].data for n in ordered_ins)
+        # scalars join kernel arithmetic, so they cast to the effective
+        # compute dtype under a policy (float launches only)
+        scalar_dt = first.dtype
+        if (compute_dt is not None or storage_dt is not None) and \
+                jnp.issubdtype(jnp.dtype(first.dtype), jnp.floating):
+            scalar_dt = compute_dt or storage_dt
         if batch:
             # scalars may be per-request, shape (batch,) — e.g. the masked
             # CG's per-slot alpha/beta — or plain scalars broadcast to all
             svals = []
             for n in ordered_scalars:
-                v = jnp.asarray(scalars[n], first.dtype)
+                v = jnp.asarray(scalars[n], scalar_dt)
                 if v.ndim == 0:
                     v = jnp.broadcast_to(v, (batch,))
                 elif v.shape != (batch,):
@@ -989,16 +1092,22 @@ class LaunchGraph:
             svals = tuple(svals)
         else:
             svals = tuple(
-                jnp.asarray(scalars[n], first.dtype).reshape(1, 1)
+                jnp.asarray(scalars[n], scalar_dt).reshape(1, 1)
                 for n in ordered_scalars
             )
         results = fn(datas, svals)
         if tspan:
             # modeled HBM bytes (the fig3/fig4 counting) over the measured
-            # wall interval -> achieved GB/s + live roofline placement
+            # wall interval -> achieved GB/s + live roofline placement.
+            # Under a storage dtype policy the per-element byte count is
+            # the *storage* itemsize — that is the traffic the policy
+            # exists to cut — and the memo is keyed per policy so twin
+            # plans never share rows
             itemsize = jnp.dtype(first.dtype).itemsize
+            if plan.dtypes and plan.dtypes.storage:
+                itemsize = plan.dtypes.storage_itemsize(itemsize)
             bkey = (tuple((n, ins[n].ncomp) for n in ordered_ins), nsites,
-                    outputs, itemsize)
+                    outputs, itemsize, plan.dtypes)
             bm = self._bytes_memo.get(bkey)
             if bm is None:
                 bm = self._bytes_memo[bkey] = self.bytes_moved(
@@ -1185,20 +1294,39 @@ class LaunchGraph:
         by: int = 0,
         bz: int = 0,
         in_dtypes: Sequence[object] = (),
+        storage_dt=None,
+        compute_dt=None,
+        acc_fold: Optional[Mapping[str, Tuple[object, bool]]] = None,
     ) -> Callable:
-        # by/bz/in_dtypes only drive the stencil (_build_nd) lowering;
-        # plan.validate() rejects tiles on site-local chains, so they are
-        # always 0/() here — accepted so launch() can share one build_kw
-        del by, bz, in_dtypes
+        # by/bz only drive the stencil (_build_nd) lowering; plan.validate()
+        # rejects tiles on site-local chains, so they are always 0 here —
+        # accepted so launch() can share one build_kw
+        del by, bz
         run_stages = self._run_stages
         nsites = int(math.prod(lattice))
         red_spec = self.reduce_specs()
+        acc_fold = dict(acc_fold or {})
+        cast_in = _stage_in_cast(storage_dt, compute_dt, in_dtypes)
         if not in_batched:
             in_batched = (False,) * len(ordered_ins)
+
+        def red_partial(o, values, partials):
+            """One reduction output's per-launch partial.  Policy-
+            accumulated sums refold the (whole-lattice) source in the
+            accumulate dtype — Kahan when compensated — instead of casting
+            the compute-dtype fold after the fact."""
+            if o in acc_fold:
+                dt, comp = acc_fold[o]
+                src = values[red_spec[o].source].astype(dt)
+                return kahan_fold(src, axis=1) if comp \
+                    else jnp.sum(src, axis=1)
+            return partials[o].astype(out_info[o][1])
 
         if engine == "jnp":
 
             def one(datas, svals):
+                if cast_in is not None:
+                    datas = cast_in(datas)
                 values = {}
                 for n, (_, lay), d in zip(ordered_ins, in_meta, datas):
                     values[n] = lay.unpack(d)
@@ -1209,7 +1337,7 @@ class LaunchGraph:
                     out_layouts[o].pack(values[o].astype(out_info[o][1]))
                     for o in field_outputs
                 ]
-                res += [partials[o].astype(out_info[o][1])
+                res += [red_partial(o, values, partials)
                         for o in red_outputs]
                 return tuple(res)
 
@@ -1249,14 +1377,18 @@ class LaunchGraph:
         out_shapes, out_block_specs = build_out_specs(
             field_outputs, out_info, out_layouts, nsites, vvl
         )
+        # compensated (Kahan) sums widen their accumulator to (ncomp, 2):
+        # column 0 the running sum, column 1 the running compensation
+        red_widths = {o: 2 for o in red_outputs
+                      if o in acc_fold and acc_fold[o][1]}
         if rsplit > 1:
             in_specs = _split_specs(in_specs, per)
             out_block_specs = _split_specs(out_block_specs, per)
             red_shapes, red_block_specs = build_split_reduce_specs(
-                red_outputs, out_info, rsplit)
+                red_outputs, out_info, rsplit, red_widths)
         else:
             red_shapes, red_block_specs = build_reduce_specs(
-                red_outputs, out_info)
+                red_outputs, out_info, red_widths)
         if batch:
             in_specs = _batch_specs(in_specs, in_batched)
             in_specs += [pl.BlockSpec((1, 1, 1), lambda b, *_: (b, 0, 0))
@@ -1300,12 +1432,18 @@ class LaunchGraph:
                 part = partials[o][:, None].astype(out_info[o][1])
                 while part.ndim < len(r.shape):
                     part = part[None]
-                _accumulate(r, spec.combine, spec.init, part,
+                # compensated sums carry (sum, compensation) columns
+                # across blocks; per-block partials fold plainly in the
+                # compute dtype (the hierarchical Kahan contract)
+                comb = _kahan_combine if o in red_widths else spec.combine
+                _accumulate(r, comb, spec.init, part,
                             axes=(red_axis,))
 
         def fn(datas, svals):
             telemetry.inc("fuse.traces")
             telemetry.inc("fuse.pallas_calls")
+            if cast_in is not None:
+                datas = cast_in(datas)
             call = pl.pallas_call(
                 fused_kernel,
                 grid=grid,
@@ -1364,11 +1502,16 @@ class LaunchGraph:
         by: int = 0,
         bz: int = 0,
         in_dtypes: Sequence[object] = (),
+        storage_dt=None,
+        compute_dt=None,
+        acc_fold: Optional[Mapping[str, Tuple[object, bool]]] = None,
     ) -> Callable:
         run_nd = self._run_stages_nd
         site_ndim = len(lattice)
         site_dims = tuple(range(1, site_ndim + 1))
         red_spec = self.reduce_specs()
+        acc_fold = dict(acc_fold or {})
+        cast_in = _stage_in_cast(storage_dt, compute_dt, in_dtypes)
         if not in_batched:
             in_batched = (False,) * len(ordered_ins)
 
@@ -1380,9 +1523,23 @@ class LaunchGraph:
                 nd = halo_pad(nd, ring, site_dims)
             return nd
 
+        def red_partial_nd(o, values, partials):
+            """As _build_flat's red_partial: policy-accumulated sums refold
+            the ring-0 interior of the source in the accumulate dtype."""
+            if o in acc_fold:
+                dt, comp = acc_fold[o]
+                arr, r = values[red_spec[o].source]
+                a0 = _crop_ring(arr, r, 0)
+                a0 = a0.reshape(a0.shape[0], -1).astype(dt)
+                return kahan_fold(a0, axis=1) if comp \
+                    else jnp.sum(a0, axis=1)
+            return partials[o].astype(out_info[o][1])
+
         if engine == "jnp":
 
             def one(datas, svals):
+                if cast_in is not None:
+                    datas = cast_in(datas)
                 values = {}
                 for n, meta, lat, ring, d in zip(
                         ordered_ins, in_meta, in_lats, in_rings, datas):
@@ -1397,7 +1554,7 @@ class LaunchGraph:
                     ncomp, dtype = out_info[o]
                     res.append(out_layouts[o].pack(
                         a0.reshape(ncomp, -1).astype(dtype)))
-                res += [partials[o].astype(out_info[o][1])
+                res += [red_partial_nd(o, values, partials)
                         for o in red_outputs]
                 return tuple(res)
 
@@ -1485,14 +1642,17 @@ class LaunchGraph:
                 field_outputs, out_info, lattice, bx
             )
             native_out = [False] * len(field_outputs)
+        # compensated (Kahan) sums widen their accumulator to (ncomp, 2)
+        red_widths = {o: 2 for o in red_outputs
+                      if o in acc_fold and acc_fold[o][1]}
         if rsplit > 1:
             in_specs = _split_specs(in_specs, per)
             out_block_specs = _split_specs(out_block_specs, per)
             red_shapes, red_block_specs = build_split_reduce_specs(
-                red_outputs, out_info, rsplit)
+                red_outputs, out_info, rsplit, red_widths)
         else:
             red_shapes, red_block_specs = build_reduce_specs(
-                red_outputs, out_info)
+                red_outputs, out_info, red_widths)
         if batch:
             in_specs = _batch_specs(in_specs, in_batched)
             in_specs += [pl.BlockSpec((1, 1, 1), lambda b, *_: (b, 0, 0))
@@ -1555,7 +1715,8 @@ class LaunchGraph:
                 part = partials[o][:, None].astype(out_info[o][1])
                 while part.ndim < len(r.shape):
                     part = part[None]
-                _accumulate(r, spec.combine, spec.init, part, axes=acc_axes)
+                comb = _kahan_combine if o in red_widths else spec.combine
+                _accumulate(r, comb, spec.init, part, axes=acc_axes)
 
         def fused_kernel(*refs):
             in_refs = refs[:nin]
@@ -1712,6 +1873,8 @@ class LaunchGraph:
         def fn(datas, svals):
             telemetry.inc("fuse.traces")
             telemetry.inc("fuse.pallas_calls")
+            if cast_in is not None:
+                datas = cast_in(datas)
             staged = []
             for n, meta, lat, ring, nat, bat, d in zip(
                     ordered_ins, in_meta, in_lats, in_rings, native_in,
@@ -1736,6 +1899,13 @@ class LaunchGraph:
                 )
                 dts = in_dtypes or tuple(
                     jnp.float32 for _ in range(nin))
+                if cast_in is not None:
+                    # staged float inputs were cast to the effective
+                    # compute dtype, so the DMA window slots match it
+                    cdt = compute_dt or storage_dt
+                    dts = tuple(
+                        cdt if jnp.issubdtype(jnp.dtype(dt), jnp.floating)
+                        else dt for dt in dts)
                 call_kw["scratch_shapes"] = (
                     [pltpu.VMEM((2,) + w, jnp.dtype(dt))
                      for w, dt in zip(win_shapes, dts)]

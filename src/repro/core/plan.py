@@ -63,7 +63,10 @@ from typing import Optional, Sequence, Tuple
 from .layout import Layout, LayoutKind
 
 __all__ = [
+    "DtypePolicy",
     "LoweringPlan",
+    "dtype_itemsize",
+    "resolve_accumulate",
     "divisors",
     "choose_vvl",
     "choose_slab",
@@ -95,6 +98,106 @@ VIEW_STAGED_ND = "staged-nd"
 # keep the exact pre-view-knob behavior; requesting the native-AoSoA stencil
 # lowering is always an explicit view=VIEW_BLOCK
 VIEW_AUTO = "auto"
+
+
+# -- dtype policy (mixed-precision lowering axis) ------------------------------
+
+# itemsizes for the dtype names a policy may carry, kept as a plain table so
+# plan construction / budget estimation never import jax or numpy
+_DTYPE_ITEMSIZE = {
+    "float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
+    "int64": 8, "int32": 4, "int16": 2, "int8": 1,
+}
+# compact describe() abbreviations — persisted timing labels use these
+_DTYPE_SHORT = {
+    "float64": "f64", "float32": "f32", "float16": "f16", "bfloat16": "bf16",
+    "compensated": "kf32",
+}
+# the accumulate slot additionally admits the explicit compensated request
+ACCUM_COMPENSATED = "compensated"
+
+
+def dtype_itemsize(name: str, fallback: int = 4) -> int:
+    """Itemsize in bytes of a policy dtype name ('' -> ``fallback``)."""
+    return _DTYPE_ITEMSIZE.get(name, fallback) if name else fallback
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """The precision triple of a launch — storage, compute, accumulate —
+    as a lowering decision (ROADMAP: mixed-precision solvers as a tuned
+    plan axis).  Every slot is a dtype *name* ('' = inherit):
+
+      storage      dtype field data is staged in and field outputs are
+                   written in ('' = the caller's input dtype).  This is
+                   what cuts HBM bytes: bf16 storage nearly halves the
+                   traffic of every memory-bound kernel.
+      compute      dtype kernel arithmetic runs in ('' = the input/storage
+                   dtype).  Inputs are upcast on stage-in, so bf16-stored
+                   fields can still multiply in fp32.
+      accumulate   dtype terminal sum reductions (fused ReduceSpec sums,
+                   rsplit stage-1 partials, standalone target_sum)
+                   accumulate in.  '' = the pre-policy behavior (the
+                   output dtype).  'float64' requests fp64 accumulation
+                   and *degrades to compensated (Kahan) fp32* when the
+                   runtime has no fp64 (jax x64 disabled) — see
+                   :func:`resolve_accumulate`.  'compensated' requests
+                   Kahan fp32 explicitly.  Max and integer reductions
+                   ignore this slot and stay bitwise exact.
+
+    The empty policy (all '') — and a plan with ``dtypes=None`` — lowers
+    bit-identically to the pre-policy code on every path."""
+
+    storage: str = ""
+    compute: str = ""
+    accumulate: str = ""
+
+    def __bool__(self) -> bool:
+        return bool(self.storage or self.compute or self.accumulate)
+
+    def tag(self) -> str:
+        """Compact label component, e.g. ``bf16:f32:f64``."""
+        return ":".join(_DTYPE_SHORT.get(s, s) if s else "-"
+                        for s in (self.storage, self.compute, self.accumulate))
+
+    def storage_itemsize(self, fallback: int) -> int:
+        return dtype_itemsize(self.storage, fallback)
+
+    def validate(self) -> "DtypePolicy":
+        for slot, name in (("storage", self.storage),
+                           ("compute", self.compute)):
+            if name and name not in _DTYPE_ITEMSIZE:
+                raise ValueError(
+                    f"DtypePolicy.{slot}={name!r} is not a known dtype "
+                    f"name; use one of {sorted(_DTYPE_ITEMSIZE)}")
+        acc = self.accumulate
+        if acc and acc != ACCUM_COMPENSATED and (
+                acc not in _DTYPE_ITEMSIZE or not acc.startswith("float")):
+            raise ValueError(
+                f"DtypePolicy.accumulate={acc!r} must be '', a float dtype "
+                f"name, or {ACCUM_COMPENSATED!r}")
+        return self
+
+
+def resolve_accumulate(name: str):
+    """Resolve an accumulate request to ``(dtype_name, compensated)``.
+
+    'compensated' -> ('float32', True).  'float64' stays fp64 only when the
+    runtime actually has it (``jax.config.jax_enable_x64``); otherwise jnp
+    would *silently truncate* the accumulator to fp32, so the request
+    degrades to compensated (Kahan) fp32 — strictly more accurate than the
+    silent truncation and the documented contract on fp64-less targets.
+    '' and any other float name pass through uncompensated."""
+    if not name:
+        return "", False
+    if name == ACCUM_COMPENSATED:
+        return "float32", True
+    if name == "float64":
+        import jax
+
+        if not jax.config.jax_enable_x64:
+            return "float32", True
+    return name, False
 
 
 # -- divisor enumeration (memoized candidate generators) -----------------------
@@ -263,9 +366,19 @@ def estimate_vmem_bytes(
     for the launch) plus one output slab per program.  Tiled plans hold two
     halo'd tile windows per input (the double-buffered DMA slots pipelining
     tile t+1 against tile t) plus one output tile — which is what bounds a
-    shard by the tile, not the lattice."""
+    shard by the tile, not the lattice.
+
+    A plan carrying a storage :class:`DtypePolicy` is priced at the
+    *storage* itemsize (fields are staged and written in the storage
+    dtype), so bf16 candidates are budgeted against their real footprint
+    rather than the caller's fp32 one."""
     bx = plan.bx or lattice[0]
     tiled = bool(plan.by or plan.bz)
+    if plan.dtypes is not None and plan.dtypes.storage:
+        in_views = [(nc, ring, plan.dtypes.storage_itemsize(isz))
+                    for nc, ring, isz in in_views]
+        out_views = [(nc, plan.dtypes.storage_itemsize(isz))
+                     for nc, isz in out_views]
     total = 0
     for ncomp, ring, isz in in_views:
         if tiled:
@@ -292,15 +405,17 @@ def choose_tiles(
     in_views: Sequence[Tuple[int, int, int]],
     out_views: Sequence[Tuple[int, int]],
     vmem_bytes: int,
+    dtypes: Optional["DtypePolicy"] = None,
 ) -> Tuple[int, int]:
     """Pick the largest (by, bz) tile whose estimated footprint fits the
     byte budget, preferring to keep the minor (z) axis whole — tile windows
     stay contiguous along the fast axis, which is what the DMA engine
     wants.  Returns (0, 0) when untiled whole-staging already fits, and the
-    finest legal tile (best effort) when even it exceeds the budget."""
+    finest legal tile (best effort) when even it exceeds the budget.
+    ``dtypes`` prices the probe at the policy's storage itemsize."""
 
     def fp(by, bz):
-        probe = LoweringPlan("pallas", bx=bx, by=by, bz=bz)
+        probe = LoweringPlan("pallas", bx=bx, by=by, bz=bz, dtypes=dtypes)
         return estimate_vmem_bytes(
             probe, lattice=lattice, in_views=in_views, out_views=out_views)
 
@@ -373,6 +488,13 @@ class LoweringPlan:
     # contract as rsplit), exact for max and integer sums.
     by: int = 0
     bz: int = 0
+    # mixed-precision dtype policy (storage/compute/accumulate — see
+    # :class:`DtypePolicy`).  None = the pre-policy lowering, bit-identical
+    # on every engine/halo/layout path; a set policy is a tuned/explicit
+    # opt-in whose field outputs are tolerance-equal (accuracy-gated by the
+    # tuner) and whose max/integer reductions stay bitwise exact.  Persisted
+    # plans carry it, hence the tune-table schema_version 3 -> 4 bump.
+    dtypes: Optional[DtypePolicy] = None
 
     # -- serialization (core.tune persists plans as JSON) ----------------------
 
@@ -382,7 +504,12 @@ class LoweringPlan:
     @classmethod
     def from_json(cls, d: dict) -> "LoweringPlan":
         known = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in known})
+        d = {k: v for k, v in d.items() if k in known}
+        if isinstance(d.get("dtypes"), dict):
+            d["dtypes"] = DtypePolicy(**{
+                k: v for k, v in d["dtypes"].items()
+                if k in ("storage", "compute", "accumulate")})
+        return cls(**d)
 
     def describe(self, footprint: Optional[int] = None) -> str:
         """Short human/table label: the knob that distinguishes candidates.
@@ -390,6 +517,11 @@ class LoweringPlan:
         estimated per-program VMEM footprint — the tuner's over-budget skip
         log and the benchmarks pass it; plain labels stay stable."""
         suffix = "/overlap" if self.halo == "overlap" else ""
+        # the dtype policy is named whenever it is in play: a tuned
+        # mixed-precision winner must be identifiable in persisted timing
+        # labels; policy-free labels stay byte-stable
+        if self.dtypes:
+            suffix += f"/dt={self.dtypes.tag()}"
         fp = f" [~{footprint / 1024:.0f}KiB/prog]" if footprint else ""
         if self.engine != "pallas":
             return self.engine + suffix + fp
@@ -441,6 +573,8 @@ class LoweringPlan:
             raise ValueError(
                 f"tile extents must be >= 0 (0 = whole axis), got "
                 f"by={self.by} bz={self.bz}")
+        if self.dtypes is not None:
+            self.dtypes.validate()
         if self.engine == "jnp":
             if self.rsplit > 1:
                 raise ValueError(
@@ -707,6 +841,21 @@ def _spread(values, k: int):
     return [values[i] for i in sorted(idx)]
 
 
+def _dtype_twin_policies(in_dtype: Optional[str]):
+    """Dtype-policy twins worth sweeping for a launch whose external float
+    inputs share ``in_dtype``: narrower storage with full-precision compute
+    and fp64 (or compensated — resolve_accumulate degrades at runtime)
+    accumulation.  The tuner rejects any twin that misses its accuracy
+    gate, so the sweep proposes and the gate disposes."""
+    if in_dtype == "float32":
+        return [DtypePolicy(storage="bfloat16", compute="float32",
+                            accumulate="float64")]
+    if in_dtype == "float64":
+        return [DtypePolicy(storage="float32", compute="float32",
+                            accumulate="float64")]
+    return []
+
+
 def candidate_plans(
     config,
     *,
@@ -721,6 +870,7 @@ def candidate_plans(
     batch: int = 0,
     reduce: bool = False,
     vmem_views=None,
+    in_dtype: Optional[str] = None,
 ) -> Tuple[LoweringPlan, ...]:
     """Enumerate valid plans for the autotuner sweep, deterministically.
 
@@ -782,7 +932,16 @@ def candidate_plans(
     estimated per-program footprint exceeds the budget is dropped and
     logged with the estimate; if *no* untiled slab fits, the set degrades
     to tiled-only candidates — the budget-exceeding lattice still gets a
-    sweepable, launchable plan set."""
+    sweepable, launchable plan set.
+
+    ``in_dtype`` (the shared dtype of the launch's external float inputs,
+    as a string) additionally yields dtype-policy twins off the default
+    geometry (:func:`_dtype_twin_policies`): bf16 storage for fp32 inputs,
+    fp32 storage for fp64 inputs, always with full-precision compute and
+    fp64/compensated accumulation.  These are the first candidates whose
+    *field outputs* are tolerance- rather than bitwise-equal, so the tuner
+    pairs them with a hard accuracy gate (core.tune) and rejects any twin
+    that drifts past it — rejected twins are logged and never persisted."""
     default = default_plan(config, nsites=nsites, layouts=layouts,
                            stencil=stencil, lattice=lattice, halo=halo,
                            vmem_views=vmem_views)
@@ -846,8 +1005,16 @@ def candidate_plans(
                     t1, bz=divisors(lattice[2])[-2]))
         tile_twins = [t for t in tile_twins
                       if t != default and not over_budget(t)]
+        # dtype-policy twins off the default geometry: narrower storage,
+        # full-precision compute, fp64/compensated accumulate.  Budget
+        # pruning prices them at the storage itemsize (estimate_vmem_bytes
+        # is policy-aware), and the tuner's accuracy gate rejects any twin
+        # whose results drift past the rel-L2 budget.
+        dtype_twins = [dataclasses.replace(default, dtypes=p)
+                       for p in _dtype_twin_policies(in_dtype)]
+        dtype_twins = [t for t in dtype_twins if not over_budget(t)]
         n_twins = ((2 if with_overlap else 0) + (2 if block_view else 0)
-                   + len(red_twins) + len(tile_twins))
+                   + len(red_twins) + len(tile_twins) + len(dtype_twins))
         k = max(1, max_candidates - n_twins)
         spread_bxs = _spread(bxs, k)
         cands = [dataclasses.replace(untiled_default, bx=bx)
@@ -859,7 +1026,7 @@ def candidate_plans(
         if block_view:
             cands += [dataclasses.replace(default, bx=bx, view=VIEW_BLOCK)
                       for bx in twin_bxs]
-        cands += red_twins + tile_twins
+        cands += red_twins + tile_twins + dtype_twins
     else:
         align = sal_alignment(layouts)
         cap = 8 * max(int(config.vvl), 128)
@@ -872,10 +1039,12 @@ def candidate_plans(
                 base = dataclasses.replace(default, vvl=vs[0])
             red_twins = [dataclasses.replace(base, rsplit=r)
                          for r in _rsplit_factors(nsites // base.vvl)]
-        k = max(1, max_candidates - len(red_twins))
+        dtype_twins = [dataclasses.replace(default, dtypes=p)
+                       for p in _dtype_twin_policies(in_dtype)]
+        k = max(1, max_candidates - len(red_twins) - len(dtype_twins))
         cands = [dataclasses.replace(default, vvl=v)
                  for v in _spread(vs, k)]
-        cands += red_twins
+        cands += red_twins + dtype_twins
     out = [default]
     for c in cands:
         if c not in out:

@@ -26,11 +26,12 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .field import Field  # noqa: F401  (re-exported reduction operand type)
-from .fuse import ReduceSpec
-from .plan import plan_for_launch
+from .fuse import ReduceSpec, kahan_fold
+from .plan import plan_for_launch, resolve_accumulate
 from .target import TargetConfig
 
 __all__ = ["target_sum", "target_max"]
@@ -43,10 +44,24 @@ def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
     # lowering decisions (vvl conformance, interpret fallback, plan policy)
     # come from the planning layer, like every other launch
     plan = plan_for_launch(config, field.nsites, [field.layout])
+    # Accumulate-dtype policy: applies only to floating-point sums (max and
+    # integer reductions stay bitwise-unchanged by the dtype axis).  The
+    # plan's own policy wins over the config-level one, like core.fuse.
+    acc_dt, comp = None, False
+    pol = plan.dtypes or getattr(config, "dtypes", None)
+    if (pol and pol.accumulate and op == "sum"
+            and jnp.issubdtype(jnp.dtype(field.dtype), jnp.floating)):
+        acc_name, comp = resolve_accumulate(pol.accumulate)
+        if acc_name:
+            acc_dt = jnp.dtype(acc_name)
     if plan.engine == "jnp":
         # batched: (batch, ncomp, nsites) -> (batch, ncomp); the per-row
         # fold is the same whole-lattice fold as the single-Field path
-        return spec.fold(field.canonical(), axis=-1)
+        x = field.canonical()
+        if acc_dt is not None:
+            x = x.astype(acc_dt)
+            return kahan_fold(x, axis=-1) if comp else spec.fold(x, axis=-1)
+        return spec.fold(x, axis=-1)
 
     vvl, rsplit = plan.vvl, plan.rsplit
     nsites, ncomp = field.nsites, field.ncomp
@@ -66,18 +81,26 @@ def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
         in_map = bmap
         out_blk, out_map = (ncomp, vvl), lambda i: (0, 0)
         acc_shape = (ncomp, vvl)
+    out_dt = acc_dt if acc_dt is not None else field.dtype
+    if comp:
+        # compensated (Kahan) accumulation: widen with a trailing
+        # (sum, compensation) axis carried across grid steps
+        acc_shape = acc_shape + (2,)
+        out_blk = out_blk + (2,)
+        _m0 = out_map
+        out_map = lambda *idx, _m=_m0: tuple(_m(*idx)) + (0,)  # noqa: E731
     if batch:
         grid = ((batch, rsplit, per) if rsplit > 1 else (batch, nblocks))
         in_spec = pl.BlockSpec(
             (1,) + blk, lambda b, *idx, _m=in_map: (b,) + tuple(_m(*idx)))
         out_spec = pl.BlockSpec(
             (1,) + out_blk, lambda b, *idx, _m=out_map: (b,) + tuple(_m(*idx)))
-        out_shape = jax.ShapeDtypeStruct((batch,) + acc_shape, field.dtype)
+        out_shape = jax.ShapeDtypeStruct((batch,) + acc_shape, out_dt)
     else:
         grid = (rsplit, per) if rsplit > 1 else (nblocks,)
         in_spec = pl.BlockSpec(blk, in_map)
         out_spec = pl.BlockSpec(out_blk, out_map)
-        out_shape = jax.ShapeDtypeStruct(acc_shape, field.dtype)
+        out_shape = jax.ShapeDtypeStruct(acc_shape, out_dt)
     blk_axis = len(grid) - 1
 
     def kern(x_ref, acc_ref):
@@ -87,9 +110,20 @@ def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
 
         x = x_ref[...][0] if batch else x_ref[...]
         chunk = layout.block_to_canonical(x, ncomp, vvl)
-        while chunk.ndim < len(acc_ref.shape):
-            chunk = chunk[None]
-        acc_ref[...] = spec.combine(acc_ref[...], chunk)
+        if acc_dt is not None:
+            chunk = chunk.astype(acc_dt)
+        if comp:
+            while chunk.ndim < len(acc_ref.shape) - 1:
+                chunk = chunk[None]
+            acc = acc_ref[...]
+            s, c = acc[..., 0], acc[..., 1]
+            y = chunk - c
+            t = s + y
+            acc_ref[...] = jnp.stack([t, (t - s) - y], axis=-1)
+        else:
+            while chunk.ndim < len(acc_ref.shape):
+                chunk = chunk[None]
+            acc_ref[...] = spec.combine(acc_ref[...], chunk)
 
     partial = pl.pallas_call(
         kern,
@@ -100,7 +134,12 @@ def _reduce(field, config: Optional[TargetConfig], op: str) -> jax.Array:
         interpret=plan.interpret,
         name=f"target_{op}",
     )(field.data)
-    folded = spec.fold(partial, axis=-1)
+    if comp:
+        # drop the compensation column, then fold the vvl lanes with the
+        # same compensated summation used across grid steps
+        folded = kahan_fold(partial[..., 0], axis=-1)
+    else:
+        folded = spec.fold(partial, axis=-1)
     if rsplit > 1:  # stage-2 combine over the split-segment rows
         folded = spec.combine_partials(folded, axis=-2)
     return folded

@@ -52,6 +52,7 @@ from jax.experimental import pallas as pl
 from .field import Field
 from .layout import Layout
 from .plan import (  # noqa: F401  (re-exported: the planning layer owns them)
+    DtypePolicy,
     LoweringPlan,
     choose_slab,
     choose_vvl,
@@ -61,6 +62,7 @@ from .plan import (  # noqa: F401  (re-exported: the planning layer owns them)
 
 __all__ = [
     "TargetConfig",
+    "DtypePolicy",
     "kernel",
     "launch",
     "choose_vvl",
@@ -103,6 +105,12 @@ class TargetConfig:
                  telemetry.enable()); True/False force it for launches made
                  with this config.  Spans are host-side only — flipping this
                  never changes a single bit of any launch output.
+    dtypes       mixed-precision DtypePolicy (storage/compute/accumulate —
+                 core.plan.DtypePolicy) applied to every launch made with
+                 this config whose resolved plan does not already carry its
+                 own policy (a tuned/explicit plan's policy wins).  None —
+                 the default — changes nothing: lowering stays bit-identical
+                 to the pre-policy code.
     """
 
     engine: str = "jnp"
@@ -111,6 +119,7 @@ class TargetConfig:
     plan_policy: Union[str, LoweringPlan] = "default"
     vmem_bytes: Optional[int] = None
     telemetry: Optional[bool] = None
+    dtypes: Optional[DtypePolicy] = None
 
     def resolved_interpret(self) -> bool:
         if self.interpret is not None:
@@ -210,18 +219,23 @@ def build_block_out_specs(
 def build_reduce_specs(
     out_names: Sequence[str],
     out_specs: Mapping[str, Tuple[int, object]],
+    widths: Optional[Mapping[str, int]] = None,
 ) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
     """(out_shape, BlockSpec) per terminal-reduction accumulator: a single
-    (ncomp, 1) partial buffer with a constant index map, revisited by every
-    program (TPU pallas grids execute sequentially per core, so cross-block
-    read-modify-write accumulation is well defined — same idiom as
-    core.reduce)."""
+    (ncomp, width) partial buffer with a constant index map, revisited by
+    every program (TPU pallas grids execute sequentially per core, so
+    cross-block read-modify-write accumulation is well defined — same idiom
+    as core.reduce).  ``widths`` widens a buffer's trailing axis (default
+    1, the pre-policy shape); compensated (Kahan) accumulation under a
+    DtypePolicy uses width 2 — column 0 the running sum, column 1 the
+    running compensation."""
     shapes, specs = [], []
     for k in out_names:
         ncomp, dtype = out_specs[k]
-        shapes.append(jax.ShapeDtypeStruct((ncomp, 1), dtype))
+        w = (widths or {}).get(k, 1)
+        shapes.append(jax.ShapeDtypeStruct((ncomp, w), dtype))
         # variadic: revisited by every program of the (possibly tiled) grid
-        specs.append(pl.BlockSpec((ncomp, 1), lambda *_i: (0, 0)))
+        specs.append(pl.BlockSpec((ncomp, w), lambda *_i: (0, 0)))
     return shapes, specs
 
 
@@ -229,20 +243,23 @@ def build_split_reduce_specs(
     out_names: Sequence[str],
     out_specs: Mapping[str, Tuple[int, object]],
     rsplit: int,
+    widths: Optional[Mapping[str, int]] = None,
 ) -> Tuple[List[jax.ShapeDtypeStruct], List[pl.BlockSpec]]:
     """(out_shape, BlockSpec) per terminal-reduction accumulator under a
     split-reduction plan (``LoweringPlan.rsplit > 1``): a ``(rsplit,
-    ncomp, 1)`` stage-1 partial buffer whose rows are selected by the
+    ncomp, width)`` stage-1 partial buffer whose rows are selected by the
     split grid axis — each of the ``rsplit`` grid segments accumulates
     its own row, and the tiny stage-2 combine folds the rows in segment
-    order after the call (core.fuse)."""
+    order after the call (core.fuse).  ``widths`` as in
+    :func:`build_reduce_specs` (compensated accumulation widens to 2)."""
     shapes, specs = [], []
     for k in out_names:
         ncomp, dtype = out_specs[k]
-        shapes.append(jax.ShapeDtypeStruct((rsplit, ncomp, 1), dtype))
+        w = (widths or {}).get(k, 1)
+        shapes.append(jax.ShapeDtypeStruct((rsplit, ncomp, w), dtype))
         # variadic beyond the split axis: the per-segment site axis may
         # carry trailing tile axes; the buffer row follows the segment only
-        specs.append(pl.BlockSpec((1, ncomp, 1), lambda s, *_i: (s, 0, 0)))
+        specs.append(pl.BlockSpec((1, ncomp, w), lambda s, *_i: (s, 0, 0)))
     return shapes, specs
 
 

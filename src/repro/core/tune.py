@@ -30,11 +30,12 @@ Usage::
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import logging
 import os
 import time
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +68,11 @@ ENV_VAR = "TARGETDP_TUNE_PATH"
 # persisted plan JSON must name the axis (a version-2 entry predates the
 # tolerance-vs-bitwise reduction contract), so version-2 tables load as a
 # clean miss — every lookup misses, the tuner re-sweeps and re-stamps.
-SCHEMA_VERSION = 3
+# bumped to 4 when plans gained the mixed-precision ``dtypes`` policy
+# (storage/compute/accumulate): a version-3 entry predates the accuracy
+# gate, so version-3 tables load as a clean miss and the tuner re-sweeps
+# (now with dtype-policy twins) rather than trusting an un-gated winner.
+SCHEMA_VERSION = 4
 
 log = logging.getLogger(__name__)
 
@@ -333,11 +338,84 @@ def plan_candidates_for(
                   for n, f in ins.items()),
             tuple(out_views),
         )
+    in_dtype = str(jnp.dtype(next(iter(ins.values())).dtype))
     return plan_mod.candidate_plans(
         config, nsites=nsites, layouts=layouts, stencil=graph.has_stencil,
         lattice=lattice, halo=halo, max_candidates=max_candidates,
         block_view=block_view_for(graph, ins, outputs, halo), batch=batch,
-        reduce=bool(graph._reduce_outputs()), vmem_views=vmem_views)
+        reduce=bool(graph._reduce_outputs()), vmem_views=vmem_views,
+        in_dtype=in_dtype)
+
+
+def _accuracy_gate_for(policy) -> float:
+    """Default hard accuracy gate (max rel-L2 vs the fp64-accumulate
+    baseline) for a dtype-policy candidate, scaled to how much precision
+    its storage dtype throws away: half-precision storage gets a loose
+    1e-2 gate, fp32 narrowing 1e-5, anything else (accumulate-only
+    policies must be a strict improvement) 1e-6."""
+    if policy.storage in ("bfloat16", "float16"):
+        return 1e-2
+    if policy.storage == "float32":
+        return 1e-5
+    return 1e-6
+
+
+def _rel_l2(out, ref) -> float:
+    """Relative L2 distance between two launch-output pytrees, pooled over
+    every floating-point leaf (fields and reduction scalars alike)."""
+    num = den = 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        b = jnp.asarray(b)
+        if not jnp.issubdtype(b.dtype, jnp.floating):
+            continue
+        a32 = jnp.asarray(a).astype(jnp.float32)
+        b32 = b.astype(jnp.float32)
+        num += float(jnp.sum((a32 - b32) ** 2))
+        den += float(jnp.sum(b32 ** 2))
+    return (num / den) ** 0.5 if den > 0.0 else 0.0
+
+
+def _gate_policy_candidates(graph, ins, launch_kw, cands, default,
+                            accuracy_gate):
+    """The hard accuracy constraint: every dtype-policy candidate is probed
+    once against the fp64-accumulate baseline (the default plan with
+    ``accumulate="float64"`` — resolved to compensated fp32 where fp64 is
+    unavailable) and rejected — logged, never timed, never persisted —
+    unless its pooled rel-L2 stays under the gate.  Returns
+    (surviving candidates, rejected {plan: reason})."""
+    pol_cands = [c for c in cands if c.dtypes]
+    if not pol_cands:
+        return cands, {}
+    gname = getattr(graph, "name", "?")
+    base = dataclasses.replace(
+        default, dtypes=plan_mod.DtypePolicy(accumulate="float64"))
+    with telemetry.span("tune/accuracy_baseline", graph=gname,
+                        plan=base.describe()):
+        ref = graph.launch(ins, plan=base, **launch_kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(ref))
+    rejected: Dict[LoweringPlan, str] = {}
+    for cand in pol_cands:
+        gate = (accuracy_gate if accuracy_gate is not None
+                else _accuracy_gate_for(cand.dtypes))
+        try:
+            out = graph.launch(ins, plan=cand, **launch_kw)
+            err = _rel_l2(out, ref)
+        except Exception as e:  # noqa: BLE001 - any lowering failure
+            rejected[cand] = f"accuracy probe raised: {e!r}"
+            log.warning("tune accuracy gate: probe for %s failed on graph "
+                        "%r: %r", cand.describe(), gname, e)
+            telemetry.event("tune/accuracy_rejected", graph=gname,
+                            plan=cand.describe(), reason=repr(e))
+            continue
+        if err > gate:
+            rejected[cand] = f"rel_l2 {err:.3e} > gate {gate:.1e}"
+            log.warning("tune accuracy gate: rejecting %s on graph %r: "
+                        "rel_l2 %.3e exceeds gate %.1e",
+                        cand.describe(), gname, err, gate)
+            telemetry.event("tune/accuracy_rejected", graph=gname,
+                            plan=cand.describe(), rel_l2=err, gate=gate)
+    return [c for c in cands if c not in rejected], rejected
 
 
 def autotune_graph(
@@ -356,6 +434,8 @@ def autotune_graph(
     force: bool = False,
     save: bool = True,
     path: Optional[str] = None,
+    accuracy_gate: Optional[float] = None,
+    cost_model: Optional[Callable[[LoweringPlan], float]] = None,
 ) -> Tuple[LoweringPlan, dict]:
     """Sweep candidate plans for one LaunchGraph launch and persist the
     winner.  Returns ``(plan, info)`` where info holds the key, whether the
@@ -371,7 +451,19 @@ def autotune_graph(
     margin, so timing noise cannot persist a plan that is merely noisily
     fast.  Candidates whose lowering fails (e.g. over the VMEM budget) are
     skipped and recorded — logged in ``info["failed"]`` and the table
-    entry, not silently dropped."""
+    entry, not silently dropped.
+
+    Mixed precision: dtype-policy candidates face a *hard accuracy
+    constraint* before they are ever timed — each is probed once against
+    the fp64-accumulate baseline and rejected (logged to telemetry as
+    ``tune/accuracy_rejected``, reported in ``info["rejected"]`` and the
+    table entry meta, never persisted as a winner) unless its pooled
+    rel-L2 stays under the gate.  ``accuracy_gate`` overrides the
+    per-policy default (bf16/f16 storage 1e-2, fp32 storage 1e-5, else
+    1e-6).  ``cost_model`` maps a candidate plan to a cost *multiplier*
+    applied on top of its measured launch time — for solver graphs pass
+    measured iterations-to-tolerance per policy so ranking (and the
+    min_gain hysteresis) compares time-to-solution, not raw launch time."""
     lattice = _interior_lattice(graph, ins, outputs, halo)
     key = graph.plan_key(ins, config=config, outputs=outputs, halo=halo,
                          lattice=lattice)
@@ -388,26 +480,35 @@ def autotune_graph(
     launch_kw = dict(config=config, outputs=outputs, scalars=scalars,
                      out_layouts=out_layouts, halo=halo)
     telemetry.inc("tune.tunes")
+    cands, rejected = _gate_policy_candidates(
+        graph, ins, launch_kw, cands, default, accuracy_gate)
     times, failed = _sweep(graph, ins, launch_kw, cands, iters, warmup)
     if not times:
         raise RuntimeError(
             f"every candidate plan failed for {getattr(graph, 'name', '?')}: "
             f"{ {c.describe(): e for c, e in failed.items()} }")
-    best = min(times, key=lambda c: (times[c], c.describe()))
+    # convergence-aware ranking: a cost multiplier (e.g. measured
+    # iterations-to-tolerance for a solver graph) scales each candidate's
+    # launch time into an effective time-to-solution
+    cost = (lambda c: times[c] * float(cost_model(c))) if cost_model \
+        else (lambda c: times[c])
+    best = min(times, key=lambda c: (cost(c), c.describe()))
     # hysteresis: keep the deterministic default unless the winner is
     # *measurably* better — noise must not persist an unproven plan
-    if default in times and times[best] > times[default] * (1.0 - min_gain):
+    if default in times and cost(best) > cost(default) * (1.0 - min_gain):
         best = default
 
     timings_us = {c.describe(): t * 1e6 for c, t in times.items()}
     failed_desc = {c.describe(): e for c, e in failed.items()}
+    rejected_desc = {c.describe(): e for c, e in rejected.items()}
     record(key, best, timings_us=timings_us, default=default,
            meta={"graph": getattr(graph, "name", "?"),
                  "backend": jax.default_backend(),
                  "lattice": list(lattice),
                  "vmem_bytes": plan_mod.resolved_vmem_bytes(config),
-                 "failed": failed_desc},
+                 "failed": failed_desc,
+                 "rejected": rejected_desc},
            save=save, path=path)
     return best, {"key": key, "cached": False, "timings_us": timings_us,
-                  "failed": failed_desc, "default": default,
-                  "best_us": times[best] * 1e6}
+                  "failed": failed_desc, "rejected": rejected_desc,
+                  "default": default, "best_us": times[best] * 1e6}

@@ -54,18 +54,24 @@ class _Bucket:
     queue, ``slots`` batch slots and the jitted masked-iteration step."""
 
     def __init__(self, u: Field, kappa: float, config: TargetConfig,
-                 slots: int, tol: float, max_iter: int):
+                 slots: int, tol: float, max_iter: int,
+                 refine_every: int = 0):
         from repro.apps.milc.cg import make_wilson_op
         from repro.train.serve_step import build_cg_serve_step
 
         self.u, self.kappa, self.config = u, float(kappa), config
         self.tol, self.max_iter, self.slots = tol, max_iter, slots
+        self.refine_every = int(refine_every)
+        # refinement recomputes residuals against the high-precision (policy
+        # free) operator, so admission must use the same reference operator
         _, self.apply_mdag, _ = make_wilson_op(u, self.kappa, config)
         self.step = build_cg_serve_step(u, self.kappa, config, tol=tol,
-                                        max_iter=max_iter)
+                                        max_iter=max_iter,
+                                        refine_every=self.refine_every)
         self.queue: deque = deque()
         self.slot_rid: list = [None] * slots
         self.state = None  # lazily shaped from the first admitted source
+        self.rhs = None    # per-slot rhs stack (kept for refinement restarts)
         self.iterations_run = 0
         # telemetry: per-shape-bucket metric names + in-flight request spans
         self.label = "x".join(map(str, u.lattice))
@@ -81,6 +87,7 @@ class _Bucket:
         v = jnp.zeros((self.slots,), proto.dtype)
         self.state = BatchedCGState(x=z, r=z, p=z, rr=v, b2=v,
                                     it=jnp.zeros((self.slots,), jnp.int32))
+        self.rhs = z
 
     def _admit(self, slot: int, req: SolveRequest):
         """Pack a request into a free slot: rhs and |rhs|^2 come through the
@@ -103,6 +110,7 @@ class _Bucket:
             b2=st.b2.at[slot].set(b2),
             it=st.it.at[slot].set(0),
         )
+        self.rhs = self.rhs.with_element(slot, rhs)
         self.slot_rid[slot] = req.rid
         telemetry.inc("serve.admitted")
         # admission->harvest latency span, closed by _harvest; admit_tick
@@ -152,7 +160,10 @@ class _Bucket:
             return {}
         with telemetry.span("serve/tick", bucket=self.label,
                             tick=self.iterations_run + 1, occupied=occupied):
-            self.state = self.step(self.state)
+            if self.refine_every > 0:
+                self.state = self.step(self.state, self.rhs)
+            else:
+                self.state = self.step(self.state)
         self.iterations_run += 1
         telemetry.inc("serve.ticks")
         telemetry.inc(f"serve.ticks.{self.label}")
@@ -177,9 +188,11 @@ class SolveServer:
     ``slots`` heterogeneous requests into one batched launch chain."""
 
     def __init__(self, config: TargetConfig, *, slots: int = 4,
-                 tol: float = 1e-8, max_iter: int = 500):
+                 tol: float = 1e-8, max_iter: int = 500,
+                 refine_every: int = 0):
         self.config = config
         self.slots, self.tol, self.max_iter = slots, tol, max_iter
+        self.refine_every = int(refine_every)
         self.buckets: Dict[Tuple[int, ...], _Bucket] = {}
 
     def register(self, u: Field, kappa: float,
@@ -188,7 +201,7 @@ class SolveServer:
         requests (one operator per shape bucket)."""
         self.buckets[u.lattice] = _Bucket(
             u, kappa, self.config, slots or self.slots, self.tol,
-            self.max_iter)
+            self.max_iter, self.refine_every)
 
     def submit(self, req: SolveRequest) -> None:
         if req.b.lattice not in self.buckets:
@@ -239,7 +252,8 @@ def _main_solve(args):
         target=TargetConfig(args.engine, vvl=128,
                             plan_policy=args.plan_policy))
     server = SolveServer(cfg.target, slots=args.slots, tol=cfg.tol,
-                         max_iter=cfg.max_iter)
+                         max_iter=cfg.max_iter,
+                         refine_every=args.refine_every)
     shapes = [(4, 4, 4, 8), (4, 4, 8, 8)]
     for i, lat in enumerate(shapes):
         u = Field.from_numpy(
@@ -274,6 +288,11 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--refine-every", type=int, default=0,
+                    help="reliable-update period for mixed-precision "
+                         "serving: every N active iterations a slot's "
+                         "residual is recomputed exactly (b - A x) and "
+                         "its search direction restarted; 0 disables")
     ap.add_argument("--plan-policy", default="default",
                     choices=["default", "tuned"],
                     help="lowering-plan policy for serving launches: "

@@ -41,13 +41,25 @@ def build_prefill(cfg: ArchConfig):
 
 
 def build_cg_serve_step(u, kappa: float, config, *, tol: float,
-                        max_iter: int):
+                        max_iter: int, refine_every: int = 0,
+                        config_hi=None):
     """Jitted masked-iteration step for batched CG serving: (BatchedCGState)
     -> BatchedCGState, one fused operator launch + one fused masked-update
     launch for the whole slot batch.  Converged/empty slots ride along
     bitwise frozen, so the scheduler can drain and refill them between
-    calls without perturbing in-flight solves (apps.milc.cg semantics)."""
-    from repro.apps.milc.cg import batched_cg_iteration, wilson_normal_graph
+    calls without perturbing in-flight solves (apps.milc.cg semantics).
+
+    ``refine_every > 0`` switches the returned step to the reliable-update
+    signature ``step(state, rhs)``: every that many active iterations a
+    slot's residual is recomputed exactly as ``b - A x`` through the
+    ``config_hi`` operator (default: ``config`` stripped of any dtype
+    policy) and its search direction restarted — the serving analogue of
+    :func:`repro.apps.milc.cg.cg_batched`'s mixed-precision restarts."""
+    import dataclasses
+
+    from repro.apps.milc.cg import (
+        batched_cg_iteration, batched_cg_refresh, wilson_normal_graph,
+    )
 
     # the serving unit is a bound launch: graph + config + outputs fixed
     # at build time, only the solve vector (and its layout) vary per call
@@ -58,11 +70,37 @@ def build_cg_serve_step(u, kappa: float, config, *, tol: float,
         out = bound({"p": p, "u": u}, out_layouts={"ap": p.layout})
         return p.with_data(out["ap"].data), out["pap"].sum(axis=-1)
 
-    def step(state):
-        return batched_cg_iteration(state, apply_a_dot, config=config,
-                                    tol=tol, max_iter=max_iter)
+    if refine_every <= 0:
+        def step(state):
+            return batched_cg_iteration(state, apply_a_dot, config=config,
+                                        tol=tol, max_iter=max_iter)
 
-    return jax.jit(step)
+        return jax.jit(step)
+
+    hi_cfg = config_hi or (
+        dataclasses.replace(config, dtypes=None)
+        if getattr(config, "dtypes", None) else config)
+    bound_hi = wilson_normal_graph(float(kappa)).bind(
+        config=hi_cfg, outputs=("ap", "pap"))
+
+    def apply_a_dot_hi(p):
+        out = bound_hi({"p": p, "u": u}, out_layouts={"ap": p.layout})
+        return p.with_data(out["ap"].data), out["pap"].sum(axis=-1)
+
+    def step_refined(state, rhs):
+        state = batched_cg_iteration(state, apply_a_dot, config=config,
+                                     tol=tol, max_iter=max_iter)
+        return jax.lax.cond(
+            jnp.any(jnp.logical_and(
+                state.rr / state.b2 > tol,
+                jnp.logical_and(state.it < max_iter,
+                                state.it % refine_every == 0))),
+            lambda s: batched_cg_refresh(
+                s, rhs, apply_a_dot_hi, tol=tol, max_iter=max_iter,
+                refine_every=refine_every),
+            lambda s: s, state)
+
+    return jax.jit(step_refined)
 
 
 def generate(params, cfg: ArchConfig, prompt_tokens, *, steps: int,

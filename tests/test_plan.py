@@ -182,9 +182,12 @@ def test_unknown_plan_policy_raises(rng):
 
 @pytest.mark.parametrize("lay", [SOA, AOS, aosoa(32)], ids=lambda l: l.name)
 def test_all_candidate_plans_match_default_lb_step(lay, rng):
-    """Every candidate plan of the fused LB step (stencil graph) produces
-    the exact same field outputs as the default plan — plan choice is a
-    performance knob, never a semantics knob."""
+    """Every *geometry* candidate plan of the fused LB step (stencil
+    graph) produces the exact same field outputs as the default plan —
+    plan choice is a performance knob, never a semantics knob.  The one
+    exception is the dtype-policy twin family (LoweringPlan.dtypes),
+    which is tolerance-equal by contract: the tuner's per-policy
+    accuracy gate is its documented bound."""
     from repro.kernels.lb_propagation.ops import collide_propagate_graph
     from repro.core import tune
 
@@ -203,7 +206,14 @@ def test_all_candidate_plans_match_default_lb_step(lay, rng):
     for cand in cands[1:]:
         got = g.launch(ins, config=cfg, outputs=("dist2",),
                        plan=cand)["dist2"].to_numpy()
-        np.testing.assert_array_equal(got, base, err_msg=cand.describe())
+        if cand.dtypes:
+            err = (np.linalg.norm(got.astype(np.float64) - base)
+                   / np.linalg.norm(base))
+            assert err <= tune._accuracy_gate_for(cand.dtypes), \
+                cand.describe()
+        else:
+            np.testing.assert_array_equal(got, base,
+                                          err_msg=cand.describe())
 
 
 def test_all_candidate_plans_match_default_wilson_normal(rng):
@@ -227,10 +237,18 @@ def test_all_candidate_plans_match_default_wilson_normal(rng):
     base_pap = float(np.asarray(out0["pap"]).sum())
     for cand in cands[1:]:
         out = g.launch(ins, config=tgt, outputs=("ap", "pap"), plan=cand)
-        np.testing.assert_array_equal(out["ap"].to_numpy(), base_ap,
-                                      err_msg=cand.describe())
+        got_ap = out["ap"].to_numpy()
+        if cand.dtypes:  # dtype twins: tolerance-equal per the tuner gate
+            err = (np.linalg.norm(got_ap.astype(np.float64) - base_ap)
+                   / np.linalg.norm(base_ap))
+            assert err <= tune._accuracy_gate_for(cand.dtypes), \
+                cand.describe()
+        else:
+            np.testing.assert_array_equal(got_ap, base_ap,
+                                          err_msg=cand.describe())
         np.testing.assert_allclose(float(np.asarray(out["pap"]).sum()),
-                                   base_pap, rtol=1e-4)
+                                   base_pap, rtol=1e-2 if cand.dtypes
+                                   else 1e-4)
 
 
 # -- layering: the planning layer owns the heuristics (satellite cleanup) ------

@@ -119,7 +119,10 @@ def test_explicit_plan_policy_on_config(rng):
 
 def test_scalars_and_stencil_graph_tuning(tune_env, rng):
     """Tuning covers stencil graphs (bx sweep) and graphs with runtime
-    scalars; the tuned launch matches the default-plan launch."""
+    scalars; the tuned launch matches the default-plan launch under its
+    plan's contract — bitwise for geometry-only plans, the accuracy-gated
+    tolerance when the winner carries a dtype policy (the one candidate
+    family whose field outputs are tolerance- rather than bitwise-equal)."""
     from repro.kernels.lb_propagation.ops import collide_propagate_graph
 
     f0 = (1.0 + 0.1 * rng.normal(size=(19, *LAT))).astype(np.float32)
@@ -136,7 +139,13 @@ def test_scalars_and_stencil_graph_tuning(tune_env, rng):
     want = graph.launch(ins, config=cfg, outputs=("dist2",))["dist2"]
     got = graph.launch(ins, config=cfg, outputs=("dist2",),
                        plan=plan)["dist2"]
-    np.testing.assert_array_equal(got.to_numpy(), want.to_numpy())
+    if plan.dtypes:
+        err = (np.linalg.norm(got.to_numpy().astype(np.float64)
+                              - want.to_numpy())
+               / np.linalg.norm(want.to_numpy()))
+        assert err <= tune._accuracy_gate_for(plan.dtypes)
+    else:
+        np.testing.assert_array_equal(got.to_numpy(), want.to_numpy())
 
 
 def test_pre_halo_tuned_keys_agree(tune_env, rng):
@@ -246,6 +255,32 @@ def test_schema_version_2_table_is_a_clean_miss(tune_env, rng):
     raw = json.loads(tune_env.read_text())
     assert raw["schema_version"] == tune.SCHEMA_VERSION
     assert "rsplit" in raw["entries"][info["key"]]["plan"]
+
+
+def test_schema_version_3_table_is_a_clean_miss(tune_env, rng):
+    """A version-3 table (pre-dtype-policy: its plans predate the
+    storage/compute/accumulate ``dtypes`` axis and the tuner's accuracy
+    gate) loads as a clean miss: lookups return None, and a re-tune sweeps
+    and re-stamps the file at the current version with plans that name
+    ``dtypes``."""
+    fx = _field(rng)
+    cfg = TargetConfig("pallas", vvl=64)
+    g = _graph()
+    key = g.plan_key({"x": fx}, config=cfg)
+    v3_plan = {k: v for k, v in LoweringPlan("pallas", vvl=64).to_json().items()
+               if k != "dtypes"}
+    tune_env.write_text(json.dumps(
+        {"schema_version": 3, "entries": {key: {"plan": v3_plan}}}))
+    tune.clear_table_cache()
+    assert tune.load_table() == {}
+    assert tune.lookup(key) is None
+    tune.reset_stats()
+    plan, info = tune.autotune_graph(g, {"x": fx}, config=cfg, iters=1,
+                                     warmup=0, max_candidates=2)
+    assert not info["cached"] and tune.stats()["sweep_launches"] > 0
+    raw = json.loads(tune_env.read_text())
+    assert raw["schema_version"] == tune.SCHEMA_VERSION
+    assert "dtypes" in raw["entries"][info["key"]]["plan"]
 
 
 def test_malformed_entry_is_a_miss_not_a_crash(tune_env, rng):
